@@ -1,0 +1,78 @@
+"""Roofline table: reads the dry-run artifacts (experiments/dryrun/*.json)
+and emits the per-(arch x shape x mesh) three-term roofline rows.  Also the
+generator for EXPERIMENTS.md §Roofline (``python -m benchmarks.roofline``)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(pattern: str = "*.json") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(quick: bool = True):
+    rows = []
+    for rec in load_records():
+        name = f"roofline/{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        if rec.get("mode") == "fedpart":
+            name += f"__fedpart[{rec.get('fedpart_group')}]"
+        if rec.get("status") != "ok":
+            rows.append({"name": name, "us_per_call": 0.0,
+                         "derived": f"skipped:{rec.get('reason', '?')}"})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "name": name,
+            "us_per_call": r["compute_s"] * 1e6,
+            "derived": (
+                f"dominant={r['dominant']} "
+                f"compute={r['compute_s']*1e3:.2f}ms "
+                f"mem={r['memory_s_min']*1e3:.2f}-{r['memory_s_hlo']*1e3:.0f}ms "
+                f"coll={r['collective_s']*1e3:.2f}ms "
+                f"hbm={rec['hbm_gb_per_device']:.2f}GB/dev "
+                f"useful={rec['model_flops_total_ratio']:.2f}"
+            ),
+        })
+    if not rows:
+        rows.append({"name": "roofline/none", "us_per_call": 0.0,
+                     "derived": "no dry-run artifacts; run python -m repro.launch.dryrun --all"})
+    return rows
+
+
+def markdown_table(records: list[dict]) -> str:
+    """EXPERIMENTS.md §Roofline table."""
+    lines = [
+        "| arch | shape | mesh | mode | GB/dev | fits 16GB | compute (ms) | "
+        "mem lo-hi (ms) | coll (ms) | dominant | useful-FLOPs |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in records:
+        if rec.get("status") == "skipped":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                f"{rec.get('mode','-')} | — | — | — | — | — | skipped | — |"
+            )
+            continue
+        r = rec["roofline"]
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | {rec['mode']} "
+            f"| {rec['hbm_gb_per_device']:.2f} | {'Y' if rec['fits_v5e_16gb'] else 'N'} "
+            f"| {r['compute_s']*1e3:.2f} "
+            f"| {r['memory_s_min']*1e3:.2f}–{r['memory_s_hlo']*1e3:.0f} "
+            f"| {r['collective_s']*1e3:.2f} | {r['dominant']} "
+            f"| {rec['model_flops_total_ratio']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_records()))

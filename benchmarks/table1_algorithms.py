@@ -1,0 +1,24 @@
+"""Paper Table 1: FedAvg / FedProx / MOON x {FNU, FedPart} on synthetic
+vision (reduced scale; directional claims)."""
+
+from repro.fl import AlgoConfig, FLRunConfig
+
+from benchmarks.common import compare_fnu_fedpart, fedpart_schedule, vision_setup
+
+
+def run(quick: bool = True):
+    adapter, clients, eval_set = vision_setup(
+        samples=600 if quick else 2000, clients=3 if quick else 8
+    )
+    schedule = fedpart_schedule(num_groups=10, quick=quick,
+                                cycles=1 if quick else 2)
+    rows = []
+    algos = ["fedavg"] if quick else ["fedavg", "fedprox", "moon"]
+    for algo in algos:
+        # local_epochs=2 quick / 8 full: the paper's mechanism (layer
+        # mismatch) needs heavy local training; see claims_experiment.py.
+        cfg = FLRunConfig(local_epochs=2 if quick else 8, batch_size=32,
+                          lr=1e-3, algo=AlgoConfig(name=algo))
+        rows += compare_fnu_fedpart(f"table1/{algo}", adapter, clients,
+                                    eval_set, schedule, cfg)
+    return rows

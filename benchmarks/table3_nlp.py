@@ -1,0 +1,16 @@
+"""Paper Table 3: language modality — FedPart on the transformer classifier
+(AGNews-style synthetic task)."""
+
+from repro.fl import FLRunConfig
+
+from benchmarks.common import compare_fnu_fedpart, fedpart_schedule, text_setup
+
+
+def run(quick: bool = True):
+    adapter, clients, eval_set = text_setup(samples=800 if quick else 2400,
+                                            clients=3 if quick else 8)
+    schedule = fedpart_schedule(num_groups=4, quick=quick, rl=2,
+                                cycles=1 if quick else 3)
+    cfg = FLRunConfig(local_epochs=2, batch_size=32, lr=1e-3)
+    return compare_fnu_fedpart("table3/nlp", adapter, clients, eval_set,
+                               schedule, cfg)

@@ -1,0 +1,20 @@
+"""Paper Table 4 / Appendix F.3: data heterogeneity (Dirichlet alpha=1 and
+extreme alpha=0.1)."""
+
+from repro.fl import FLRunConfig
+
+from benchmarks.common import compare_fnu_fedpart, fedpart_schedule, vision_setup
+
+
+def run(quick: bool = True):
+    rows = []
+    alphas = [1.0] if quick else [1.0, 0.1]
+    for alpha in alphas:
+        adapter, clients, eval_set = vision_setup(
+            samples=600 if quick else 2000, clients=4, alpha=alpha,
+        )
+        schedule = fedpart_schedule(num_groups=10, quick=quick)
+        cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=1e-3)
+        rows += compare_fnu_fedpart(f"table4/alpha{alpha}", adapter, clients,
+                                    eval_set, schedule, cfg)
+    return rows

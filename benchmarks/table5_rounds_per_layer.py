@@ -1,0 +1,20 @@
+"""Paper Table 5: training rounds per layer (R/L) ablation — more cycles of
+shorter per-layer training beats fewer long cycles."""
+
+from repro.fl import FLRunConfig
+
+from benchmarks.common import fedpart_schedule, timed_run, vision_setup
+
+
+def run(quick: bool = True):
+    adapter, clients, eval_set = vision_setup(samples=500 if quick else 1500,
+                                              clients=3)
+    rows = []
+    rls = [1, 2] if quick else [1, 2, 4]
+    for rl in rls:
+        schedule = fedpart_schedule(num_groups=10, rl=rl, warmup=1)
+        cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=1e-3)
+        _, row = timed_run(f"table5/rl{rl}", adapter, clients, eval_set,
+                           schedule.rounds(), cfg)
+        rows.append(row)
+    return rows

@@ -1,0 +1,19 @@
+"""Paper Table 6: initial full-network warm-up ablation (0 / 2 / 5 rounds)."""
+
+from repro.fl import FLRunConfig
+
+from benchmarks.common import fedpart_schedule, timed_run, vision_setup
+
+
+def run(quick: bool = True):
+    adapter, clients, eval_set = vision_setup(samples=500 if quick else 1500,
+                                              clients=3)
+    rows = []
+    warmups = [0, 2] if quick else [0, 2, 5]
+    for w in warmups:
+        schedule = fedpart_schedule(num_groups=10, warmup=w)
+        cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=1e-3)
+        _, row = timed_run(f"table6/warmup{w}", adapter, clients, eval_set,
+                           schedule.rounds(), cfg)
+        rows.append(row)
+    return rows

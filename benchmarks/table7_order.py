@@ -1,0 +1,19 @@
+"""Paper Table 7: trainable-layer selection order — sequential vs reverse vs
+random (paper finds seq > rev ~ rand)."""
+
+from repro.fl import FLRunConfig
+
+from benchmarks.common import fedpart_schedule, timed_run, vision_setup
+
+
+def run(quick: bool = True):
+    adapter, clients, eval_set = vision_setup(samples=500 if quick else 1500,
+                                              clients=3)
+    rows = []
+    for order in ("sequential", "reverse", "random"):
+        schedule = fedpart_schedule(num_groups=10, order=order, warmup=1)
+        cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=1e-3)
+        _, row = timed_run(f"table7/{order}", adapter, clients, eval_set,
+                           schedule.rounds(), cfg)
+        rows.append(row)
+    return rows

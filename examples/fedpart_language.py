@@ -1,0 +1,43 @@
+"""FedPart on the language modality (paper Table 3): federated text
+classification with the small transformer, FedPart vs FNU, plus the
+FedProx composition.
+
+    PYTHONPATH=src python examples/fedpart_language.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.schedule import FedPartSchedule, matched_fnu
+from repro.data import (TextDatasetSpec, balanced_eval_set, build_clients,
+                        dirichlet_partition, make_text_dataset)
+from repro.fl import AlgoConfig, FLRunConfig, nlp_task, run_federated
+
+
+def main():
+    spec = TextDatasetSpec(num_classes=4, vocab_size=512, seq_len=48)
+    X, y = make_text_dataset(spec, 1600, seed=0)
+    Xe, ye = make_text_dataset(spec, 800, seed=7)
+    eval_set = balanced_eval_set(Xe, ye, per_class=48)
+    # Mild heterogeneity (paper Table 4: Dirichlet alpha=1)
+    clients = build_clients(X, y, dirichlet_partition(y, 4, alpha=1.0, seed=0))
+    adapter = nlp_task(num_classes=4, smoke=True)
+
+    # 2 blocks + embed + head = 4 groups for the smoke transformer
+    schedule = FedPartSchedule(num_groups=4, warmup_rounds=2,
+                               rounds_per_layer=2, cycles=2, bridge_rounds=1)
+
+    for algo in ("fedavg", "fedprox"):
+        run_cfg = FLRunConfig(local_epochs=2, batch_size=32, lr=1e-3,
+                              algo=AlgoConfig(name=algo))
+        fp = run_federated(adapter, clients, eval_set, schedule.rounds(), run_cfg)
+        fnu = run_federated(adapter, clients, eval_set,
+                            matched_fnu(schedule).rounds(), run_cfg)
+        print(f"[{algo}] FedPart best={fp.best_acc:.4f} "
+              f"(comm {fp.comm_total_bytes/fp.comm_fnu_bytes:.1%} of FNU) | "
+              f"FNU best={fnu.best_acc:.4f}")
+
+
+if __name__ == "__main__":
+    main()

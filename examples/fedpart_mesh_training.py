@@ -1,0 +1,29 @@
+"""FedPart as a datacenter training feature: the round schedule driving the
+mesh-parallel partial train steps on an assigned architecture — gradients,
+optimizer state, and the per-round transmitted bytes all scoped to the
+scheduled layer group.
+
+    PYTHONPATH=src python examples/fedpart_mesh_training.py --arch gemma-2b
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.fedtrain import main as fedtrain_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--rounds", type=int, default=6)
+    args = ap.parse_args()
+    fedtrain_main([
+        "--arch", args.arch, "--rounds", str(args.rounds),
+        "--steps-per-round", "3", "--batch", "4", "--seq", "32",
+    ])
+
+
+if __name__ == "__main__":
+    main()

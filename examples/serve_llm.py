@@ -1,0 +1,34 @@
+"""Batched serving example: prefill + greedy decode on any assigned
+architecture (smoke scale on CPU).  Exercises the same prefill/serve steps
+the production dry-run lowers at 32k/500k.
+
+    PYTHONPATH=src python examples/serve_llm.py --arch tinyllama-1.1b
+    PYTHONPATH=src python examples/serve_llm.py --arch xlstm-125m      # SSM
+    PYTHONPATH=src python examples/serve_llm.py --arch deepseek-v3-671b # MLA+MoE
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.launch.serve import serve_session
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    out = serve_session(cfg, args.batch, args.prompt_len, args.gen)
+    print(f"[serve_llm] {args.arch}: generated token grid {out.shape}")
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.io import (  # noqa: F401
+    load_checkpoint,
+    load_pytree,
+    save_checkpoint,
+    save_pytree,
+)

@@ -1,0 +1,58 @@
+"""Checkpointing: pytree <-> .npz with path-keyed flat layout, plus FL
+round-state (round index, schedule position, RNG seed) as JSON sidecar."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.partition import tree_paths
+
+PyTree = Any
+
+_SEP = "##"
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    flat = {_SEP.join(p): np.asarray(leaf) for p, leaf in tree_paths(tree)}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **flat)
+
+
+def load_pytree(path: str) -> PyTree:
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    tree: PyTree = {}
+    for key in data.files:
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = data[key]
+    return tree
+
+
+def save_round_state(path: str, state: dict) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(state, f, indent=2)
+
+
+def load_round_state(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def save_checkpoint(directory: str, params: PyTree, round_state: dict) -> None:
+    save_pytree(os.path.join(directory, "params.npz"), params)
+    save_round_state(os.path.join(directory, "state.json"), round_state)
+
+
+def load_checkpoint(directory: str) -> tuple[PyTree, dict]:
+    return (
+        load_pytree(os.path.join(directory, "params.npz")),
+        load_round_state(os.path.join(directory, "state.json")),
+    )

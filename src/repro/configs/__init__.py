@@ -1,0 +1,19 @@
+"""Architecture configs: 10 assigned archs + the paper's own models.
+
+``get_config(name, smoke=...)`` / ``available_archs()`` are the public API.
+"""
+
+from repro.configs.base import ModelConfig, available_archs, get_config  # noqa: F401
+
+ASSIGNED_ARCHS = (
+    "xlstm-125m",
+    "whisper-small",
+    "llava-next-34b",
+    "llama3.2-1b",
+    "deepseek-v3-671b",
+    "zamba2-7b",
+    "llama4-maverick-400b-a17b",
+    "glm4-9b",
+    "tinyllama-1.1b",
+    "gemma-2b",
+)

@@ -1,0 +1,18 @@
+"""Paper vision models: ResNet-8 and ResNet-18 (Appendix A).
+
+These are not ``ModelConfig`` transformers — they are registered here for
+``--arch`` completeness but the FL engine consumes the specs in
+``repro.models.resnet`` directly (RESNET8 / RESNET18).
+"""
+
+from repro.configs.base import ModelConfig, register
+
+
+def _cfg(name: str) -> ModelConfig:
+    # Placeholder transformer-shaped record; vision specifics live in
+    # repro.models.resnet.  family="dense" keeps registry invariants.
+    return ModelConfig(name=name, family="dense", kind="decoder", source="paper App. A")
+
+
+register("resnet8", lambda: _cfg("resnet8"), lambda: _cfg("resnet8"))
+register("resnet18", lambda: _cfg("resnet18"), lambda: _cfg("resnet18"))

@@ -1,0 +1,40 @@
+"""Core FedPart library: the paper's contribution as composable JAX pieces.
+
+- ``partition``   — ordered layer-group partitioning of parameter pytrees
+- ``masking``     — mask / pruned-subtree forms of the Eq. 1 update
+- ``schedule``    — trainable-layer selection schedules (§3.2)
+- ``aggregation`` — full / partial server averaging
+- ``costs``       — Eq. 5/6 communication & computation cost model
+- ``telemetry``   — step-size tracking (Fig. 1), Monte-Carlo k (App. G)
+"""
+
+from repro.core.partition import (  # noqa: F401
+    Partition,
+    build_partition,
+    default_group_key,
+    group_param_bytes,
+    group_param_counts,
+    total_param_bytes,
+    total_param_count,
+)
+from repro.core.masking import (  # noqa: F401
+    apply_mask,
+    complement,
+    mask_tree,
+    merge,
+    select,
+    tree_update,
+)
+from repro.core.schedule import (  # noqa: F401
+    FULL_NETWORK,
+    FedPartSchedule,
+    FNUSchedule,
+    RoundSpec,
+    matched_fnu,
+)
+from repro.core.aggregation import (  # noqa: F401
+    aggregate_full,
+    aggregate_partial,
+    tree_mean,
+)
+from repro.core import costs, telemetry  # noqa: F401

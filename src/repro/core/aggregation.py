@@ -1,0 +1,79 @@
+"""Server-side aggregation (full and partial).
+
+FNU rounds average every parameter; partial rounds average only the trainable
+group's (pruned) subtrees and splice them into the global model.  Per the
+paper (§4, following FedBN), client-local statistics (BatchNorm running
+moments) are *never* aggregated — they are filtered by path suffix.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masking
+from repro.core.partition import Partition
+
+PyTree = Any
+
+# Path components that denote client-local statistics (never aggregated).
+LOCAL_STAT_KEYS = ("mean_ema", "var_ema", "num_batches")
+
+
+def is_local_stat(path: str) -> bool:
+    return any(path.endswith(k) or f"/{k}" in path for k in LOCAL_STAT_KEYS)
+
+
+def tree_mean(trees: Sequence[PyTree], weights: Sequence[float] | None = None) -> PyTree:
+    """Weighted elementwise mean of same-structure pytrees."""
+    if weights is None:
+        w = [1.0 / len(trees)] * len(trees)
+    else:
+        total = float(sum(weights))
+        w = [float(x) / total for x in weights]
+
+    def _avg(*leaves):
+        acc = jnp.zeros_like(leaves[0], dtype=jnp.float32)
+        for wi, leaf in zip(w, leaves):
+            acc = acc + wi * leaf.astype(jnp.float32)
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(_avg, *trees)
+
+
+def aggregate_full(
+    global_params: PyTree,
+    client_params: Sequence[PyTree],
+    weights: Sequence[float] | None = None,
+) -> PyTree:
+    """FNU aggregation: average everything except client-local statistics."""
+    averaged = tree_mean(client_params, weights)
+
+    # Splice averaged leaves into global, skipping local-stat paths.
+    def _choose(path, g_leaf, a_leaf):
+        p = "/".join(masking._entry_str(e) for e in path)
+        return g_leaf if is_local_stat(p) else a_leaf
+
+    return jax.tree_util.tree_map_with_path(_choose, global_params, averaged)
+
+
+def aggregate_partial(
+    global_params: PyTree,
+    client_subtrees: Sequence[PyTree],
+    weights: Sequence[float] | None = None,
+) -> PyTree:
+    """Partial aggregation: average the pruned trainable subtrees and splice.
+
+    ``client_subtrees`` are pruned pytrees (``masking.select`` output) holding
+    only the round's trainable group.  Only those bytes ever travel — this is
+    the paper's Eq. 5 comm saving.
+    """
+    averaged = tree_mean(client_subtrees, weights)
+    return masking.tree_update(global_params, averaged)
+
+
+def broadcast(global_params: PyTree, num_clients: int) -> list[PyTree]:
+    """Server -> clients: each client receives a copy of the global model."""
+    return [jax.tree.map(lambda x: x, global_params) for _ in range(num_clients)]

@@ -1,0 +1,132 @@
+"""Communication / computation cost model (paper §3.4, Eq. 5–6).
+
+Communication is exact: bytes of the parameters transmitted per round
+(upstream, per client — matching the paper's "Comm." metric).
+
+Computation uses the standard fwd/bwd decomposition.  Two bookkeepings are
+provided:
+
+* ``paper_compute_ratio``     — the paper's Eq. 6 accounting: a partial round
+  training group *i* is charged full forward plus ``i/M`` of a full backward.
+  With bwd ≈ 2×fwd this telescopes to the paper's ≈2/3.
+* ``truncated_compute_ratio`` — the sharper model: backprop to group *i* needs
+  the activation-gradient chain from the output down to *i* (suffix) plus the
+  weight gradient of *i* only; frozen layers never materialise weight grads.
+  This gives ≈1/2 for uniform layers.  (DESIGN.md §6 documents why the paper's
+  own wording — "no grads for layers preceding the trainable ones" — matches
+  neither derivation; we implement both and flag the gap.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.partition import Partition, group_param_bytes, total_param_bytes
+from repro.core.schedule import FULL_NETWORK, RoundSpec
+
+
+# ---------------------------------------------------------------------------
+# Communication
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CommReport:
+    per_round_bytes: np.ndarray     # upstream bytes per client per round
+    total_bytes: int
+    fnu_total_bytes: int
+
+    @property
+    def ratio_to_fnu(self) -> float:
+        return self.total_bytes / max(self.fnu_total_bytes, 1)
+
+
+def comm_cost(
+    params,
+    partition: Partition,
+    rounds: Sequence[RoundSpec],
+) -> CommReport:
+    group_bytes = group_param_bytes(params, partition)
+    full = int(group_bytes.sum())
+    per_round = np.array(
+        [full if r.is_full else int(group_bytes[r.group]) for r in rounds],
+        dtype=np.int64,
+    )
+    return CommReport(
+        per_round_bytes=per_round,
+        total_bytes=int(per_round.sum()),
+        fnu_total_bytes=full * len(rounds),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Computation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CompReport:
+    per_round_flops: np.ndarray     # per client per local step, forward+backward
+    total_flops: int
+    fnu_total_flops: int
+
+    @property
+    def ratio_to_fnu(self) -> float:
+        return self.total_flops / max(self.fnu_total_flops, 1)
+
+
+def _norm_group_fwd(partition: Partition, group_fwd_flops: Sequence[float] | None):
+    if group_fwd_flops is None:
+        return np.ones(partition.num_groups, dtype=np.float64)
+    arr = np.asarray(group_fwd_flops, dtype=np.float64)
+    assert arr.shape == (partition.num_groups,)
+    return arr
+
+
+def comp_cost(
+    partition: Partition,
+    rounds: Sequence[RoundSpec],
+    group_fwd_flops: Sequence[float] | None = None,
+    bwd_fwd_ratio: float = 2.0,
+    bookkeeping: str = "truncated",
+) -> CompReport:
+    """FLOPs per round under the chosen bookkeeping ("paper" or "truncated")."""
+    fwd = _norm_group_fwd(partition, group_fwd_flops)
+    m = partition.num_groups
+    full_fwd = float(fwd.sum())
+    full_bwd = bwd_fwd_ratio * full_fwd
+    full_round = full_fwd + full_bwd
+
+    def partial_round(g: int) -> float:
+        if bookkeeping == "paper":
+            # Eq. 6: forward everywhere + (position/M) of a full backward.
+            frac = (g + 1) / m
+            return full_fwd + frac * full_bwd
+        if bookkeeping == "truncated":
+            # Activation-grad chain over the suffix (groups >= g), each costing
+            # ~= its forward, plus the weight grad of group g (~= its forward).
+            act_chain = float(fwd[g:].sum())
+            weight_grad = float(fwd[g])
+            return full_fwd + act_chain + weight_grad
+        raise ValueError(f"unknown bookkeeping {bookkeeping!r}")
+
+    per_round = np.array(
+        [full_round if r.is_full else partial_round(r.group) for r in rounds],
+        dtype=np.float64,
+    )
+    return CompReport(
+        per_round_flops=per_round,
+        total_flops=int(per_round.sum()),
+        fnu_total_flops=int(full_round * len(rounds)),
+    )
+
+
+def paper_asymptotic_comp_ratio(bwd_fwd_ratio: float = 2.0) -> float:
+    """Eq. 6's closed form: (M·D_f + (M+1)/2·D_b) / (M·(D_f+D_b)) -> 2/3."""
+    return (1.0 + bwd_fwd_ratio / 2.0) / (1.0 + bwd_fwd_ratio)
+
+
+def comm_asymptotic_ratio(num_groups: int) -> float:
+    """Eq. 5: partial rounds move 1/M of the FNU bytes (uniform groups)."""
+    return 1.0 / num_groups

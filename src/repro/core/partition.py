@@ -1,0 +1,172 @@
+"""Layer-group partitioning of parameter pytrees.
+
+The paper (Appendix A) numbers the trainable parameters of a model into M
+ordered *layer groups* (#1 .. #M), shallow to deep; each conv/block weight
+travels together with its accompanying norm parameters.  FedPart trains and
+transmits exactly one group per communication round.
+
+This module maps an arbitrary parameter pytree (nested dicts of arrays) onto
+such an ordered partition.  Groups are identified by *group keys* derived from
+parameter paths; an ordering function sorts the keys shallow -> deep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+import jax
+import numpy as np
+
+Path = tuple[str, ...]
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Path helpers
+# ---------------------------------------------------------------------------
+
+def _key_entry_to_str(entry: Any) -> str:
+    """Normalise a jax KeyEntry to a plain string."""
+    if isinstance(entry, jax.tree_util.DictKey):
+        return str(entry.key)
+    if isinstance(entry, jax.tree_util.SequenceKey):
+        return str(entry.idx)
+    if isinstance(entry, jax.tree_util.GetAttrKey):
+        return str(entry.name)
+    return str(entry)
+
+
+def tree_paths(tree: PyTree) -> list[tuple[Path, Any]]:
+    """Flatten ``tree`` into ``[(path, leaf), ...]`` with string path parts."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(tuple(_key_entry_to_str(k) for k in path), leaf) for path, leaf in flat]
+
+
+def path_str(path: Path) -> str:
+    return "/".join(path)
+
+
+# ---------------------------------------------------------------------------
+# Group keys
+# ---------------------------------------------------------------------------
+
+_SHALLOW_FIRST = ("embed", "embedding", "tok_embed", "patch_embed", "stem", "conv_in")
+_DEEP_LAST = ("head", "lm_head", "classifier", "final_norm", "norm_f", "fc_out")
+
+_BLOCK_RE = re.compile(r"^(blocks?|layers?|stages?|enc_blocks?|dec_blocks?)$")
+
+
+def default_group_key(path: Path) -> tuple:
+    """Default grouping: one group per block index, plus embed / head groups.
+
+    Paths like ``("blocks", "3", "attn", "wq")`` map to ``("block", "blocks", 3)``
+    so every parameter of block 3 (including its norms) shares a group —
+    mirroring the paper's Appendix-A partitioning where conv weights and their
+    BN params form one numbered layer.
+    """
+    head = path[0]
+    if head in _SHALLOW_FIRST:
+        return ("embed",)
+    if head in _DEEP_LAST:
+        return ("head",)
+    if _BLOCK_RE.match(head) and len(path) > 1 and path[1].isdigit():
+        return ("block", head, int(path[1]))
+    # Anything else (stand-alone norms, scalars) is its own shallow group keyed
+    # by its first path component.
+    return ("misc", head)
+
+
+def default_order_key(group_key: tuple) -> tuple:
+    kind = group_key[0]
+    if kind == "embed":
+        return (0,)
+    if kind == "misc":
+        return (1, group_key[1])
+    if kind == "block":
+        # enc blocks before dec blocks, then by index
+        return (2, group_key[1], group_key[2])
+    if kind == "head":
+        return (3,)
+    return (9, str(group_key))
+
+
+# ---------------------------------------------------------------------------
+# Partition
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """An ordered partition of parameter paths into layer groups."""
+
+    group_keys: tuple[tuple, ...]                 # ordered, shallow -> deep
+    assignment: Mapping[str, int]                 # path_str -> group index
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.group_keys)
+
+    def group_of(self, path: Path | str) -> int:
+        key = path if isinstance(path, str) else path_str(path)
+        return self.assignment[key]
+
+    def paths_in(self, group: int) -> list[str]:
+        return [p for p, g in self.assignment.items() if g == group]
+
+    def describe(self) -> str:
+        lines = []
+        for i, key in enumerate(self.group_keys):
+            n = sum(1 for g in self.assignment.values() if g == i)
+            lines.append(f"#{i + 1}: {key} ({n} tensors)")
+        return "\n".join(lines)
+
+
+def build_partition(
+    params: PyTree,
+    group_key_fn: Callable[[Path], tuple] = default_group_key,
+    order_key_fn: Callable[[tuple], tuple] = default_order_key,
+) -> Partition:
+    """Build an ordered layer-group partition for ``params``."""
+    keys_by_path: dict[str, tuple] = {}
+    for path, _ in tree_paths(params):
+        keys_by_path[path_str(path)] = group_key_fn(path)
+    ordered = sorted(set(keys_by_path.values()), key=order_key_fn)
+    index = {k: i for i, k in enumerate(ordered)}
+    assignment = {p: index[k] for p, k in keys_by_path.items()}
+    return Partition(group_keys=tuple(ordered), assignment=assignment)
+
+
+# ---------------------------------------------------------------------------
+# Sizes / byte accounting (used by core.costs)
+# ---------------------------------------------------------------------------
+
+def leaf_count(leaf: Any) -> int:
+    return int(np.prod(np.shape(leaf))) if np.ndim(leaf) else 1
+
+
+def leaf_bytes(leaf: Any) -> int:
+    dtype = getattr(leaf, "dtype", np.dtype("float32"))
+    return leaf_count(leaf) * np.dtype(dtype).itemsize
+
+
+def group_param_counts(params: PyTree, partition: Partition) -> np.ndarray:
+    counts = np.zeros(partition.num_groups, dtype=np.int64)
+    for path, leaf in tree_paths(params):
+        counts[partition.group_of(path)] += leaf_count(leaf)
+    return counts
+
+
+def group_param_bytes(params: PyTree, partition: Partition) -> np.ndarray:
+    out = np.zeros(partition.num_groups, dtype=np.int64)
+    for path, leaf in tree_paths(params):
+        out[partition.group_of(path)] += leaf_bytes(leaf)
+    return out
+
+
+def total_param_count(params: PyTree) -> int:
+    return int(sum(leaf_count(l) for _, l in tree_paths(params)))
+
+
+def total_param_bytes(params: PyTree) -> int:
+    return int(sum(leaf_bytes(l) for _, l in tree_paths(params)))

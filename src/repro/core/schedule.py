@@ -1,0 +1,112 @@
+"""Trainable-layer selection schedules (paper §3.2, Fig. 3).
+
+The FedPart training run is a sequence of communication rounds; each round is
+either a full-network-update (FNU) round or a partial round training exactly
+one layer group.  The canonical schedule is::
+
+    [warm-up FNU x W] then C cycles of:
+        for group in order(1..M): [partial(group) x R/L]
+        [bridge FNU x B]            # paper inserts 5 between cycles
+
+Orders: ``sequential`` (shallow->deep, the default), ``reverse``, ``random``
+(reshuffled every cycle) — Table 7's three variants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Literal, Sequence
+
+import numpy as np
+
+Phase = Literal["warmup", "partial", "bridge"]
+Order = Literal["sequential", "reverse", "random"]
+
+FULL_NETWORK = -1  # sentinel group id meaning "all groups trainable"
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundSpec:
+    """What round ``index`` trains: one group, or the full network."""
+
+    index: int
+    phase: Phase
+    cycle: int            # -1 during warm-up
+    group: int            # FULL_NETWORK for FNU rounds
+
+    @property
+    def is_full(self) -> bool:
+        return self.group == FULL_NETWORK
+
+
+@dataclasses.dataclass(frozen=True)
+class FedPartSchedule:
+    """Round-by-round plan for a FedPart run."""
+
+    num_groups: int
+    warmup_rounds: int = 5
+    rounds_per_layer: int = 2          # "R/L" in the paper (2 R/L default)
+    cycles: int = 1                    # "C" in the paper's tables
+    bridge_rounds: int = 5             # FNU rounds inserted between cycles
+    order: Order = "sequential"
+    seed: int = 0
+
+    def rounds(self) -> list[RoundSpec]:
+        rng = np.random.default_rng(self.seed)
+        specs: list[RoundSpec] = []
+        idx = 0
+        for _ in range(self.warmup_rounds):
+            specs.append(RoundSpec(idx, "warmup", -1, FULL_NETWORK))
+            idx += 1
+        for c in range(self.cycles):
+            groups = self._cycle_order(c, rng)
+            for g in groups:
+                for _ in range(self.rounds_per_layer):
+                    specs.append(RoundSpec(idx, "partial", c, int(g)))
+                    idx += 1
+            if c != self.cycles - 1:
+                for _ in range(self.bridge_rounds):
+                    specs.append(RoundSpec(idx, "bridge", c, FULL_NETWORK))
+                    idx += 1
+        return specs
+
+    def _cycle_order(self, cycle: int, rng: np.random.Generator) -> Sequence[int]:
+        base = np.arange(self.num_groups)
+        if self.order == "sequential":
+            return base
+        if self.order == "reverse":
+            return base[::-1]
+        if self.order == "random":
+            return rng.permutation(base)
+        raise ValueError(f"unknown order {self.order!r}")
+
+    def __iter__(self) -> Iterator[RoundSpec]:
+        return iter(self.rounds())
+
+    @property
+    def total_rounds(self) -> int:
+        per_cycle = self.num_groups * self.rounds_per_layer
+        bridges = self.bridge_rounds * max(self.cycles - 1, 0)
+        return self.warmup_rounds + self.cycles * per_cycle + bridges
+
+
+@dataclasses.dataclass(frozen=True)
+class FNUSchedule:
+    """Baseline: every round trains the full network (FedAvg et al.)."""
+
+    total: int
+
+    def rounds(self) -> list[RoundSpec]:
+        return [RoundSpec(i, "warmup", -1, FULL_NETWORK) for i in range(self.total)]
+
+    def __iter__(self) -> Iterator[RoundSpec]:
+        return iter(self.rounds())
+
+    @property
+    def total_rounds(self) -> int:
+        return self.total
+
+
+def matched_fnu(schedule: FedPartSchedule) -> FNUSchedule:
+    """FNU baseline with the same number of communication rounds."""
+    return FNUSchedule(total=schedule.total_rounds)

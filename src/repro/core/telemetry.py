@@ -1,0 +1,132 @@
+"""Training telemetry: update-step-size tracking (Fig. 1) and the
+Monte-Carlo estimate of the mask-uniformity constant k (Appendix G).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masking
+from repro.core.partition import Partition
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Update step sizes (Fig. 1)
+# ---------------------------------------------------------------------------
+
+def update_step_size(prev: PyTree, new: PyTree) -> float:
+    """Global L2 norm of the parameter update ‖w_{t+1} − w_t‖."""
+    sq = jax.tree.reduce(
+        lambda acc, x: acc + x,
+        jax.tree.map(
+            lambda a, b: jnp.sum((b.astype(jnp.float32) - a.astype(jnp.float32)) ** 2),
+            prev,
+            new,
+        ),
+        jnp.float32(0.0),
+    )
+    return float(jnp.sqrt(sq))
+
+
+@dataclasses.dataclass
+class StepSizeTracker:
+    """Records ‖Δw‖ per local iteration plus round-boundary markers.
+
+    Reproduces Fig. 1: under FNU the step size spikes right after each server
+    averaging (layer mismatch); under FedPart the spikes shrink.
+    """
+
+    sizes: list[float] = dataclasses.field(default_factory=list)
+    boundaries: list[int] = dataclasses.field(default_factory=list)
+
+    def record(self, prev: PyTree, new: PyTree) -> None:
+        self.sizes.append(update_step_size(prev, new))
+
+    def mark_round_boundary(self) -> None:
+        self.boundaries.append(len(self.sizes))
+
+    def post_aggregation_spike(self, window: int = 3) -> float:
+        """Mean ratio of step size just after vs. just before each boundary.
+
+        > 1 means averaging disturbed the model (layer mismatch); FedPart
+        should yield a ratio much closer to 1 than FNU.
+        """
+        ratios = []
+        for b in self.boundaries:
+            if b - window < 0 or b + window > len(self.sizes):
+                continue
+            before = np.mean(self.sizes[b - window : b])
+            after = np.mean(self.sizes[b : b + window])
+            if before > 0:
+                ratios.append(after / before)
+        return float(np.mean(ratios)) if ratios else float("nan")
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo estimate of k (Assumption 3 / Appendix G)
+# ---------------------------------------------------------------------------
+
+def estimate_k(
+    per_sample_grads: Sequence[PyTree],
+    partition: Partition,
+    params_template: PyTree,
+    *,
+    masks: str = "random",
+    num_masks: int = 32,
+    seed: int = 0,
+) -> float:
+    """k = max_S E‖S⊙(g−ḡ)‖ / min_S E‖S⊙(g−ḡ)‖ (Assumption 3, Appendix G).
+
+    ``masks="random"``: the paper's Monte-Carlo setting — random masks of
+    density 1/M over the flat parameter vector (paper reports k ≈ 1.1–1.2).
+    ``masks="groups"``: the *structured* layer-group masks FedPart actually
+    uses.  These concentrate variance very differently across layers, so k is
+    much larger — a genuine gap between Assumption 3's Monte-Carlo
+    justification and the deployed masks, recorded in EXPERIMENTS.md.
+    """
+    mean_grad = jax.tree.map(
+        lambda *leaves: sum(l.astype(jnp.float32) for l in leaves) / len(leaves),
+        *per_sample_grads,
+    )
+    centred = [
+        jax.tree.map(lambda a, b: a.astype(jnp.float32) - b, g, mean_grad)
+        for g in per_sample_grads
+    ]
+    m = partition.num_groups
+
+    if masks == "groups":
+        norms = np.zeros(m, dtype=np.float64)
+        for c in centred:
+            for gi in range(m):
+                sub = masking.select(c, partition, gi)
+                sq = jax.tree.reduce(
+                    lambda acc, x: acc + x,
+                    jax.tree.map(lambda x: jnp.sum(x**2), sub),
+                    jnp.float32(0.0),
+                )
+                norms[gi] += float(jnp.sqrt(sq))
+        norms /= len(centred)
+        norms = norms[norms > 0]
+        return float(norms.max() / norms.min()) if norms.size else float("nan")
+
+    # random masks of density 1/M over the flattened gradient
+    flats = [
+        np.concatenate([np.ravel(np.asarray(x)) for x in jax.tree.leaves(c)])
+        for c in centred
+    ]
+    dim = flats[0].shape[0]
+    rng = np.random.default_rng(seed)
+    norms = []
+    for _ in range(num_masks):
+        mask = rng.random(dim) < (1.0 / m)
+        norms.append(np.mean([np.linalg.norm(f[mask]) for f in flats]))
+    norms = np.asarray(norms)
+    norms = norms[norms > 0]
+    return float(norms.max() / norms.min()) if norms.size else float("nan")

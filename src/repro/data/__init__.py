@@ -1,0 +1,12 @@
+from repro.data.synthetic import (  # noqa: F401
+    TextDatasetSpec,
+    VisionDatasetSpec,
+    make_text_dataset,
+    make_vision_dataset,
+)
+from repro.data.partitioner import (  # noqa: F401
+    dirichlet_partition,
+    iid_partition,
+    partition_stats,
+)
+from repro.data.pipeline import ClientDataset, balanced_eval_set, build_clients  # noqa: F401

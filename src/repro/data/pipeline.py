@@ -1,0 +1,52 @@
+"""Batching pipeline for the FL simulation: per-client epoch iterators with
+deterministic shuffling, plus a balanced held-out eval set (the paper tests
+the global model on a balanced set)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClientDataset:
+    inputs: np.ndarray      # images (N,H,W,C) or tokens (N,S)
+    labels: np.ndarray      # (N,)
+
+    def __len__(self) -> int:
+        return len(self.labels)
+
+    def batches(
+        self, batch_size: int, epochs: int, seed: int
+    ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        """``epochs`` passes of shuffled, truncated-to-full batches (at least
+        one batch per epoch even if the client has < batch_size samples)."""
+        rng = np.random.default_rng(seed)
+        n = len(self)
+        for _ in range(epochs):
+            order = rng.permutation(n)
+            bs = min(batch_size, n)
+            for start in range(0, max(n - bs + 1, 1), bs):
+                idx = order[start : start + bs]
+                yield self.inputs[idx], self.labels[idx]
+
+
+def build_clients(
+    inputs: np.ndarray, labels: np.ndarray, parts: list[np.ndarray]
+) -> list[ClientDataset]:
+    return [ClientDataset(inputs[p], labels[p]) for p in parts]
+
+
+def balanced_eval_set(
+    inputs: np.ndarray, labels: np.ndarray, per_class: int, seed: int = 1
+) -> tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    picks = []
+    for c in np.unique(labels):
+        idx = np.where(labels == c)[0]
+        picks.append(rng.choice(idx, size=min(per_class, len(idx)), replace=False))
+    sel = np.concatenate(picks)
+    rng.shuffle(sel)
+    return inputs[sel], labels[sel]

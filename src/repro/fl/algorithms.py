@@ -1,0 +1,71 @@
+"""FL algorithm plugins: FedAvg, FedProx, MOON — each composable with both
+FNU and FedPart update modes (the paper's Table 1 matrix).
+
+An algorithm contributes a loss *augmentation* on top of the task loss:
+
+    FedAvg : nothing
+    FedProx: + (mu/2)·‖w − w_global‖²   over trainable params
+    MOON   : + mu·contrastive(z_local, z_global, z_prev)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoConfig:
+    name: str = "fedavg"            # fedavg | fedprox | moon
+    prox_mu: float = 0.01
+    moon_mu: float = 1.0
+    moon_tau: float = 0.5
+
+
+def prox_term(params: PyTree, global_params: PyTree) -> jax.Array:
+    sq = jax.tree.map(
+        lambda a, b: jnp.sum((a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2),
+        params,
+        global_params,
+    )
+    return jax.tree.reduce(lambda x, y: x + y, sq, jnp.float32(0.0))
+
+
+def moon_contrastive(
+    z: jax.Array, z_glob: jax.Array, z_prev: jax.Array, tau: float
+) -> jax.Array:
+    """Model-contrastive loss (Li et al. 2021): pull the local representation
+    towards the global model's, push it from the previous local model's."""
+
+    def cos(a, b):
+        a = a / (jnp.linalg.norm(a, axis=-1, keepdims=True) + 1e-8)
+        b = b / (jnp.linalg.norm(b, axis=-1, keepdims=True) + 1e-8)
+        return jnp.sum(a * b, axis=-1)
+
+    pos = cos(z, z_glob) / tau
+    neg = cos(z, z_prev) / tau
+    return jnp.mean(-pos + jax.scipy.special.logsumexp(jnp.stack([pos, neg]), axis=0))
+
+
+def augment_loss(
+    algo: AlgoConfig,
+    task_loss: jax.Array,
+    *,
+    params: PyTree | None = None,
+    global_params: PyTree | None = None,
+    z: jax.Array | None = None,
+    z_glob: jax.Array | None = None,
+    z_prev: jax.Array | None = None,
+) -> jax.Array:
+    if algo.name == "fedavg":
+        return task_loss
+    if algo.name == "fedprox":
+        return task_loss + 0.5 * algo.prox_mu * prox_term(params, global_params)
+    if algo.name == "moon":
+        return task_loss + algo.moon_mu * moon_contrastive(z, z_glob, z_prev, algo.moon_tau)
+    raise ValueError(f"unknown algorithm {algo.name!r}")

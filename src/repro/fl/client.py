@@ -1,0 +1,132 @@
+"""Client-side local training.
+
+``LocalTrainer`` builds jitted per-batch step functions — one FNU variant and
+one per layer group (the group index is static, so XLA prunes the dead
+backward graph per group exactly as in the production launcher).  BN
+statistics ride along as a ``has_aux`` output and are spliced back without a
+second forward pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masking
+from repro.core.partition import Partition
+from repro.fl.algorithms import AlgoConfig, augment_loss
+from repro.fl.tasks import TaskAdapter
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class LocalTrainer:
+    adapter: TaskAdapter
+    partition: Partition
+    algo: AlgoConfig
+    adam: AdamConfig
+
+    def __post_init__(self):
+        self._full_step = jax.jit(self._make_full_step())
+        self._partial_steps: dict[int, Callable] = {}
+
+    # -- loss assembly -----------------------------------------------------
+
+    def _total_loss(self, params, inputs, labels, global_params, prev_params):
+        task = self.adapter.loss(params, inputs, labels)
+        kw: dict = {}
+        if self.algo.name == "fedprox":
+            kw = {"params": params, "global_params": global_params}
+        elif self.algo.name == "moon":
+            kw = {
+                "z": self.adapter.features(params, inputs),
+                "z_glob": jax.lax.stop_gradient(
+                    self.adapter.features(global_params, inputs)
+                ),
+                "z_prev": jax.lax.stop_gradient(
+                    self.adapter.features(prev_params, inputs)
+                ),
+            }
+        return augment_loss(self.algo, task, **kw)
+
+    # -- step builders -------------------------------------------------------
+
+    def _make_full_step(self):
+        def step(params, opt_state, inputs, labels, global_params, prev_params):
+            def loss_fn(p):
+                loss = self._total_loss(p, inputs, labels, global_params, prev_params)
+                stats = self.adapter.stats(p, inputs)
+                return loss, stats
+
+            (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            new_params, new_state = adam_update(grads, opt_state, params, self.adam)
+            if stats is not None:
+                new_params = masking.tree_update(new_params, stats)
+            return new_params, new_state, loss
+
+        return step
+
+    def _make_partial_step(self, group: int):
+        def step(params, opt_state, inputs, labels, global_params, prev_params):
+            trainable = masking.select(params, self.partition, group)
+            frozen = masking.complement(params, self.partition, group)
+
+            def loss_fn(sub):
+                p = masking.merge(sub, frozen)
+                loss = self._total_loss(p, inputs, labels, global_params, prev_params)
+                stats = self.adapter.stats(p, inputs)
+                return loss, stats
+
+            (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(trainable)
+            new_sub, new_state = adam_update(grads, opt_state, trainable, self.adam)
+            new_params = masking.merge(new_sub, frozen)
+            if stats is not None:
+                new_params = masking.tree_update(new_params, stats)
+            return new_params, new_state, loss
+
+        return step
+
+    def partial_step(self, group: int) -> Callable:
+        if group not in self._partial_steps:
+            self._partial_steps[group] = jax.jit(self._make_partial_step(group))
+        return self._partial_steps[group]
+
+    # -- local round ---------------------------------------------------------
+
+    def run_local_round(
+        self,
+        global_params: PyTree,
+        group: int,                    # FULL_NETWORK (-1) for FNU rounds
+        data,                          # ClientDataset
+        *,
+        epochs: int,
+        batch_size: int,
+        seed: int,
+        prev_params: PyTree | None = None,
+        step_tracker=None,
+    ) -> tuple[PyTree, float]:
+        """Train locally; returns (updated full params, mean loss)."""
+        params = global_params
+        prev = prev_params if prev_params is not None else global_params
+        if group < 0:
+            opt_state = adam_init(params)
+            step = self._full_step
+        else:
+            opt_state = adam_init(masking.select(params, self.partition, group))
+            step = self.partial_step(group)
+        losses = []
+        for inputs, labels in data.batches(batch_size, epochs, seed):
+            before = params
+            params, opt_state, loss = step(
+                params, opt_state, inputs, labels, global_params, prev
+            )
+            losses.append(float(loss))
+            if step_tracker is not None:
+                step_tracker.record(before, params)
+        return params, float(jnp.mean(jnp.array(losses))) if losses else 0.0

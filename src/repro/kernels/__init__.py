@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU):
+
+- ``flash_attention``: online-softmax attention, causal/sliding-window, GQA.
+- ``masked_adam``: fused Eq.-1 masked Adam (block-skip on frozen groups).
+- ``ssd_chunk``: chunked decay linear-attention scan (Mamba2 SSD / mLSTM core).
+
+Each kernel package ships ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd wrapper) and ``ref.py`` (pure-jnp oracle).
+"""

@@ -1,0 +1,147 @@
+"""Pallas TPU flash attention (forward) with causal / sliding-window masking
+and GQA head sharing.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) — the kv-block axis is
+minor, so the online-softmax accumulators (m, l, acc) live in VMEM scratch
+and carry across kv iterations; outputs are written on the last kv block.
+
+BlockSpecs tile Q/O as (1, 1, BQ, D) and K/V as (1, 1, BK, D) in VMEM; the
+KV head index is ``h // (q_heads // kv_heads)`` via the index map (GQA).
+MXU alignment: BQ = BK = 128, D padded to a multiple of 128 by the wrapper.
+
+Causal blocks fully above the diagonal are skipped with ``pl.when`` (no MXU
+work issued); the diagonal block applies an iota mask.  ``window > 0`` adds
+the sliding-window lower bound — blocks entirely below the window are
+skipped symmetrically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref,            # inputs
+    o_ref,                          # output
+    acc_ref, m_ref, l_ref,          # VMEM scratch carried over kv blocks
+    *,
+    bq: int,
+    bk: int,
+    kv_seq: int,
+    causal: bool,
+    window: int,
+    scale: float,
+):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+    nkb = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qb * bq
+    k_start = kb * bk
+
+    # Block-level skip decisions (static per (qb, kb) pair given causal/window).
+    run = True
+    if causal:
+        run = jnp.logical_and(True, k_start <= q_start + bq - 1)
+    if window > 0:
+        run = jnp.logical_and(run, k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                       # (bq, bk)
+
+        q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_idx < kv_seq
+        if causal:
+            mask = jnp.logical_and(mask, k_idx <= q_idx)
+        if window > 0:
+            mask = jnp.logical_and(mask, k_idx > q_idx - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                             # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kb == nkb - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,            # (B, H, Sq, D)
+    k: jax.Array,            # (B, Hkv, Skv, D)
+    v: jax.Array,            # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+    kv_len: int | None = None,       # true (unpadded) KV length for masking
+    head_dim: int | None = None,     # true head dim for the softmax scale
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    grid = (b, h, sq // bq, skv // bk)
+    scale = 1.0 / ((head_dim or d) ** 0.5)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        bq=bq,
+        bk=bk,
+        kv_seq=kv_len if kv_len is not None else skv,
+        causal=causal,
+        window=window,
+        scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi // rep, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),   # acc
+            pltpu.VMEM((bq, 1), jnp.float32),   # m (running max)
+            pltpu.VMEM((bq, 1), jnp.float32),   # l (running denom)
+        ],
+        interpret=interpret,
+    )(q, k, v)

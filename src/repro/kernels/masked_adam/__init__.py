@@ -1,0 +1,1 @@
+from repro.kernels.masked_adam import ops  # noqa: F401

@@ -1,0 +1,120 @@
+"""Pytree-level wrapper: pack a parameter pytree into the kernel's (rows, 128)
+layout with block-aligned leaf boundaries, derive the per-block mask from a
+layer-group partition, run the fused kernel, unpack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import Partition, path_str, tree_paths
+from repro.kernels.masked_adam.kernel import LANES, masked_adam_kernel
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PackMeta:
+    shapes: tuple[tuple[int, ...], ...]
+    sizes: tuple[int, ...]
+    padded: tuple[int, ...]      # padded element count per leaf
+    treedef: Any
+    dtype: Any
+
+
+def _block_elems(block_rows: int) -> int:
+    return block_rows * LANES
+
+
+def pack(tree: PyTree, block_rows: int = 8) -> tuple[jax.Array, PackMeta]:
+    """Flatten + pad each leaf to a block multiple, concat, reshape (R,128)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    be = _block_elems(block_rows)
+    flat_parts, shapes, sizes, padded = [], [], [], []
+    for leaf in leaves:
+        arr = leaf.reshape(-1).astype(jnp.float32)
+        n = arr.shape[0]
+        pad = (-n) % be
+        if pad:
+            arr = jnp.concatenate([arr, jnp.zeros((pad,), arr.dtype)])
+        flat_parts.append(arr)
+        shapes.append(tuple(leaf.shape))
+        sizes.append(n)
+        padded.append(n + pad)
+    flat = jnp.concatenate(flat_parts) if flat_parts else jnp.zeros((0,), jnp.float32)
+    meta = PackMeta(tuple(shapes), tuple(sizes), tuple(padded), treedef,
+                    leaves[0].dtype if leaves else jnp.float32)
+    return flat.reshape(-1, LANES), meta
+
+
+def unpack(packed: jax.Array, meta: PackMeta, dtype=None) -> PyTree:
+    flat = packed.reshape(-1)
+    out, off = [], 0
+    for shape, n, pn in zip(meta.shapes, meta.sizes, meta.padded):
+        leaf = flat[off : off + n].reshape(shape)
+        out.append(leaf.astype(dtype) if dtype is not None else leaf)
+        off += pn
+    return jax.tree.unflatten(meta.treedef, out)
+
+
+def block_mask_for_group(
+    tree: PyTree, partition: Partition, groups, block_rows: int = 8
+) -> np.ndarray:
+    """Per-block int32 mask aligned with ``pack``'s layout."""
+    sel = {groups} if isinstance(groups, int) else set(int(g) for g in groups)
+    be = _block_elems(block_rows)
+    bits = []
+    for path, leaf in tree_paths(tree):
+        n = int(np.prod(leaf.shape)) if leaf.ndim else 1
+        nblocks = -(-n // be)
+        bit = 1 if partition.group_of(path_str(path)) in sel else 0
+        bits.extend([bit] * nblocks)
+    return np.asarray(bits, dtype=np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret", "b1", "b2"))
+def _run(packed_p, packed_g, packed_m, packed_v, block_mask, scalars,
+         block_rows, interpret, b1, b2):
+    return masked_adam_kernel(
+        packed_p, packed_g, packed_m, packed_v, block_mask, scalars,
+        b1=b1, b2=b2, block_rows=block_rows, interpret=interpret,
+    )
+
+
+def fused_masked_adam(
+    params: PyTree,
+    grads: PyTree,
+    m: PyTree,
+    v: PyTree,
+    step: jax.Array,              # int32 scalar (1-based after increment)
+    block_mask: np.ndarray,
+    *,
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    block_rows: int = 8,
+    interpret: bool = True,
+) -> tuple[PyTree, PyTree, PyTree]:
+    """Fused Eq.-1 Adam over a whole pytree.  Returns (params, m, v)."""
+    pp, meta = pack(params, block_rows)
+    pg, _ = pack(grads, block_rows)
+    pm, _ = pack(m, block_rows)
+    pv, _ = pack(v, block_rows)
+    t = step.astype(jnp.float32)
+    scalars = jnp.stack(
+        [jnp.float32(lr), 1.0 - b1**t, 1.0 - b2**t, jnp.float32(eps)]
+    )
+    np_, nm, nv = _run(pp, pg, pm, pv, jnp.asarray(block_mask), scalars,
+                       block_rows, interpret, b1, b2)
+    return (
+        unpack(np_, meta, dtype=meta.dtype),
+        unpack(nm, meta),
+        unpack(nv, meta),
+    )

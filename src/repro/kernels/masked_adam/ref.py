@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused masked Adam kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_adam_ref(
+    p: jax.Array,            # (rows, 128)
+    g: jax.Array,
+    m: jax.Array,            # f32
+    v: jax.Array,            # f32
+    block_mask: jax.Array,   # (num_blocks,) int32
+    scalars: jax.Array,      # [lr, bc1, bc2, eps]
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    block_rows: int = 8,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    lr, bc1, bc2, eps = scalars[0], scalars[1], scalars[2], scalars[3]
+    g32 = g.astype(jnp.float32)
+    m_new = b1 * m + (1 - b1) * g32
+    v_new = b2 * v + (1 - b2) * g32 * g32
+    p_new = p.astype(jnp.float32) - lr * (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+
+    rows = p.shape[0]
+    mask_rows = jnp.repeat(block_mask != 0, block_rows)[:, None]  # (rows, 1)
+    p_out = jnp.where(mask_rows, p_new.astype(p.dtype), p)
+    m_out = jnp.where(mask_rows, m_new, m)
+    v_out = jnp.where(mask_rows, v_new, v)
+    return p_out, m_out, v_out

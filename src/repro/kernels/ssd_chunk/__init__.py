@@ -1,0 +1,1 @@
+from repro.kernels.ssd_chunk import ops  # noqa: F401

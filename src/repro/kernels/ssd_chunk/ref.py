@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the SSD chunk kernel: the direct sequential
+recurrence S_t = a_t S_{t-1} + k_t v_tᵀ, y_t = q_t·S_t."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    q: jax.Array,        # (B, H, S, N)
+    k: jax.Array,
+    v: jax.Array,        # (B, H, S, P)
+    log_a: jax.Array,    # (B, H, S)
+) -> tuple[jax.Array, jax.Array]:
+    b, h, s, n = q.shape
+    p = v.shape[-1]
+    a = jnp.exp(log_a.astype(jnp.float32))
+
+    def step(state, inp):
+        qt, kt, vt, at = inp                      # (B,H,N),(B,H,N),(B,H,P),(B,H)
+        state = at[..., None, None] * state + kt[..., :, None] * vt[..., None, :]
+        yt = jnp.einsum("bhn,bhnp->bhp", qt, state)
+        return state, yt
+
+    xs = (
+        jnp.moveaxis(q.astype(jnp.float32), 2, 0),
+        jnp.moveaxis(k.astype(jnp.float32), 2, 0),
+        jnp.moveaxis(v.astype(jnp.float32), 2, 0),
+        jnp.moveaxis(a, 2, 0),
+    )
+    state0 = jnp.zeros((b, h, n, p), jnp.float32)
+    final, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(v.dtype), final

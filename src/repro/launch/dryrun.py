@@ -1,0 +1,350 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers, compiles, and fits — and extract the roofline terms.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialisation, and only the dry-run wants 512 placeholder host devices.
+
+Measurement design (see launch/cost_probes.py): the MAIN compile uses the
+production configuration — scan-over-layers + per-layer remat — which gives
+the true HBM residency (memory_analysis) but understates FLOPs/collectives
+(XLA counts loop bodies once).  Tiny fully-unrolled PROBE compiles fit the
+exact linear cost model per metric and extrapolate to full depth.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    python -m repro.launch.dryrun --all                 # 40 pairs, single-pod
+    python -m repro.launch.dryrun --all --multi-pod     # + (pod) axis
+    python -m repro.launch.dryrun --arch X --shape train_4k --fedpart --group 12
+
+Artifacts: experiments/dryrun/<arch>__<shape>__<mesh>[__fedpartN].json
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core.partition import tree_paths
+from repro.launch import hlo_analysis, steps
+from repro.launch.cost_probes import fit_and_extrapolate, probe_plan
+from repro.launch.mesh import make_production_mesh
+
+import jax as _jax
+
+
+def make_mesh_override(shape_str: str):
+    """e.g. "32,8" -> 256-chip mesh (data=32, model=8); "2,16,16" multi-pod."""
+    dims = tuple(int(x) for x in shape_str.split(","))
+    axes = ("pod", "data", "model")[-len(dims):]
+    return _jax.make_mesh(dims, axes)
+from repro.launch.sharding import input_shardings, params_shardings
+from repro.models import api
+from repro.models.api import INPUT_SHAPES
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun"
+)
+
+# FSDP policy (DESIGN.md §5): shard params over "data" too when the model is
+# too big for tensor-parallel-only residency.
+FSDP_TRAIN_THRESHOLD = 8e9       # params
+FSDP_SERVE_THRESHOLD = 60e9
+
+
+def _param_count(shapes) -> float:
+    return float(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+
+
+def _active_param_count(cfg, shapes) -> float:
+    """Active params per token (MoE: routed experts counted at top-k/E)."""
+    total = 0.0
+    for path, leaf in tree_paths(shapes):
+        n = float(np.prod(leaf.shape))
+        if "experts" in path:
+            n *= cfg.num_experts_per_tok / max(cfg.num_experts, 1)
+        total += n
+    return total
+
+
+def compile_step(
+    cfg,
+    shape,
+    mesh,
+    *,
+    unroll: int,
+    remat: bool,
+    fedpart_group: int | None = None,
+    moe_ep: bool = False,
+    act_shard: bool = False,
+    accum: int = 1,
+):
+    """Lower + compile one step function.  Returns (compiled, extras)."""
+    from contextlib import nullcontext
+
+    from repro.models import moe_ep as moe_ep_mod
+
+    params_shapes = jax.eval_shape(lambda: api.init(jax.random.key(0), cfg))
+    n_params = _param_count(params_shapes)
+    window = api.decode_window(cfg, shape.seq_len)
+    specs = api.input_specs(cfg, shape)
+    fsdp = n_params > (
+        FSDP_TRAIN_THRESHOLD if shape.kind == "train" else FSDP_SERVE_THRESHOLD
+    )
+    p_shard = params_shardings(params_shapes, mesh, fsdp=fsdp)
+    extras = {"params": n_params, "fsdp": fsdp, "window": window,
+              "params_shapes": params_shapes}
+
+    from repro.models import act_sharding as act_mod
+
+    ep_ctx = (
+        moe_ep_mod.expert_parallel(mesh, fsdp=fsdp)
+        if (moe_ep and cfg.is_moe)
+        else nullcontext()
+    )
+    act_ctx = act_mod.activation_sharding(mesh) if act_shard else nullcontext()
+    with ep_ctx, act_ctx, mesh:
+        if shape.kind == "train":
+            if fedpart_group is not None:
+                groups = steps.list_groups(params_shapes)
+                group = groups[fedpart_group % len(groups)]
+                extras["fedpart_group"] = f"{group.key}[{group.index}]"
+                step = steps.make_fedpart_train_step(
+                    cfg, group, remat=remat, unroll=unroll
+                )
+                opt_shapes = jax.eval_shape(
+                    lambda p: steps.init_partial_opt_state(p, group), params_shapes
+                )
+            else:
+                step = steps.make_train_step(cfg, remat=remat, unroll=unroll,
+                                             accum=accum)
+                opt_shapes = jax.eval_shape(steps.init_opt_state, params_shapes)
+            opt_shard = type(opt_shapes)(
+                step=NamedSharding(mesh, P()),
+                m=params_shardings(opt_shapes.m, mesh, fsdp=fsdp),
+                v=params_shardings(opt_shapes.v, mesh, fsdp=fsdp),
+            )
+            b_shard = input_shardings(specs, mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, opt_shard, b_shard),
+                out_shardings=(p_shard, opt_shard, NamedSharding(mesh, P())),
+            )
+            lowered = jitted.lower(params_shapes, opt_shapes, specs)
+        elif shape.kind == "prefill":
+            step = steps.make_prefill_step(cfg, window=window, unroll=unroll)
+            b_shard = input_shardings(specs, mesh)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_shapes, specs)
+        else:  # decode
+            step = steps.make_serve_step(cfg, window=window, unroll=unroll)
+            io_shard = input_shardings(specs, mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(
+                    p_shard, io_shard["token"], io_shard["cache"], io_shard["pos"]
+                ),
+                out_shardings=(NamedSharding(mesh, P()), io_shard["cache"]),
+            )
+            lowered = jitted.lower(
+                params_shapes, specs["token"], specs["cache"], specs["pos"]
+            )
+        return lowered.compile(), extras
+
+
+def _costs_of(compiled) -> dict[str, float]:
+    cost = hlo_analysis.extract_cost(compiled)
+    coll = hlo_analysis.collective_bytes(compiled.as_text())
+    return {
+        "flops": cost["flops"],
+        "hbm_bytes": cost["bytes"],
+        "coll_bytes": float(coll["total_bytes"]),
+        **{f"coll_{k}": float(v) for k, v in coll["per_kind_bytes"].items()},
+    }
+
+
+def analyze_pair(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    fedpart_group: int | None = None,
+    probes: bool = True,
+    moe_ep: bool = False,
+    act_shard: bool = False,
+    mesh_shape: str | None = None,
+    accum: int = 1,
+    save: bool = True,
+    verbose: bool = True,
+) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = mesh_shape.replace(",", "x") if mesh_shape else (
+        "2x16x16" if multi_pod else "16x16")
+    tag = f"{arch}__{shape_name}__{mesh_name}" + (
+        f"__fedpart{fedpart_group}" if fedpart_group is not None else ""
+    ) + ("__ep" if moe_ep else "") + ("__act" if act_shard else "") + (
+        f"__accum{accum}" if accum > 1 else "")
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "mode": "fedpart" if fedpart_group is not None else "baseline",
+    }
+    if not api.supports_shape(cfg, shape):
+        record["status"] = "skipped"
+        record["reason"] = "unsupported by design (DESIGN.md §4: whisper long_500k)"
+        if save:
+            _save(tag, record)
+        if verbose:
+            print(f"[dryrun] {tag}: SKIPPED ({record['reason']})")
+        return record
+
+    t0 = time.time()
+    mesh = (make_mesh_override(mesh_shape) if mesh_shape
+            else make_production_mesh(multi_pod=multi_pod))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    # MAIN compile: production shape (scan + remat) -> memory truth.
+    compiled, extras = compile_step(
+        cfg, shape, mesh, unroll=1, remat=True, fedpart_group=fedpart_group,
+        moe_ep=moe_ep, act_shard=act_shard, accum=accum,
+    )
+    record["params"] = extras["params"]
+    record["fsdp"] = extras["fsdp"]
+    if "fedpart_group" in extras:
+        record["fedpart_group"] = extras["fedpart_group"]
+    mem = hlo_analysis.extract_memory(compiled)
+    raw = _costs_of(compiled)
+    record["main_compile_s"] = time.time() - t0
+
+    # PROBE compiles: tiny fully-unrolled variants -> exact per-layer costs.
+    record["moe_ep"] = moe_ep
+    record["act_shard"] = act_shard
+    record["accum"] = accum
+    if probes and fedpart_group is None:
+        plan = probe_plan(cfg)
+        probe_costs = []
+        for pc in plan.probe_cfgs:
+            pcomp, _ = compile_step(
+                pc, shape, mesh, unroll=max(pc.num_layers, 4), remat=False,
+                moe_ep=moe_ep, act_shard=act_shard, accum=accum,
+            )
+            probe_costs.append(_costs_of(pcomp))
+        corrected = fit_and_extrapolate(plan, probe_costs)
+        record["cost_model"] = "probe-extrapolated"
+    elif fedpart_group is not None:
+        # FedPart's truncated backward is group-position-dependent, so the
+        # linear probe model does not apply.  Compile once fully unrolled
+        # (costs exact; memory comes from the scan compile above — unrolled
+        # remat is CSE'd away, see §Notes).
+        ucomp, _ = compile_step(
+            cfg, shape, mesh, unroll=cfg.num_layers, remat=False,
+            fedpart_group=fedpart_group, moe_ep=moe_ep, act_shard=act_shard,
+        )
+        corrected = _costs_of(ucomp)
+        record["cost_model"] = "full-unroll exact"
+    else:
+        corrected = raw
+        record["cost_model"] = "raw (scan bodies counted once)"
+
+    if accum > 1:
+        # The accumulation loop is a scan: probe costs are per-microbatch.
+        corrected = {k: v * accum for k, v in corrected.items()}
+    terms = hlo_analysis.roofline(
+        corrected["flops"], corrected["hbm_bytes"], corrected["coll_bytes"],
+        residency_bytes=mem["per_device_total_bytes"],
+    )
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    params_shapes = extras["params_shapes"]
+    active = _active_param_count(cfg, params_shapes)
+    mf = hlo_analysis.model_flops_6nd(active, tokens)
+    if shape.kind != "train":
+        mf /= 3.0  # forward-only
+
+    record.update(
+        status="ok",
+        chips=n_chips,
+        memory=mem,
+        raw_cost=raw,
+        cost=corrected,
+        roofline=terms.to_dict(),
+        model_flops=mf,
+        model_flops_total_ratio=(mf / max(corrected["flops"] * n_chips, 1.0)),
+        hbm_gb_per_device=mem["per_device_total_bytes"] / 1e9,
+        fits_v5e_16gb=mem["per_device_total_bytes"] < 16e9,
+        total_s=time.time() - t0,
+    )
+    if save:
+        _save(tag, record)
+    if verbose:
+        r = record["roofline"]
+        print(
+            f"[dryrun] {tag}: OK {record['total_s']:.0f}s "
+            f"| {mem['per_device_total_bytes']/1e9:.2f} GB/dev "
+            f"| compute {r['compute_s']*1e3:.3f}ms mem {r['memory_s_min']*1e3:.3f}-{r['memory_s_hlo']*1e3:.0f}ms "
+            f"coll {r['collective_s']*1e3:.3f}ms -> {r['dominant']} "
+            f"| useful-flops {record['model_flops_total_ratio']:.2f}"
+        )
+    return record
+
+
+def _save(tag: str, record: dict) -> None:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    rec = {k: v for k, v in record.items() if k != "params_shapes"}
+    with open(os.path.join(ARTIFACT_DIR, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=2, default=float)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fedpart", action="store_true")
+    ap.add_argument("--group", type=int, default=None,
+                    help="FedPart trainable group index (default 12 = mid-stack)")
+    ap.add_argument("--moe-ep", action="store_true",
+                    help="explicit shard_map expert parallelism (perf path)")
+    ap.add_argument("--mesh", default=None,
+                    help="override mesh shape, e.g. 32,8 or 2,16,16")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation microbatches (train shapes)")
+    ap.add_argument("--act-shard", action="store_true",
+                    help="attention-score/residual sharding constraints (perf path)")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = ASSIGNED_ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    pairs = [(a, s) for a in archs for s in shapes]
+
+    failures = 0
+    for arch, shape in pairs:
+        try:
+            g = (args.group if args.group is not None else 12) if args.fedpart else None
+            analyze_pair(
+                arch, shape, multi_pod=args.multi_pod, fedpart_group=g,
+                probes=not args.no_probes, moe_ep=args.moe_ep,
+                act_shard=args.act_shard, mesh_shape=args.mesh,
+                accum=args.accum, save=not args.no_save,
+            )
+        except Exception:
+            failures += 1
+            print(f"[dryrun] {arch} x {shape} FAILED:")
+            traceback.print_exc()
+    print(f"[dryrun] done: {len(pairs) - failures}/{len(pairs)} OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

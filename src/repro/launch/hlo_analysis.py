@@ -1,0 +1,178 @@
+"""Post-compile analysis: collective-bytes parsing and roofline terms.
+
+``cost_analysis`` supplies HLO FLOPs and bytes accessed; collective traffic
+is NOT in there, so we parse the optimized HLO text and sum the result-shape
+bytes of every collective op (documented proxy for operand bytes: equal for
+all-reduce/collective-permute, the gathered size for all-gather, the
+pre-scatter size for reduce-scatter's operand — we record per-op-kind
+subtotals so either convention can be reconstructed).
+
+Roofline constants (TPU v5e, per chip): 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, Any]:
+    """Sum result-shape bytes per collective kind from optimized HLO text.
+
+    ``-start`` ops are counted, matching ``-done`` pairs are not (avoid double
+    counting async collectives)."""
+    per_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        per_kind[kind] += b
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    return {"total_bytes": total, "per_kind_bytes": per_kind, "per_kind_count": counts}
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """Per-device roofline terms, in seconds.
+
+    Two memory terms are reported:
+    - ``memory_s_hlo``: HLO "bytes accessed" / HBM_BW — the spec's term.  On
+      the CPU-backend HLO this counts every unfused operand read and is a
+      gross UPPER bound (TPU XLA fuses elementwise chains away).
+    - ``memory_s_min``: 2x per-device buffer residency / HBM_BW — a LOWER
+      bound (every live byte written+read once).
+
+    ``dominant`` uses the lower bound: for matmul-dominated graphs on the
+    TPU backend real traffic sits close to it, and the upper bound would
+    otherwise mislabel every workload memory-bound."""
+
+    compute_s: float
+    memory_s_hlo: float
+    memory_s_min: float
+    collective_s: float
+    flops: float
+    hbm_bytes: float
+    residency_bytes: float
+    coll_bytes: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s_min,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s_min, self.collective_s)
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s_hlo": self.memory_s_hlo,
+            "memory_s_min": self.memory_s_min,
+            "collective_s": self.collective_s,
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "residency_bytes": self.residency_bytes,
+            "coll_bytes": self.coll_bytes,
+            "dominant": self.dominant,
+        }
+
+
+def roofline(
+    flops: float, hbm_bytes: float, coll_bytes: float, residency_bytes: float = 0.0
+) -> RooflineTerms:
+    """All quantities are per-device (the SPMD-partitioned executable)."""
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s_hlo=hbm_bytes / HBM_BW,
+        memory_s_min=2.0 * residency_bytes / HBM_BW,
+        collective_s=coll_bytes / ICI_BW,
+        flops=flops,
+        hbm_bytes=hbm_bytes,
+        residency_bytes=residency_bytes,
+        coll_bytes=coll_bytes,
+    )
+
+
+def extract_cost(compiled) -> dict[str, float]:
+    """Normalise compiled.cost_analysis() across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    out = {"flops": float(ca.get("flops", 0.0))}
+    # bytes accessed: prefer the aggregate key
+    out["bytes"] = float(ca.get("bytes accessed", 0.0))
+    for k, val in ca.items():
+        if k.startswith("bytes accessed"):
+            out.setdefault("bytes_detail", {})[k] = float(val)
+    out["utilization_keys"] = {}
+    return out
+
+
+def extract_memory(compiled) -> dict[str, int]:
+    ma = compiled.memory_analysis()
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    out = {}
+    for k in keys:
+        out[k] = int(getattr(ma, k, 0) or 0)
+    out["per_device_total_bytes"] = (
+        out["argument_size_in_bytes"]
+        + out["output_size_in_bytes"]
+        + out["temp_size_in_bytes"]
+        - out["alias_size_in_bytes"]
+    )
+    return out
+
+
+def model_flops_6nd(active_params: float, tokens: float) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for a train step;
+    forward-only callers divide by 3."""
+    return 6.0 * active_params * tokens

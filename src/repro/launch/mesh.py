@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model").
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """The data-parallel axes (FL-client axes): ("pod","data") when present."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def axis_size(mesh: jax.sharding.Mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]

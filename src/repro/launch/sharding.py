@@ -1,0 +1,255 @@
+"""Per-parameter / per-input sharding rules for the production mesh.
+
+Strategy (DESIGN.md §5):
+
+1. Named rules for the big matmuls — megatron-style tensor parallelism over
+   the "model" axis (attention hidden, FFN hidden, expert axis) with an
+   optional FSDP extension sharding d_model over "data" for the largest
+   archs.
+2. A greedy fallback for everything else: shard the largest divisible dim
+   over "model" (and over "data" under FSDP) — this guarantees every leaf of
+   every arch lowers, including awkward cases (whisper's 51865 vocab,
+   zamba2's 112 SSM heads) where the named rule would not divide.
+
+Activations: batch over the data-parallel axes ("pod","data"); long_500k
+(batch=1) shards the cache *sequence* axis over "data" instead.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.partition import tree_paths, path_str
+from repro.launch.mesh import axis_size, dp_axes
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Named rules: (path regex, spec builder).  Specs are given for the *unstacked*
+# suffix dims; a leading layer-stack dim (if present) is prepended as None.
+# A rule returns None to decline (e.g. when dims don't divide).
+# ---------------------------------------------------------------------------
+
+def _col(model: int, fsdp: bool, data: int):
+    """(d_in, d_out) column-parallel: out on model, in on data under FSDP."""
+
+    def rule(shape):
+        if shape[-1] % model:
+            return None
+        din = "data" if (fsdp and shape[-2] % data == 0) else None
+        return (din, "model")
+
+    return rule
+
+
+def _row(model: int, fsdp: bool, data: int):
+    """(d_in, d_out) row-parallel: in on model, out on data under FSDP."""
+
+    def rule(shape):
+        if shape[-2] % model:
+            return None
+        dout = "data" if (fsdp and shape[-1] % data == 0) else None
+        return ("model", dout)
+
+    return rule
+
+
+def _expert_col(model: int, fsdp: bool, data: int):
+    """(E, d, f): experts on model (expert parallelism)."""
+
+    def rule(shape):
+        if shape[-3] % model:
+            return None
+        return ("model", "data" if (fsdp and shape[-2] % data == 0) else None, None)
+
+    return rule
+
+
+def _expert_row(model: int, fsdp: bool, data: int):
+    def rule(shape):
+        if shape[-3] % model:
+            return None
+        return ("model", None, "data" if (fsdp and shape[-1] % data == 0) else None)
+
+    return rule
+
+
+def _vocab_embed(model: int, fsdp: bool, data: int):
+    """(V, d): shard vocab on model when divisible, else d."""
+
+    def rule(shape):
+        if shape[-2] % model == 0:
+            return ("model", None)
+        if shape[-1] % model == 0:
+            return (None, "model")
+        return None
+
+    return rule
+
+
+def param_rules(model: int, data: int, fsdp: bool):
+    col = _col(model, fsdp, data)
+    row = _row(model, fsdp, data)
+    return [
+        # attention projections
+        (r"(attn|self_attn|cross_attn)/(wq|wk|wv|wq_b|wkv_b)/w$", col),
+        (r"(attn|self_attn|cross_attn)/wo/w$", row),
+        (r"attn/(wq_a|wkv_a)/w$", col),
+        # dense MLPs (incl. shared experts)
+        (r"(mlp|shared)/(w_gate|w_up|w_in)/w$", col),
+        (r"(mlp|shared)/(w_down|w_out)/w$", row),
+        # MoE experts
+        (r"experts/(w_gate|w_up)$", _expert_col(model, fsdp, data)),
+        (r"experts/w_down$", _expert_row(model, fsdp, data)),
+        (r"router/w$", lambda shape: (None, None)),
+        # SSM family
+        (r"(mamba|mlstm)/(in_proj|up_proj|wq|wk|wv)/w$", col),
+        (r"(mamba|mlstm)/(out_proj|down_proj)/w$", row),
+        (r"slstm/w_x/w$", col),
+        (r"slstm/out_proj/w$", row),
+        # embeddings / heads
+        (r"embed/table$", _vocab_embed(model, fsdp, data)),
+        (r"head/w$", col),
+    ]
+
+
+def _greedy_spec(shape: tuple[int, ...], model: int, data: int, fsdp: bool):
+    """Fallback: largest dim divisible by ``model`` gets "model"; under FSDP
+    the largest remaining dim divisible by ``data`` gets "data"."""
+    spec: list = [None] * len(shape)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if shape[i] >= model and shape[i] % model == 0:
+            spec[i] = "model"
+            break
+    if fsdp:
+        for i in order:
+            if spec[i] is None and shape[i] >= data and shape[i] % data == 0:
+                spec[i] = "data"
+                break
+    return tuple(spec)
+
+
+def param_spec(
+    path: str,
+    shape: tuple[int, ...],
+    *,
+    model: int,
+    data: int,
+    fsdp: bool = False,
+    stacked: bool = True,
+) -> P:
+    """PartitionSpec for one parameter leaf."""
+    if len(shape) == 0:
+        return P()
+    for pattern, rule in param_rules(model, data, fsdp):
+        if re.search(pattern, path):
+            base = rule(shape)
+            if base is None:
+                continue
+            pad = len(shape) - len(base)
+            if pad < 0:   # rule written for more dims than leaf has
+                continue
+            return P(*([None] * pad), *base)
+    if len(shape) == 1:
+        return P(None)
+    # >=3D leaves are treated as layer-stacked: never shard the leading dim.
+    inner = shape[1:] if (stacked and len(shape) >= 3) else shape
+    spec = _greedy_spec(inner, model, data, fsdp)
+    if len(inner) != len(shape):
+        spec = (None, *spec)
+    return P(*spec)
+
+
+def params_shardings(
+    params_shapes: PyTree, mesh: jax.sharding.Mesh, *, fsdp: bool = False
+) -> PyTree:
+    """NamedSharding pytree for a params(-like) pytree of ShapeDtypeStructs."""
+    model = axis_size(mesh, "model")
+    data = axis_size(mesh, "data")
+    flat = tree_paths(params_shapes)
+    specs = {}
+    for path, leaf in flat:
+        ps = path_str(path)
+        specs[ps] = NamedSharding(
+            mesh, param_spec(ps, tuple(leaf.shape), model=model, data=data, fsdp=fsdp)
+        )
+
+    def assign(path, leaf):
+        ps = "/".join(_entry(e) for e in path)
+        return specs[ps]
+
+    return jax.tree_util.tree_map_with_path(assign, params_shapes)
+
+
+def _entry(e):
+    import jax.tree_util as jtu
+
+    if isinstance(e, jtu.DictKey):
+        return str(e.key)
+    if isinstance(e, jtu.SequenceKey):
+        return str(e.idx)
+    return str(e)
+
+
+# ---------------------------------------------------------------------------
+# Activation / input shardings
+# ---------------------------------------------------------------------------
+
+def batch_spec(shape: tuple[int, ...], mesh: jax.sharding.Mesh) -> P:
+    """Token/label/embedding inputs: batch over the DP axes when divisible."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([axis_size(mesh, a) for a in dp]))
+    if shape and shape[0] % dp_size == 0 and shape[0] > 0:
+        return P(dp, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def cache_spec(shape: tuple[int, ...], mesh: jax.sharding.Mesh) -> P:
+    """KV/SSM cache leaves.  Layout conventions (dims from the left):
+    (L, B, S, ...) attention caches; (L, B, ...) state caches.
+
+    batch -> DP axes when divisible; else the sequence axis (long_500k,
+    batch=1) -> "data"; heads/feature dims -> "model" greedily."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([axis_size(mesh, a) for a in dp]))
+    model = axis_size(mesh, "model")
+    data = axis_size(mesh, "data")
+    spec: list = [None] * len(shape)
+    if len(shape) < 2:
+        return P(*spec)
+    # dim 0 is the layer stack for stacked caches; batch is dim 1 when the
+    # cache is stacked, dim 0 otherwise.  Heuristic: treat the first dim <= 256
+    # following a small leading dim as batch.
+    b_dim = 1 if len(shape) >= 3 else 0
+    if shape[b_dim] % dp_size == 0:
+        spec[b_dim] = dp
+    elif len(shape) > b_dim + 1 and shape[b_dim + 1] % data == 0 and shape[b_dim + 1] >= data:
+        spec[b_dim + 1] = "data"   # sequence-parallel cache
+    # "model" on the largest remaining divisible dim (prefer trailing dims).
+    for i in range(len(shape) - 1, b_dim, -1):
+        if spec[i] is None and shape[i] >= model and shape[i] % model == 0:
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+def input_shardings(specs: PyTree, mesh: jax.sharding.Mesh, *, is_cache_fn=None) -> PyTree:
+    """Shardings for an input_specs dict: batch rules for arrays, cache rules
+    for anything under a "cache" key."""
+
+    def assign(path, leaf):
+        keys = [_entry(e) for e in path]
+        shape = tuple(leaf.shape)
+        if "cache" in keys:
+            return NamedSharding(mesh, cache_spec(shape, mesh))
+        return NamedSharding(mesh, batch_spec(shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, specs)

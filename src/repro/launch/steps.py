@@ -1,0 +1,188 @@
+"""Step functions lowered by the launcher / dry-run.
+
+- ``train_step``          — FNU baseline: full-network Adam step.
+- ``fedpart_train_step``  — the paper's technique on the production mesh:
+  gradients + optimizer state + gradient collectives restricted to one layer
+  group (a static layer index into the stacked block params, plus the
+  embed/head groups).  XLA prunes the dead backward graph; the gradient
+  all-reduce shrinks to the group's bytes (DESIGN.md §3).
+- ``prefill_step``        — full-sequence forward + KV cache write.
+- ``serve_step``          — one-token decode against the cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+
+PyTree = Any
+
+STACK_KEYS = ("blocks", "moe_blocks", "pairs", "chunks", "tail", "enc_blocks", "dec_blocks")
+
+
+# ---------------------------------------------------------------------------
+# FNU train step
+# ---------------------------------------------------------------------------
+
+def _microbatches(batch, accum: int):
+    """Split the leading batch axis into ``accum`` microbatches (stacked)."""
+    return jax.tree.map(
+        lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]), batch
+    )
+
+
+def make_train_step(cfg: ModelConfig, adam: AdamConfig = AdamConfig(), *,
+                    impl: str = "xla", remat: bool = True, unroll: int = 1,
+                    accum: int = 1):
+    """FNU step.  ``accum`` > 1 scans gradient accumulation over microbatches
+    — activation residency scales with the microbatch, the optimizer applies
+    the mean gradient once (§Perf iteration 5)."""
+
+    def loss_fn(p, b):
+        return api.loss(p, cfg, b, impl=impl, remat=remat, unroll=unroll)
+
+    def train_step(params, opt_state: AdamState, batch):
+        if accum <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = _microbatches(batch, accum)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zeros = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params
+            )
+            (g_sum, l_sum), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.float32(0.0)), micro
+            )
+            grads = jax.tree.map(lambda g: g / accum, g_sum)
+            loss = l_sum / accum
+        new_params, new_state = adam_update(grads, opt_state, params, adam)
+        return new_params, new_state, loss
+
+    return train_step
+
+
+def init_opt_state(params: PyTree) -> AdamState:
+    return adam_init(params)
+
+
+# ---------------------------------------------------------------------------
+# FedPart partial train step (stacked-layer grouping)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StackedGroup:
+    """One FedPart layer group of a stacked model: layer ``index`` of the
+    stack at ``params[key]``; or the non-stacked subtree at ``key`` when
+    ``index`` is None (embed / head / final_norm / shared_attn)."""
+
+    key: str
+    index: int | None = None
+
+
+def list_groups(params: PyTree) -> list[StackedGroup]:
+    """Enumerate FedPart groups shallow->deep for a stacked model."""
+    groups: list[StackedGroup] = []
+    if "embed" in params:
+        groups.append(StackedGroup("embed"))
+    for key in STACK_KEYS:
+        if key in params:
+            n = jax.tree.leaves(params[key])[0].shape[0]
+            groups.extend(StackedGroup(key, i) for i in range(n))
+    for key in ("shared_attn", "mtp"):
+        if key in params:
+            groups.append(StackedGroup(key))
+    tail_keys = [k for k in ("final_norm", "enc_norm", "enc_pos", "dec_pos", "head") if k in params]
+    if tail_keys:
+        # norms/positions/head travel with the head group (Appendix-A style)
+        groups.append(StackedGroup("|".join(tail_keys)))
+    return groups
+
+
+def _select_group(params: PyTree, group: StackedGroup) -> PyTree:
+    if group.index is not None:
+        return jax.tree.map(lambda x: x[group.index], params[group.key])
+    keys = group.key.split("|")
+    return {k: params[k] for k in keys}
+
+
+def _inject_group(params: PyTree, group: StackedGroup, sub: PyTree) -> PyTree:
+    out = dict(params)
+    if group.index is not None:
+        out[group.key] = jax.tree.map(
+            lambda full, t: jax.lax.dynamic_update_index_in_dim(
+                full, t.astype(full.dtype), group.index, 0
+            ),
+            params[group.key],
+            sub,
+        )
+        return out
+    for k, v in sub.items():
+        out[k] = v
+    return out
+
+
+def make_fedpart_train_step(
+    cfg: ModelConfig,
+    group: StackedGroup,
+    adam: AdamConfig = AdamConfig(),
+    *,
+    impl: str = "xla",
+    remat: bool = True,
+    unroll: int = 1,
+):
+    """Partial step: grads/optimizer state only for ``group``.
+
+    opt_state is over the group's subtree (1/M of full-model state)."""
+
+    def train_step(params, opt_state: AdamState, batch):
+        trainable = _select_group(params, group)
+
+        def loss_fn(sub):
+            return api.loss(_inject_group(params, group, sub), cfg, batch,
+                            impl=impl, remat=remat, unroll=unroll)
+
+        loss, grads = jax.value_and_grad(loss_fn)(trainable)
+        new_sub, new_state = adam_update(grads, opt_state, trainable, adam)
+        return _inject_group(params, group, new_sub), new_state, loss
+
+    return train_step
+
+
+def init_partial_opt_state(params: PyTree, group: StackedGroup) -> AdamState:
+    return adam_init(_select_group(params, group))
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, *, window: int = 0, impl: str = "xla",
+                      unroll: int = 1):
+    def prefill_step(params, batch):
+        logits, cache, _ = api.forward(
+            params, cfg, batch, window=window, impl=impl, collect_cache=True,
+            unroll=unroll,
+        )
+        return logits[:, -1:, :], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, window: int = 0, unroll: int = 1):
+    def serve_step(params, token, cache, pos):
+        return api.decode_step(params, cfg, token, cache, pos, window=window,
+                               unroll=unroll)
+
+    return serve_step

@@ -1,0 +1,8 @@
+"""Model zoo: building blocks + assembled architectures.
+
+Public entry point is ``repro.models.api`` (init / forward / loss /
+decode_step / cache_init / input_specs) which dispatches on
+``ModelConfig.kind``.
+"""
+
+from repro.models import api  # noqa: F401

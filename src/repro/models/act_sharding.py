@@ -1,0 +1,74 @@
+"""Optional activation-sharding constraints (§Perf iteration 3).
+
+GSPMD propagates parameter shardings through the model well — except where a
+logical axis does not divide the mesh axis.  llava-34b's 56 attention heads
+over a 16-way model axis is the canonical failure: the (B, H, Sq, Skv)
+score/prob tensors get fully replicated (533 GB/dev at train_4k, measured).
+
+Under ``activation_sharding(mesh)``, attention constrains the score layout to
+shard the *query-sequence* axis over "model" (always divisible for the
+assigned shapes) and batch over the DP axes — softmax stays local, the
+replicated tensors disappear, and the downstream resharding collectives with
+them.  A no-op outside the context, so baselines stay honest.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: list[Any] = [None]
+
+
+@contextmanager
+def activation_sharding(mesh):
+    _CTX[0] = mesh
+    try:
+        yield
+    finally:
+        _CTX[0] = None
+
+
+def enabled() -> bool:
+    return _CTX[0] is not None
+
+
+def _dp(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain_scores(x: jax.Array) -> jax.Array:
+    """x: (B, H, Sq, Skv) attention scores/probs."""
+    mesh = _CTX[0]
+    if mesh is None or x.ndim != 4:
+        return x
+    dp = _dp(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    model = mesh.shape.get("model", 1)
+    b, h, sq, skv = x.shape
+    spec = [None, None, None, None]
+    if dp and b % dp_size == 0:
+        spec[0] = dp
+    if h % model == 0 and h >= model:
+        spec[1] = "model"            # heads divide: the natural layout
+    elif sq % model == 0 and sq >= model:
+        spec[2] = "model"            # heads don't: shard query positions
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_resid(x: jax.Array) -> jax.Array:
+    """x: (B, S, d) residual-stream activations: batch over DP axes."""
+    mesh = _CTX[0]
+    if mesh is None or x.ndim != 3:
+        return x
+    dp = _dp(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    if not dp or x.shape[0] % dp_size != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, None, None))
+    )

@@ -1,0 +1,227 @@
+"""Unified model API: one dispatch layer over every architecture kind.
+
+The launcher, smoke tests, and benchmarks speak only this interface:
+
+    init(key, cfg)                          -> params
+    forward(params, cfg, batch, ...)        -> (logits, cache|None, aux)
+    loss(params, cfg, batch)                -> scalar
+    decode_step(params, cfg, batch, cache, pos) -> (logits, cache)
+    cache_init(cfg, batch, cache_len, dtype)    -> cache
+    input_specs(cfg, shape)                 -> {name: ShapeDtypeStruct}
+
+Input shapes (the four assigned):
+
+    train_4k     seq 4,096   batch 256   train_step
+    prefill_32k  seq 32,768  batch 32    prefill (forward + cache)
+    decode_32k   seq 32,768  batch 128   serve_step (1 token + cache)
+    long_500k    seq 524,288 batch 1     serve_step, sub-quadratic policy
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, frontends, transformer
+
+PyTree = Any
+
+LONG_WINDOW = 16_384   # sliding-window size for dense/MoE archs at 500k
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def decode_window(cfg: ModelConfig, seq_len: int) -> int:
+    """Sliding-window policy for long-context decode (DESIGN.md §4).
+
+    - SSM (xlstm): no attention cache at all -> 0 (unused).
+    - MLA (deepseek-v3): the compressed latent cache is what makes 500k
+      feasible -> full cache (0 = no window).
+    - dense / other MoE / hybrid shared-attn: window of LONG_WINDOW.
+    """
+    if seq_len <= 200_000:
+        return 0
+    if cfg.kind == "xlstm" or cfg.use_mla:
+        return 0
+    return cfg.sliding_window or LONG_WINDOW
+
+
+def cache_length(cfg: ModelConfig, seq_len: int) -> int:
+    w = decode_window(cfg, seq_len)
+    return w if w > 0 else seq_len
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> bool:
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return False  # whisper (DESIGN.md §4)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig) -> PyTree:
+    if cfg.kind == "decoder":
+        return transformer.decoder_init(key, cfg)
+    if cfg.kind == "encdec":
+        return encdec.encdec_init(key, cfg)
+    if cfg.kind == "xlstm":
+        return transformer.xlstm_init(key, cfg)
+    if cfg.kind == "hybrid":
+        return transformer.hybrid_init(key, cfg)
+    raise ValueError(f"unknown model kind {cfg.kind!r}")
+
+
+def forward(
+    params: PyTree,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    window: int = 0,
+    impl: str = "xla",
+    collect_cache: bool = False,
+    remat: bool = False,
+    unroll: int = 1,
+) -> tuple[jax.Array, PyTree | None, jax.Array]:
+    kw = dict(collect_cache=collect_cache, remat=remat, unroll=unroll)
+    if cfg.kind == "decoder":
+        return transformer.decoder_forward(
+            params, cfg, batch["tokens"], media_embeds=batch.get("media"),
+            labels=batch.get("labels"), window=window, impl=impl, **kw,
+        )
+    if cfg.kind == "encdec":
+        return encdec.encdec_forward(
+            params, cfg, batch["tokens"], batch["frames"], window=window, **kw,
+        )
+    if cfg.kind == "xlstm":
+        return transformer.xlstm_forward(params, cfg, batch["tokens"], **kw)
+    if cfg.kind == "hybrid":
+        return transformer.hybrid_forward(
+            params, cfg, batch["tokens"], window=window, impl=impl, **kw,
+        )
+    raise ValueError(cfg.kind)
+
+
+def loss(params: PyTree, cfg: ModelConfig, batch: dict, *, impl: str = "xla",
+         remat: bool = False, unroll: int = 1) -> jax.Array:
+    logits, _, aux = forward(params, cfg, batch, impl=impl, remat=remat, unroll=unroll)
+    labels = batch["labels"]
+    if cfg.num_media_tokens > 0:
+        # media positions carry no labels; score token positions only
+        logits = logits[:, cfg.num_media_tokens :, :]
+    return transformer.lm_loss(logits, labels) + aux
+
+
+def decode_step(
+    params: PyTree,
+    cfg: ModelConfig,
+    token: jax.Array,
+    cache: PyTree,
+    pos: jax.Array,
+    *,
+    window: int = 0,
+    unroll: int = 1,
+) -> tuple[jax.Array, PyTree]:
+    if cfg.kind == "decoder":
+        return transformer.decoder_decode_step(
+            params, cfg, token, cache, pos, window=window, unroll=unroll)
+    if cfg.kind == "encdec":
+        return encdec.encdec_decode_step(
+            params, cfg, token, cache, pos, window=window, unroll=unroll)
+    if cfg.kind == "xlstm":
+        return transformer.xlstm_decode_step(params, cfg, token, cache, pos, unroll=unroll)
+    if cfg.kind == "hybrid":
+        return transformer.hybrid_decode_step(
+            params, cfg, token, cache, pos, window=window, unroll=unroll)
+    raise ValueError(cfg.kind)
+
+
+def cache_init(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> PyTree:
+    if cfg.kind == "decoder":
+        return transformer.decoder_cache_init(cfg, batch, cache_len, dtype)
+    if cfg.kind == "encdec":
+        return encdec.encdec_cache_init(cfg, batch, cache_len, dtype)
+    if cfg.kind == "xlstm":
+        return transformer.xlstm_cache_init(cfg, batch, dtype)
+    if cfg.kind == "hybrid":
+        return transformer.hybrid_cache_init(cfg, batch, cache_len, dtype)
+    raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs; no allocation) + synthetic batches
+# ---------------------------------------------------------------------------
+
+def _token_len(cfg: ModelConfig, seq_len: int) -> int:
+    """VLM: media embeddings occupy the first ``num_media_tokens`` positions."""
+    return seq_len - cfg.num_media_tokens
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, Any]:
+    i32 = jnp.dtype("int32")
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        st = _token_len(cfg, s)
+        specs: dict[str, Any] = {"tokens": jax.ShapeDtypeStruct((b, st), i32)}
+        if cfg.kind == "encdec":
+            specs["frames"] = frontends.frame_embeds_spec(cfg, b)
+        if cfg.num_media_tokens > 0:
+            specs["media"] = frontends.media_embeds_spec(cfg, b)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, st), i32)
+        return specs
+    # decode: one token + cache + position
+    cl = cache_length(cfg, s)
+    cache = jax.eval_shape(
+        lambda: cache_init(cfg, b, cl, jnp.dtype(cfg.param_dtype))
+    )
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), i32),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def synth_batch(key, cfg: ModelConfig, shape: InputShape) -> dict:
+    """Concrete random batch matching ``input_specs`` (CPU smoke tests)."""
+    keys = jax.random.split(key, 4)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        st = _token_len(cfg, s)
+        batch: dict = {
+            "tokens": jax.random.randint(keys[0], (b, st), 0, cfg.vocab_size, jnp.int32)
+        }
+        if cfg.kind == "encdec":
+            batch["frames"] = frontends.synth_frame_embeds(keys[1], cfg, b)
+        if cfg.num_media_tokens > 0:
+            batch["media"] = frontends.synth_media_embeds(keys[1], cfg, b)
+        if shape.kind == "train":
+            batch["labels"] = jax.random.randint(
+                keys[2], (b, st), 0, cfg.vocab_size, jnp.int32
+            )
+        return batch
+    cl = cache_length(cfg, s)
+    return {
+        "token": jax.random.randint(keys[0], (b, 1), 0, cfg.vocab_size, jnp.int32),
+        "cache": cache_init(cfg, b, cl, jnp.dtype(cfg.param_dtype)),
+        "pos": jnp.int32(s - 1),
+    }

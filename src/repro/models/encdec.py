@@ -1,0 +1,210 @@
+"""Whisper-style encoder-decoder backbone.
+
+The modality frontend (mel-spectrogram + conv feature extractor) is a STUB:
+``input_specs`` supplies precomputed frame embeddings of shape
+(batch, encoder_seq, d_model) — the sanctioned carve-out (DESIGN.md §2).
+The transformer backbone — bidirectional encoder, causal decoder with
+cross-attention — is fully implemented, with learned absolute positions and
+pre-LayerNorm blocks matching Whisper.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    embed,
+    embedding_init,
+    linear,
+    linear_init,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+    unembed,
+)
+
+PyTree = Any
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _act(cfg):
+    return jnp.dtype(cfg.activation_dtype)
+
+
+def _enc_block_init(key, cfg: ModelConfig) -> PyTree:
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": norm_init(cfg.norm_kind, cfg.d_model, dt),
+        "attn": attn.gqa_init(k1, cfg, dt),
+        "mlp_norm": norm_init(cfg.norm_kind, cfg.d_model, dt),
+        "mlp": mlp_init(k2, cfg.mlp_kind, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig) -> PyTree:
+    dt = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": norm_init(cfg.norm_kind, cfg.d_model, dt),
+        "self_attn": attn.gqa_init(k1, cfg, dt),
+        "cross_norm": norm_init(cfg.norm_kind, cfg.d_model, dt),
+        "cross_attn": attn.gqa_init(k2, cfg, dt),
+        "mlp_norm": norm_init(cfg.norm_kind, cfg.d_model, dt),
+        "mlp": mlp_init(k3, cfg.mlp_kind, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig) -> PyTree:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 6)
+    n_enc = cfg.encoder_layers or cfg.num_layers
+    enc_keys = jax.random.split(keys[0], n_enc)
+    dec_keys = jax.random.split(keys[1], cfg.num_layers)
+    return {
+        "enc_pos": (jax.random.normal(keys[2], (cfg.encoder_seq, cfg.d_model)) * 0.01).astype(dt),
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg))(enc_keys),
+        "enc_norm": norm_init(cfg.norm_kind, cfg.d_model, dt),
+        "embed": embedding_init(keys[3], cfg.vocab_size, cfg.d_model, dt),
+        "dec_pos": (
+            jax.random.normal(keys[4], (max(cfg.max_position_embeddings, 8), cfg.d_model))
+            * 0.01
+        ).astype(dt),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg))(dec_keys),
+        "final_norm": norm_init(cfg.norm_kind, cfg.d_model, dt),
+    }
+
+
+def _cross_attend(p, cfg, x, enc_k, enc_v):
+    """Cross-attention: queries from decoder stream, K/V precomputed from the
+    encoder output (cached at prefill)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(b, s, cfg.num_heads, hd)
+    y = attn._sdpa(q, enc_k, enc_v, None)
+    return linear(p["wo"], y.reshape(b, s, cfg.num_heads * hd))
+
+
+def _enc_kv(p, cfg, enc_out):
+    b, t, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = linear(p["wk"], enc_out).reshape(b, t, cfg.num_kv_heads, hd)
+    v = linear(p["wv"], enc_out).reshape(b, t, cfg.num_kv_heads, hd)
+    return k, v
+
+
+def _scan(body, carry, xs, *, remat: bool = False, unroll: int = 1):
+    if remat:
+        body = jax.checkpoint(body)
+    return jax.lax.scan(body, carry, xs, unroll=max(1, unroll))
+
+
+def encode(params: PyTree, cfg: ModelConfig, frames: jax.Array,
+           *, remat: bool = False, unroll: int = 1) -> jax.Array:
+    """frames: (B, encoder_seq, d_model) stub embeddings -> encoder output."""
+    x = frames.astype(_act(cfg)) + params["enc_pos"].astype(_act(cfg))[None]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, p):
+        h = norm_apply(cfg.norm_kind, p["attn_norm"], carry)
+        y, _ = attn.gqa_full(p["attn"], cfg, h, positions, causal=False)
+        x1 = carry + y
+        h = norm_apply(cfg.norm_kind, p["mlp_norm"], x1)
+        return x1 + mlp_apply(p["mlp"], cfg.mlp_kind, h), None
+
+    x, _ = _scan(body, x, params["enc_blocks"], remat=remat, unroll=unroll)
+    return norm_apply(cfg.norm_kind, params["enc_norm"], x)
+
+
+def encdec_forward(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    frames: jax.Array,
+    *,
+    window: int = 0,
+    collect_cache: bool = False,
+    remat: bool = False,
+    unroll: int = 1,
+) -> tuple[jax.Array, PyTree | None, jax.Array]:
+    """Teacher-forced decoder over stub audio-frame embeddings."""
+    enc_out = encode(params, cfg, frames, remat=remat, unroll=unroll)
+    x = embed(params["embed"], tokens, _act(cfg))
+    b, s, _ = x.shape
+    # Learned absolute decoder positions (whisper-style), modulo the table
+    # size so backbone-scale shapes beyond 448 positions still lower.
+    table = params["dec_pos"].astype(x.dtype)
+    pos_ids = jnp.arange(s, dtype=jnp.int32) % table.shape[0]
+    x = x + jnp.take(table, pos_ids, axis=0)[None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, p):
+        h = norm_apply(cfg.norm_kind, p["self_norm"], carry)
+        y, (sk, sv) = attn.gqa_full(p["self_attn"], cfg, h, positions, window=window)
+        x1 = carry + y
+        h = norm_apply(cfg.norm_kind, p["cross_norm"], x1)
+        ck, cv = _enc_kv(p["cross_attn"], cfg, enc_out)
+        x1 = x1 + _cross_attend(p["cross_attn"], cfg, h, ck, cv)
+        h = norm_apply(cfg.norm_kind, p["mlp_norm"], x1)
+        out = x1 + mlp_apply(p["mlp"], cfg.mlp_kind, h)
+        cache = {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv}
+        return out, cache if collect_cache else None
+
+    x, caches = _scan(body, x, params["dec_blocks"], remat=remat, unroll=unroll)
+    x = norm_apply(cfg.norm_kind, params["final_norm"], x)
+    logits = unembed(params["embed"], x)  # whisper ties decoder embeddings
+    return logits, caches, jnp.float32(0.0)
+
+
+def encdec_decode_step(
+    params: PyTree,
+    cfg: ModelConfig,
+    token: jax.Array,
+    cache: PyTree,
+    pos: jax.Array,
+    *,
+    window: int = 0,
+    unroll: int = 1,
+) -> tuple[jax.Array, PyTree]:
+    """One decoder token against cached self-KV and encoder cross-KV."""
+    x = embed(params["embed"], token, _act(cfg))
+    table = params["dec_pos"].astype(x.dtype)
+    x = x + jnp.take(table, (pos % table.shape[0])[None], axis=0)[None]
+
+    def body(carry, inp):
+        p, c = inp
+        h = norm_apply(cfg.norm_kind, p["self_norm"], carry)
+        y, (sk, sv) = attn.gqa_decode(
+            p["self_attn"], cfg, h, c["self_k"], c["self_v"], pos, window=window
+        )
+        x1 = carry + y
+        h = norm_apply(cfg.norm_kind, p["cross_norm"], x1)
+        x1 = x1 + _cross_attend(p["cross_attn"], cfg, h, c["cross_k"], c["cross_v"])
+        h = norm_apply(cfg.norm_kind, p["mlp_norm"], x1)
+        out = x1 + mlp_apply(p["mlp"], cfg.mlp_kind, h)
+        return out, {"self_k": sk, "self_v": sv, "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+    x, new_cache = _scan(body, x, (params["dec_blocks"], cache), unroll=unroll)
+    x = norm_apply(cfg.norm_kind, params["final_norm"], x)
+    return unembed(params["embed"], x), new_cache
+
+
+def encdec_cache_init(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> PyTree:
+    hd = cfg.resolved_head_dim
+    n = cfg.num_layers
+    return {
+        "self_k": jnp.zeros((n, batch, cache_len, cfg.num_kv_heads, hd), dtype),
+        "self_v": jnp.zeros((n, batch, cache_len, cfg.num_kv_heads, hd), dtype),
+        "cross_k": jnp.zeros((n, batch, cfg.encoder_seq, cfg.num_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((n, batch, cfg.encoder_seq, cfg.num_kv_heads, hd), dtype),
+    }

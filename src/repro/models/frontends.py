@@ -1,0 +1,42 @@
+"""Stub modality frontends (the sanctioned carve-out, DESIGN.md §2).
+
+``[audio]`` and ``[vlm]`` architectures specify the transformer backbone
+only; the mel-spectrogram/conv feature extractor (whisper) and ViT/SigLIP
+vision tower + projector (llava) are represented by *precomputed embedding
+inputs* of the correct shape.  This module centralises those shapes:
+ShapeDtypeStructs for the dry-run, and synthetic embedding generators for
+CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frame_embeds_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    """Whisper stub: conv-frontend output frames (B, encoder_seq, d_model)."""
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.activation_dtype)
+    )
+
+
+def media_embeds_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    """VLM stub: projected vision-tower patch embeddings (B, n_media, d)."""
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.num_media_tokens, cfg.d_model), jnp.dtype(cfg.activation_dtype)
+    )
+
+
+def synth_frame_embeds(key, cfg: ModelConfig, batch: int) -> jax.Array:
+    return jax.random.normal(
+        key, (batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.activation_dtype)
+    )
+
+
+def synth_media_embeds(key, cfg: ModelConfig, batch: int) -> jax.Array:
+    return jax.random.normal(
+        key, (batch, cfg.num_media_tokens, cfg.d_model), jnp.dtype(cfg.activation_dtype)
+    )

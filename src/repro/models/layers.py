@@ -1,0 +1,177 @@
+"""Foundational layers: norms, linear/embedding, MLPs, RoPE.
+
+Everything is functional: parameters are nested dicts of arrays, layer
+functions are pure.  Initialisers take an explicit PRNG key and a dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Gradient-dtype barrier (§Perf iteration 6)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def bf16_grad_barrier(x):
+    """Identity whose cotangent is cast to the primal dtype.
+
+    The f32 upcasts inside norm/softmax leak f32 *activation gradients* into
+    the residual stream; under SPMD those f32 tensors are what the partitioner
+    all-gathers/all-reduces (measured: f32[16,4096,7168] collectives dominate
+    deepseek-EP train).  Casting cotangents back to bf16 at block boundaries
+    halves those collective bytes — the standard mixed-precision contract
+    (bf16 activation grads, f32 only inside reductions)."""
+    return x
+
+
+def _bgb_fwd(x):
+    # residuals must be jax types: carry the dtype via a zero-size array
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _bgb_bwd(res, ct):
+    return (ct.astype(res.dtype),)
+
+
+bf16_grad_barrier.defvjp(_bgb_fwd, _bgb_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> PyTree:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: PyTree, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype) -> PyTree:
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(params: PyTree, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def norm_init(kind: str, d: int, dtype) -> PyTree:
+    return layernorm_init(d, dtype) if kind == "layernorm" else rmsnorm_init(d, dtype)
+
+
+def norm_apply(kind: str, params: PyTree, x: jax.Array) -> jax.Array:
+    return layernorm(params, x) if kind == "layernorm" else rmsnorm(params, x)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> PyTree:
+    scale = 1.0 / np.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def linear(params: PyTree, x: jax.Array) -> jax.Array:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def embedding_init(key, vocab: int, d: int, dtype) -> PyTree:
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(params: PyTree, ids: jax.Array, dtype=None) -> jax.Array:
+    table = params["table"]
+    out = jnp.take(table, ids, axis=0)
+    return out.astype(dtype) if dtype is not None else out
+
+
+def unembed(params: PyTree, x: jax.Array) -> jax.Array:
+    """Project back to vocab; computed in f32 for a stable softmax."""
+    return x.astype(jnp.float32) @ params["table"].astype(jnp.float32).T
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, kind: str, d_model: int, d_ff: int, dtype) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": linear_init(k1, d_model, d_ff, dtype),
+            "w_up": linear_init(k2, d_model, d_ff, dtype),
+            "w_down": linear_init(k3, d_ff, d_model, dtype),
+        }
+    if kind == "gelu":
+        return {
+            "w_in": linear_init(k1, d_model, d_ff, dtype, bias=True),
+            "w_out": linear_init(k2, d_ff, d_model, dtype, bias=True),
+        }
+    raise ValueError(f"unknown mlp kind {kind!r}")
+
+
+def mlp_apply(params: PyTree, kind: str, x: jax.Array) -> jax.Array:
+    if kind == "swiglu":
+        g = jax.nn.silu(linear(params["w_gate"], x))
+        return linear(params["w_down"], g * linear(params["w_up"], x))
+    if kind == "geglu":
+        g = jax.nn.gelu(linear(params["w_gate"], x), approximate=True)
+        return linear(params["w_down"], g * linear(params["w_up"], x))
+    if kind == "gelu":
+        h = jax.nn.gelu(linear(params["w_in"], x), approximate=True)
+        return linear(params["w_out"], h)
+    raise ValueError(f"unknown mlp kind {kind!r}")
+
+
+def mlp_flops(kind: str, d_model: int, d_ff: int) -> int:
+    """Matmul FLOPs per token (multiply-adds x2)."""
+    mats = 3 if kind in ("swiglu", "geglu") else 2
+    return 2 * mats * d_model * d_ff
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for ``positions`` — shapes (..., head_dim // 2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs (x_even, x_odd).  x: (..., seq, heads, head_dim);
+    cos/sin: (..., seq, half) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over head axis
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)

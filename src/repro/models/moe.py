@@ -1,0 +1,129 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded expert FFNs.
+
+Dispatch is sort-based (MegaBlocks-style) rather than one-hot-einsum
+(GShard-style): token->expert assignments are ranked inside each expert via an
+argsort + offset subtraction, then scattered into a dense (E, C, d) buffer.
+This avoids ever materialising the (T, E, C) dispatch tensor — at
+train_4k scale (T=1M tokens, E=256) that tensor would be terabytes — while
+remaining fully static-shaped and pjit-shardable: the buffer's E axis is
+sharded over the ``model`` mesh axis (expert parallelism), so the scatter
+lowers to the MoE all-to-all.
+
+Supports softmax and sigmoid (deepseek-v3) router scores, shared experts,
+top-k weight renormalisation, and the standard load-balance auxiliary loss.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import linear_init, mlp_apply, mlp_init
+
+PyTree = Any
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> PyTree:
+    k_r, k_e, k_s = jax.random.split(key, 3)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(k_e, 3)
+    scale_in = 1.0 / jnp.sqrt(jnp.float32(d))
+    scale_out = 1.0 / jnp.sqrt(jnp.float32(f))
+    p: PyTree = {
+        "router": linear_init(k_r, d, e, dtype),
+        "experts": {
+            "w_gate": (jax.random.normal(ks[0], (e, d, f)) * scale_in).astype(dtype),
+            "w_up": (jax.random.normal(ks[1], (e, d, f)) * scale_in).astype(dtype),
+            "w_down": (jax.random.normal(ks[2], (e, f, d)) * scale_out).astype(dtype),
+        },
+    }
+    if cfg.num_shared_experts > 0:
+        p["shared"] = mlp_init(
+            k_s, cfg.mlp_kind, d, cfg.moe_d_ff * cfg.num_shared_experts, dtype
+        )
+    return p
+
+
+def _capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    c = int(num_tokens * cfg.num_experts_per_tok * cfg.capacity_factor) // cfg.num_experts
+    return max(c, 1)
+
+
+def moe_apply(params: PyTree, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    Under ``moe_ep.expert_parallel(mesh)`` this dispatches to the explicit
+    shard_map expert-parallel path (see moe_ep.py for why)."""
+    from repro.models import moe_ep
+
+    if moe_ep.ep_enabled():
+        return moe_ep.moe_apply_ep(params, cfg, x)
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.num_experts_per_tok
+    e = cfg.num_experts
+    cap = _capacity(t, cfg)
+    xf = x.reshape(t, d)
+
+    # --- Router -----------------------------------------------------------
+    logits = (xf @ params["router"]["w"].astype(xf.dtype)).astype(jnp.float32)
+    if cfg.router_score == "sigmoid":            # deepseek-v3
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(scores, k)          # (T, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- Load-balance auxiliary loss (Switch/GShard form) -------------------
+    probs_mean = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)            # (E,)
+    counts = jnp.zeros((e,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0)
+    frac = counts / (t * k)
+    aux_loss = e * jnp.sum(frac * probs_mean) * cfg.aux_loss_weight
+
+    # --- Sort-based dispatch ------------------------------------------------
+    flat_expert = expert_idx.reshape(-1)                      # (T*k,)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    # rank within expert = index-in-sorted − start offset of that expert
+    start = jnp.cumsum(jnp.bincount(flat_expert, length=e)) - jnp.bincount(
+        flat_expert, length=e
+    )
+    rank_sorted = jnp.arange(t * k) - start[sorted_expert]
+    slot_sorted = jnp.where(
+        rank_sorted < cap, sorted_expert * cap + rank_sorted, e * cap
+    )  # overflow tokens -> dropped sentinel slot
+    slots = jnp.zeros((t * k,), jnp.int32).at[order].set(slot_sorted.astype(jnp.int32))
+
+    token_idx = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e * cap + 1, d), dtype=x.dtype)
+    buf = buf.at[slots].set(xf[token_idx], mode="drop")
+    expert_in = buf[: e * cap].reshape(e, cap, d)
+
+    # --- Expert FFNs (batched over the expert axis; shardable on E) --------
+    ew = params["experts"]
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, ew["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", expert_in, ew["w_up"].astype(x.dtype))
+    expert_out = jnp.einsum("ecf,efd->ecd", g * u, ew["w_down"].astype(x.dtype))
+
+    # --- Combine ------------------------------------------------------------
+    out_buf = jnp.concatenate(
+        [expert_out.reshape(e * cap, d), jnp.zeros((1, d), x.dtype)], axis=0
+    )
+    gathered = out_buf[slots]                                  # (T*k, d)
+    weighted = gathered * gate_vals.reshape(-1)[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[token_idx].add(weighted)
+
+    if cfg.num_shared_experts > 0:
+        y = y + mlp_apply(params["shared"], cfg.mlp_kind, xf)
+    return y.reshape(b, s, d), aux_loss
+
+
+def moe_flops_per_token(cfg: ModelConfig) -> int:
+    """Active matmul FLOPs per token (routed top-k x capacity + shared)."""
+    routed = 2 * 3 * cfg.d_model * cfg.moe_d_ff * cfg.num_experts_per_tok
+    shared = 2 * 3 * cfg.d_model * cfg.moe_d_ff * cfg.num_shared_experts
+    router = 2 * cfg.d_model * cfg.num_experts
+    return int(routed * cfg.capacity_factor + shared + router)

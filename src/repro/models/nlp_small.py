@@ -1,0 +1,82 @@
+"""The paper's language-modality model (Appendix A, Fig. 5): a small
+transformer *classifier* — AGNews / SogouNews are 4/5-way classification
+tasks.  Embedding + learned positions, N pre-LN encoder blocks, mean-pool,
+linear classifier head.
+
+Parameters are unstacked (``blocks/{i}/...``) so FedPart partitions per
+block: #1 = embedding(+positions), #2..#N+1 = blocks, #last = classifier.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    embed,
+    embedding_init,
+    linear,
+    linear_init,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+)
+
+PyTree = Any
+
+
+def nlp_init(key, cfg: ModelConfig, num_classes: int) -> PyTree:
+    dt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    params: PyTree = {
+        "embed": {
+            **embedding_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+            "pos": (
+                jax.random.normal(keys[1], (cfg.max_position_embeddings, cfg.d_model)) * 0.01
+            ).astype(dt),
+        },
+        "blocks": {},
+        "head": {
+            "norm": norm_init(cfg.norm_kind, cfg.d_model, dt),
+            "fc": linear_init(keys[2], cfg.d_model, num_classes, dt, bias=True),
+        },
+    }
+    for i in range(cfg.num_layers):
+        k1, k2 = jax.random.split(keys[3 + i])
+        params["blocks"][str(i)] = {
+            "attn_norm": norm_init(cfg.norm_kind, cfg.d_model, dt),
+            "attn": attn.gqa_init(k1, cfg, dt),
+            "mlp_norm": norm_init(cfg.norm_kind, cfg.d_model, dt),
+            "mlp": mlp_init(k2, cfg.mlp_kind, cfg.d_model, cfg.d_ff, dt),
+        }
+    return params
+
+
+def nlp_apply(params: PyTree, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    """tokens: (B, S) -> class logits (B, num_classes)."""
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens)
+    x = x + params["embed"]["pos"][None, :s, :].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    for i in range(cfg.num_layers):
+        p = params["blocks"][str(i)]
+        h = norm_apply(cfg.norm_kind, p["attn_norm"], x)
+        y, _ = attn.gqa_full(p["attn"], cfg, h, positions, causal=False)
+        x = x + y
+        h = norm_apply(cfg.norm_kind, p["mlp_norm"], x)
+        x = x + mlp_apply(p["mlp"], cfg.mlp_kind, h)
+    x = norm_apply(cfg.norm_kind, params["head"]["norm"], jnp.mean(x, axis=1))
+    return linear(params["head"]["fc"], x)
+
+
+def nlp_group_key(path: tuple[str, ...]) -> tuple:
+    if path[0] == "embed":
+        return ("embed",)
+    if path[0] == "head":
+        return ("head",)
+    return ("block", "blocks", int(path[1]))

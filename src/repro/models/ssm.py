@@ -1,0 +1,415 @@
+"""State-space and recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM / sLSTM).
+
+A single chunked decay-weighted linear-attention engine
+(``chunked_decay_attention``) implements the shared recurrence
+
+    S_t = a_t * S_{t-1} + k_t ⊗ v_t          y_t = q_t · S_t
+
+in chunk-parallel form: heavy matmuls live *outside* the chunk scan (so the
+compiled HLO's FLOPs are visible to ``cost_analysis`` instead of hidden in a
+loop body), and only the O(H·N·P) state crosses chunk boundaries.  Mamba2
+(a = exp(-Δ·exp(A_log)), k = B, q = C, v = Δ·x) and mLSTM (a = σ(f), k, q
+from projections, v scaled by the input gate) both lower onto it.
+
+sLSTM keeps its true sequential recurrence (h_{t-1} feeds the gates) and runs
+as a ``lax.scan`` over time with the standard m-stabiliser.
+
+TPU note (DESIGN.md §6): xLSTM's exponential input gate is stabilised here by
+clipping the exponent rather than the per-step max-stabiliser state of the
+original CUDA implementation — the stabiliser's per-position rescaling has no
+chunk-parallel form, and the clipped gate keeps the chunked forward exactly
+consistent with the recurrent decode (asserted in tests).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import linear, linear_init, rmsnorm, rmsnorm_init
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Generic chunked decay attention
+# ---------------------------------------------------------------------------
+
+def chunked_decay_attention(
+    q: jax.Array,        # (B, S, H, N)
+    k: jax.Array,        # (B, S, H, N)
+    v: jax.Array,        # (B, S, H, P)
+    log_a: jax.Array,    # (B, S, H) — per-step decay logs, <= 0
+    chunk: int,
+    init_state: jax.Array | None = None,   # (B, H, N, P)
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y: (B,S,H,P), final_state: (B,H,N,P))."""
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:])
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    la = to_chunks(log_a).astype(jnp.float32)                 # (b,nc,Q,h)
+    cum = jnp.cumsum(la, axis=2)                              # inclusive
+    total = cum[:, :, -1:, :]                                 # (b,nc,1,h)
+
+    # Intra-chunk: scores[i,j] = (q_i·k_j)·exp(cum_i − cum_j), causal i>=j.
+    qk = jnp.einsum("bcqhn,bcthn->bcqth", qc, kc)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])   # (b,c,q,t,h)
+    causal = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    w = qk.astype(jnp.float32) * decay * causal[None, None, :, :, None]
+    y_intra = jnp.einsum("bcqth,bcthp->bcqhp", w.astype(v.dtype), vc)
+
+    # Per-chunk state contribution: S_c = Σ_t exp(total − cum_t)·k_t ⊗ v_t
+    kw = kc.astype(jnp.float32) * jnp.exp(total - cum)[..., None]
+    s_c = jnp.einsum("bcthn,bcthp->bchnp", kw.astype(v.dtype), vc)
+
+    # Inter-chunk recurrence over nc (only the state crosses the scan).
+    a_tot = jnp.exp(total[:, :, 0, :])                        # (b,nc,h)
+    s0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((b, h, n, p), v.dtype)
+    )
+
+    def step(carry, inp):
+        a_c, s_chunk = inp                                    # (b,h), (b,h,n,p)
+        prev = carry
+        new = a_c[..., None, None].astype(carry.dtype) * carry + s_chunk
+        return new, prev
+
+    final, s_prev = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(a_tot, 1, 0), jnp.moveaxis(s_c, 1, 0)),
+    )
+    s_prev = jnp.moveaxis(s_prev, 0, 1)                       # (b,nc,h,n,p)
+
+    y_inter = jnp.einsum(
+        "bcqhn,bchnp,bcqh->bcqhp",
+        qc,
+        s_prev,
+        jnp.exp(cum).astype(v.dtype),
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final
+
+
+def decay_attention_step(
+    q: jax.Array,        # (B, H, N)
+    k: jax.Array,        # (B, H, N)
+    v: jax.Array,        # (B, H, P)
+    a: jax.Array,        # (B, H) decay in (0,1]
+    state: jax.Array,    # (B, H, N, P)
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token recurrence (decode): O(H·N·P) per step."""
+    new_state = a[..., None, None] * state + k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", q, new_state)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    hdim = cfg.ssm_head_dim or 64
+    heads = cfg.ssm_num_heads or d_inner // hdim
+    n = cfg.ssm_state_dim or 64
+    return d_inner, heads, hdim, n
+
+
+CONV_W = 4  # causal depthwise conv width
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype) -> PyTree:
+    d_inner, heads, hdim, n = _mamba_dims(cfg)
+    conv_dim = d_inner + 2 * n
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * n + heads   # z, x, B, C, dt
+    return {
+        "in_proj": linear_init(ks[0], cfg.d_model, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_W, conv_dim)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.zeros((heads,), jnp.float32),            # A = -exp(a_log) = -1
+        "dt_bias": jnp.full((heads,), -2.0, jnp.float32),     # softplus ≈ 0.12
+        "d_skip": jnp.ones((heads,), dtype),
+        "out_norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": linear_init(ks[2], d_inner, cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  seq: (B,S,C); w: (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(seq)
+    for i in range(width):
+        out = out + pad[:, i : i + seq.shape[1], :] * w[i]
+    return out + b
+
+
+def _mamba_heads(cfg, xbc, d_inner, heads, hdim, n):
+    xs = xbc[..., :d_inner]
+    bmat = xbc[..., d_inner : d_inner + n]
+    cmat = xbc[..., d_inner + n :]
+    return xs, bmat, cmat
+
+
+def mamba2_forward(
+    params: PyTree, cfg: ModelConfig, x: jax.Array
+) -> tuple[jax.Array, PyTree]:
+    """Full-sequence Mamba2.  Returns (y, cache) where cache holds the final
+    SSM state and conv tail (for chunked prefill continuation)."""
+    b, s, _ = x.shape
+    d_inner, heads, hdim, n = _mamba_dims(cfg)
+    zxbcdt = linear(params["in_proj"], x)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + d_inner + 2 * n]
+    dt_raw = zxbcdt[..., -heads:]
+
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype)))
+    xs, bmat, cmat = _mamba_heads(cfg, xbc, d_inner, heads, hdim, n)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])   # (b,s,h)
+    a = -jnp.exp(params["a_log"])                                          # (h,)
+    log_decay = dt * a                                                     # <= 0
+    xh = xs.reshape(b, s, heads, hdim)
+    v = xh * dt[..., None].astype(x.dtype)
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, s, heads, n))
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, s, heads, n))
+
+    y, state = chunked_decay_attention(q, k, v, log_decay, cfg.ssm_chunk)
+    y = y + xh * params["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z))
+    y = linear(params["out_proj"], y)
+    cache = {
+        "state": state,                                   # (b,h,n,p)
+        "conv": jnp.pad(
+            zxbcdt[..., d_inner : d_inner + d_inner + 2 * n],
+            ((0, 0), (CONV_W - 1, 0), (0, 0)),
+        )[:, -(CONV_W - 1) :, :],                         # last W-1 pre-conv inputs
+    }
+    return y, cache
+
+
+def mamba2_decode(
+    params: PyTree, cfg: ModelConfig, x: jax.Array, cache: PyTree
+) -> tuple[jax.Array, PyTree]:
+    """One-token step.  x: (B,1,d); cache: {state (b,h,n,p), conv (b,W-1,c)}."""
+    b = x.shape[0]
+    d_inner, heads, hdim, n = _mamba_dims(cfg)
+    zxbcdt = linear(params["in_proj"], x)
+    z = zxbcdt[..., :d_inner]
+    xbc_new = zxbcdt[:, 0, d_inner : d_inner + d_inner + 2 * n]            # (b,c)
+    dt_raw = zxbcdt[..., -heads:]
+
+    conv_in = jnp.concatenate([cache["conv"], xbc_new[:, None, :]], axis=1)  # (b,W,c)
+    w = params["conv_w"].astype(x.dtype)
+    xbc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", conv_in, w) + params["conv_b"].astype(x.dtype)
+    )
+    xs, bmat, cmat = _mamba_heads(cfg, xbc, d_inner, heads, hdim, n)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (b,h)
+    a = jnp.exp(dt * -jnp.exp(params["a_log"]))
+    xh = xs.reshape(b, heads, hdim)
+    v = xh * dt[..., None].astype(x.dtype)
+    k = jnp.broadcast_to(bmat[:, None, :], (b, heads, n))
+    q = jnp.broadcast_to(cmat[:, None, :], (b, heads, n))
+    y, state = decay_attention_step(q, k, v, a.astype(x.dtype), cache["state"])
+    y = y + xh * params["d_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, 1, d_inner)
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z))
+    y = linear(params["out_proj"], y)
+    return y, {"state": state, "conv": conv_in[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig, dtype) -> PyTree:
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    hdim = cfg.ssm_head_dim or 64
+    heads = d_inner // hdim
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": linear_init(ks[0], d, 2 * d_inner, dtype),   # x-branch, z-gate
+        "wq": linear_init(ks[1], d_inner, d_inner, dtype),
+        "wk": linear_init(ks[2], d_inner, d_inner, dtype),
+        "wv": linear_init(ks[3], d_inner, d_inner, dtype),
+        "w_i": linear_init(ks[4], d_inner, heads, dtype, bias=True),
+        "w_f": linear_init(ks[5], d_inner, heads, dtype, bias=True),
+        "out_norm": rmsnorm_init(d_inner, dtype),
+        "down_proj": linear_init(ks[6], d_inner, d, dtype),
+    }
+
+
+def _mlstm_qkv(params, cfg, xb):
+    d_inner = xb.shape[-1]
+    hdim = cfg.ssm_head_dim or 64
+    heads = d_inner // hdim
+    shp = (*xb.shape[:-1], heads, hdim)
+    q = linear(params["wq"], xb).reshape(shp)
+    k = linear(params["wk"], xb).reshape(shp) / jnp.sqrt(jnp.float32(hdim)).astype(xb.dtype)
+    v = linear(params["wv"], xb).reshape(shp)
+    i_raw = linear(params["w_i"], xb).astype(jnp.float32)
+    f_raw = linear(params["w_f"], xb).astype(jnp.float32)
+    return q, k, v, i_raw, f_raw, heads, hdim
+
+
+def mlstm_forward(
+    params: PyTree, cfg: ModelConfig, x: jax.Array
+) -> tuple[jax.Array, PyTree]:
+    b, s, d = x.shape
+    up = linear(params["up_proj"], x)
+    d_inner = up.shape[-1] // 2
+    xb, z = up[..., :d_inner], up[..., d_inner:]
+    q, k, v, i_raw, f_raw, heads, hdim = _mlstm_qkv(params, cfg, xb)
+    # Exponential input gate, clipped for stability.  The original CUDA
+    # implementation keeps a per-step max-stabiliser state m_t; that form is
+    # causal but not expressible in chunk-parallel linear attention without
+    # per-position rescaling, so we clip the exponent instead — exactly
+    # consistent between the chunked forward and the recurrent decode
+    # (DESIGN.md §6; asserted by tests/test_decode_consistency.py).
+    i_gate = jnp.exp(jnp.minimum(i_raw, 8.0))                  # (b,s,h)
+    log_f = jax.nn.log_sigmoid(f_raw)                          # <= 0
+    v_scaled = v * i_gate[..., None].astype(v.dtype)
+    y, state = chunked_decay_attention(q, k, v_scaled, log_f, cfg.ssm_chunk)
+    # Normaliser: same recurrence with v ≡ 1  ->  n_t·q_t
+    ones = jnp.ones((b, s, heads, 1), v.dtype) * i_gate[..., None].astype(v.dtype)
+    norm, n_state = chunked_decay_attention(q, k, ones, log_f, cfg.ssm_chunk)
+    denom = jnp.maximum(jnp.abs(norm[..., 0]), 1.0)[..., None]
+    h = (y / denom).reshape(b, s, d_inner)
+    h = rmsnorm(params["out_norm"], h) * jax.nn.silu(z)
+    out = linear(params["down_proj"], h)
+    cache = {"state": state, "n_state": n_state}
+    return out, cache
+
+
+def mlstm_decode(
+    params: PyTree, cfg: ModelConfig, x: jax.Array, cache: PyTree
+) -> tuple[jax.Array, PyTree]:
+    b = x.shape[0]
+    up = linear(params["up_proj"], x)
+    d_inner = up.shape[-1] // 2
+    xb, z = up[:, 0, :d_inner], up[:, 0, d_inner:]
+    q, k, v, i_raw, f_raw, heads, hdim = _mlstm_qkv(params, cfg, xb)
+    i_gate = jnp.exp(jnp.minimum(i_raw, 8.0))
+    f_gate = jax.nn.sigmoid(f_raw)
+    v_scaled = v * i_gate[..., None].astype(v.dtype)
+    y, state = decay_attention_step(
+        q, k, v_scaled, f_gate.astype(v.dtype), cache["state"]
+    )
+    ones = jnp.ones((b, heads, 1), v.dtype) * i_gate[..., None].astype(v.dtype)
+    norm, n_state = decay_attention_step(
+        q, k, ones, f_gate.astype(v.dtype), cache["n_state"]
+    )
+    denom = jnp.maximum(jnp.abs(norm[..., 0]), 1.0)[..., None]
+    h = (y / denom).reshape(b, 1, d_inner)
+    h = rmsnorm(params["out_norm"], h) * jax.nn.silu(z)[:, None, :]
+    out = linear(params["down_proj"], h)
+    return out, {"state": state, "n_state": n_state}
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch: int, dtype) -> PyTree:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    hdim = cfg.ssm_head_dim or 64
+    heads = d_inner // hdim
+    return {
+        "state": jnp.zeros((batch, heads, hdim, hdim), dtype),
+        "n_state": jnp.zeros((batch, heads, hdim, 1), dtype),
+    }
+
+
+def mamba2_cache_init(cfg: ModelConfig, batch: int, dtype) -> PyTree:
+    d_inner, heads, hdim, n = _mamba_dims(cfg)
+    return {
+        "state": jnp.zeros((batch, heads, n, hdim), dtype),
+        "conv": jnp.zeros((batch, CONV_W - 1, d_inner + 2 * n), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (true recurrence, lax.scan over time)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig, dtype) -> PyTree:
+    d = cfg.d_model
+    hdim = cfg.ssm_head_dim or 64
+    heads = d // hdim
+    ks = jax.random.split(key, 3)
+    # 4 gates (z, i, f, o), input + block-diagonal recurrent weights per head
+    return {
+        "w_x": linear_init(ks[0], d, 4 * d, dtype, bias=True),
+        "r_h": (jax.random.normal(ks[1], (heads, hdim, 4 * hdim)) * (1.0 / jnp.sqrt(jnp.float32(hdim)))).astype(dtype),
+        "out_norm": rmsnorm_init(d, dtype),
+        "out_proj": linear_init(ks[2], d, d, dtype),
+    }
+
+
+def slstm_forward(
+    params: PyTree, cfg: ModelConfig, x: jax.Array, init: PyTree | None = None
+) -> tuple[jax.Array, PyTree]:
+    """Sequential sLSTM with exp-gating m-stabiliser.  x: (B,S,d)."""
+    b, s, d = x.shape
+    hdim = cfg.ssm_head_dim or 64
+    heads = d // hdim
+    gx = linear(params["w_x"], x)                              # (b,s,4d)
+    state = init if init is not None else slstm_cache_init_shapes(b, heads, hdim, x.dtype)
+
+    r_h = params["r_h"].astype(x.dtype)
+
+    def step(carry, g_t):
+        c, n, h, m = carry                                     # (b,heads,hdim)...
+        rec = jnp.einsum("bhp,hpq->bhq", h, r_h)               # (b,heads,4*hdim)
+        g = g_t.reshape(b, heads, 4, hdim) + rec.reshape(b, heads, 4, hdim)
+        z_t = jnp.tanh(g[:, :, 0])
+        i_t = g[:, :, 1].astype(jnp.float32)
+        f_t = g[:, :, 2].astype(jnp.float32)
+        o_t = jax.nn.sigmoid(g[:, :, 3])
+        log_f = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(log_f + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c_new = f_p.astype(x.dtype) * c + i_p.astype(x.dtype) * z_t
+        n_new = f_p.astype(x.dtype) * n + i_p.astype(x.dtype)
+        h_new = o_t * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    (c, n, h, m), hs = jax.lax.scan(step, state, jnp.moveaxis(gx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)
+    y = linear(params["out_proj"], rmsnorm(params["out_norm"], y))
+    return y, (c, n, h, m)
+
+
+def slstm_decode(
+    params: PyTree, cfg: ModelConfig, x: jax.Array, cache: PyTree
+) -> tuple[jax.Array, PyTree]:
+    y, new = slstm_forward(params, cfg, x, init=cache)
+    return y, new
+
+
+def slstm_cache_init_shapes(b, heads, hdim, dtype):
+    z = jnp.zeros((b, heads, hdim), dtype)
+    m = jnp.full((b, heads, hdim), -30.0, jnp.float32)
+    return (z, z, z, m)
+
+
+def slstm_cache_init(cfg: ModelConfig, batch: int, dtype) -> PyTree:
+    d = cfg.d_model
+    hdim = cfg.ssm_head_dim or 64
+    heads = d // hdim
+    return slstm_cache_init_shapes(batch, heads, hdim, dtype)

@@ -1,0 +1,3 @@
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update  # noqa: F401
+from repro.optim.sgd import SGDConfig, SGDState, sgd_init, sgd_update  # noqa: F401
+from repro.optim.partial import full_step, masked_step, partitioned_step  # noqa: F401

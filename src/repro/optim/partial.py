@@ -1,0 +1,82 @@
+"""Partial (FedPart) optimizer: gradients and optimizer state exist only for
+the round's trainable group.
+
+Two mathematically equivalent realisations (asserted equal in
+``tests/test_partial_equivalence.py``):
+
+* ``masked_step``      — paper Eq. 1 literally: full gradient, multiplied by
+  the binary mask S.  Reference semantics; wasteful.
+* ``partitioned_step`` — gradients w.r.t. the pruned trainable subtree only,
+  frozen remainder closed over as constants.  XLA prunes the dead backward
+  graph; Adam m/v are allocated for the subtree only.  This is what the
+  framework runs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.core import masking
+from repro.core.partition import Partition
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+
+PyTree = Any
+
+
+def masked_step(
+    loss_fn: Callable[[PyTree], jax.Array],
+    params: PyTree,
+    opt_state: AdamState,
+    mask: PyTree,
+    cfg: AdamConfig,
+) -> tuple[PyTree, AdamState, jax.Array]:
+    """Eq. 1: w ← w − γ·S⊙update(∇L).  Full-tree gradient, masked update."""
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    grads = masking.apply_mask(grads, mask)
+    new_params, new_state = adam_update(grads, opt_state, params, cfg)
+    # Mask the parameter delta too: Adam's bias correction would otherwise
+    # move frozen params through stale m/v.
+    new_params = jax.tree.map(
+        lambda n, o, m: jax.numpy.where(m, n, o), new_params, params, mask
+    )
+    return new_params, new_state, loss
+
+
+def partitioned_step(
+    loss_fn: Callable[[PyTree], jax.Array],
+    params: PyTree,
+    partition: Partition,
+    group: int,
+    opt_state: AdamState | None,
+    cfg: AdamConfig,
+) -> tuple[PyTree, AdamState, jax.Array]:
+    """Gradient w.r.t. the trainable subtree only; merge back after update.
+
+    ``opt_state`` is over the *subtree* (None -> freshly initialised), so m/v
+    memory is 1/M of the full model.
+    """
+    trainable = masking.select(params, partition, group)
+    frozen = masking.complement(params, partition, group)
+
+    def sub_loss(sub):
+        return loss_fn(masking.merge(sub, frozen))
+
+    loss, grads = jax.value_and_grad(sub_loss)(trainable)
+    if opt_state is None:
+        opt_state = adam_init(trainable)
+    new_sub, new_state = adam_update(grads, opt_state, trainable, cfg)
+    return masking.merge(new_sub, frozen), new_state, loss
+
+
+def full_step(
+    loss_fn: Callable[[PyTree], jax.Array],
+    params: PyTree,
+    opt_state: AdamState,
+    cfg: AdamConfig,
+) -> tuple[PyTree, AdamState, jax.Array]:
+    """FNU step (FedAvg baseline)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_params, new_state = adam_update(grads, opt_state, params, cfg)
+    return new_params, new_state, loss

@@ -1,0 +1,40 @@
+"""SGD (+momentum) — used for DLG privacy experiments and ablations."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 0.01
+    momentum: float = 0.0
+
+
+class SGDState(NamedTuple):
+    velocity: PyTree
+
+
+def sgd_init(params: PyTree) -> SGDState:
+    return SGDState(
+        velocity=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    )
+
+
+def sgd_update(
+    grads: PyTree, state: SGDState, params: PyTree, cfg: SGDConfig
+) -> tuple[PyTree, SGDState]:
+    def upd(g, v, p):
+        v_new = cfg.momentum * v + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * v_new).astype(p.dtype), v_new
+
+    out = jax.tree.map(upd, grads, state.velocity, params)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, SGDState(velocity=new_v)

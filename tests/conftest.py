@@ -1,0 +1,37 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches see 1 device; only
+# launch/dryrun.py (run as its own process) forces 512 host devices.
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)
+
+
+def small_params(key=None):
+    """A small transformer-shaped pytree used across partition tests."""
+    key = key if key is not None else jax.random.key(0)
+    ks = jax.random.split(key, 8)
+    return {
+        "embed": {"table": jax.random.normal(ks[0], (32, 16))},
+        "blocks": {
+            "0": {"attn": {"wq": {"w": jax.random.normal(ks[1], (16, 16))},
+                           "wo": {"w": jax.random.normal(ks[2], (16, 16))}},
+                  "norm": {"scale": jnp.ones(16)}},
+            "1": {"attn": {"wq": {"w": jax.random.normal(ks[3], (16, 16))},
+                           "wo": {"w": jax.random.normal(ks[4], (16, 16))}},
+                  "norm": {"scale": jnp.ones(16)}},
+            "2": {"attn": {"wq": {"w": jax.random.normal(ks[5], (16, 16))},
+                           "wo": {"w": jax.random.normal(ks[6], (16, 16))}},
+                  "norm": {"scale": jnp.ones(16)}},
+        },
+        "head": {"w": jax.random.normal(ks[7], (16, 8)), "b": jnp.zeros(8)},
+    }
+
+
+@pytest.fixture
+def params():
+    return small_params()

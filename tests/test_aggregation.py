@@ -1,0 +1,58 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, masking
+from repro.core.partition import build_partition
+from repro.models import resnet
+from tests.conftest import small_params
+
+
+def test_mean_of_identical_models_is_identity(params):
+    out = aggregation.tree_mean([params, params, params])
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_weighted_mean():
+    a = {"w": jnp.zeros(4)}
+    b = {"w": jnp.ones(4)}
+    out = aggregation.tree_mean([a, b], weights=[1, 3])
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.75)
+
+
+def test_partial_aggregate_touches_only_group(params):
+    part = build_partition(params)
+    clients = []
+    for i in range(3):
+        c = jax.tree.map(lambda x: x + 1.0 + i, params)
+        clients.append(masking.select(c, part, 1))
+    new = aggregation.aggregate_partial(params, clients)
+    for (path, old), (_, nw) in zip(
+        jax.tree_util.tree_flatten_with_path(params)[0],
+        jax.tree_util.tree_flatten_with_path(new)[0],
+    ):
+        ps = "/".join(str(getattr(k, "key", k)) for k in path)
+        if part.group_of(ps) == 1:
+            np.testing.assert_allclose(np.asarray(nw), np.asarray(old) + 2.0,
+                                       rtol=1e-5, atol=1e-6)
+        else:
+            np.testing.assert_array_equal(np.asarray(nw), np.asarray(old))
+
+
+def test_bn_stats_never_aggregated():
+    p = resnet.resnet_init(jax.random.key(0), resnet.RESNET8, 4)
+    client = jax.tree.map(lambda x: x + 1.0, p)
+    new = aggregation.aggregate_full(p, [client, client])
+    flat_old = jax.tree_util.tree_flatten_with_path(p)[0]
+    flat_new = jax.tree_util.tree_flatten_with_path(new)[0]
+    saw_stat = False
+    for (path, old), (_, nw) in zip(flat_old, flat_new):
+        ps = "/".join(str(getattr(k, "key", k)) for k in path)
+        if aggregation.is_local_stat(ps):
+            saw_stat = True
+            np.testing.assert_array_equal(np.asarray(nw), np.asarray(old))
+        else:
+            np.testing.assert_allclose(np.asarray(nw), np.asarray(old) + 1.0, rtol=1e-5)
+    assert saw_stat

@@ -1,0 +1,27 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (load_checkpoint, load_pytree, save_checkpoint,
+                              save_pytree)
+from tests.conftest import small_params
+
+
+def test_pytree_roundtrip(tmp_path):
+    params = small_params()
+    path = str(tmp_path / "params.npz")
+    save_pytree(path, params)
+    restored = load_pytree(path)
+    flat_a = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_b = jax.tree_util.tree_flatten_with_path(restored)[0]
+    assert len(flat_a) == len(flat_b)
+    for (pa, a), (pb, b) in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+
+def test_checkpoint_with_state(tmp_path):
+    params = {"w": jnp.arange(6.0).reshape(2, 3)}
+    save_checkpoint(str(tmp_path / "ckpt"), params, {"round": 7, "acc": 0.5})
+    p, state = load_checkpoint(str(tmp_path / "ckpt"))
+    np.testing.assert_array_equal(p["w"], np.arange(6.0).reshape(2, 3))
+    assert state["round"] == 7

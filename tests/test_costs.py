@@ -1,0 +1,76 @@
+import numpy as np
+import pytest
+
+from repro.core import costs
+from repro.core.partition import Partition
+from repro.core.schedule import FedPartSchedule, FNUSchedule
+
+
+def uniform_partition(m: int) -> Partition:
+    keys = tuple(("block", "blocks", i) for i in range(m))
+    # one synthetic path per group
+    assignment = {f"blocks/{i}/w": i for i in range(m)}
+    return Partition(group_keys=keys, assignment=assignment)
+
+
+def uniform_params(m: int, n: int = 64):
+    import jax.numpy as jnp
+
+    return {"blocks": {str(i): {"w": jnp.ones((n,), jnp.float32)} for i in range(m)}}
+
+
+def test_eq5_comm_ratio_partial_rounds():
+    """Eq. 5: a full cycle of partial rounds moves 1/M of FNU bytes."""
+    m = 8
+    params = uniform_params(m)
+    part = uniform_partition(m)
+    sched = FedPartSchedule(num_groups=m, warmup_rounds=0, rounds_per_layer=1,
+                            cycles=1)
+    report = costs.comm_cost(params, part, sched.rounds())
+    assert report.ratio_to_fnu == pytest.approx(1.0 / m)
+
+
+def test_eq6_paper_compute_ratio_asymptote():
+    """Paper Eq. 6 bookkeeping -> 2/3 for large M; ours (truncated) -> 1/2."""
+    m = 400
+    part = uniform_partition(m)
+    sched = FedPartSchedule(num_groups=m, warmup_rounds=0, rounds_per_layer=1,
+                            cycles=1)
+    paper = costs.comp_cost(part, sched.rounds(), bookkeeping="paper")
+    trunc = costs.comp_cost(part, sched.rounds(), bookkeeping="truncated")
+    assert paper.ratio_to_fnu == pytest.approx(2.0 / 3.0, abs=0.01)
+    assert trunc.ratio_to_fnu == pytest.approx(0.5, abs=0.01)
+    assert costs.paper_asymptotic_comp_ratio() == pytest.approx(2.0 / 3.0)
+
+
+def test_warmup_rounds_cost_full():
+    m = 4
+    params = uniform_params(m)
+    part = uniform_partition(m)
+    sched = FedPartSchedule(num_groups=m, warmup_rounds=4, rounds_per_layer=1,
+                            cycles=1)
+    report = costs.comm_cost(params, part, sched.rounds())
+    per_round = report.per_round_bytes
+    assert (per_round[:4] == per_round[0]).all()          # warmup = full
+    assert per_round[4] * m == per_round[0]               # partial = 1/M
+
+
+def test_fnu_schedule_ratio_is_one():
+    m = 4
+    params = uniform_params(m)
+    part = uniform_partition(m)
+    sched = FNUSchedule(total=7)
+    assert costs.comm_cost(params, part, sched.rounds()).ratio_to_fnu == 1.0
+    assert costs.comp_cost(part, sched.rounds()).ratio_to_fnu == 1.0
+
+
+def test_shallower_groups_cost_more_compute():
+    """Truncated backward: training group 0 needs the full activation-grad
+    chain; training the deepest group needs almost none."""
+    m = 10
+    part = uniform_partition(m)
+    s0 = FedPartSchedule(num_groups=m, warmup_rounds=0, rounds_per_layer=1, cycles=1)
+    report = costs.comp_cost(part, s0.rounds(), bookkeeping="truncated")
+    per = report.per_round_flops
+    assert per[0] > per[-1]
+    assert np.all(np.diff(per) <= 0)

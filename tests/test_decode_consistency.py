@@ -1,0 +1,62 @@
+"""Serving correctness: prefill + one-token decode must reproduce the
+full-sequence forward logits at the next position — for every cache kind
+(GQA KV, MLA latent, SSM state, hybrid, enc-dec)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.models.api import InputShape
+
+ARCHS = [
+    "tinyllama-1.1b",       # GQA KV cache
+    "gemma-2b",             # MQA + GeGLU
+    "deepseek-v3-671b",     # MLA latent cache + MoE
+    "xlstm-125m",           # mLSTM/sLSTM state
+    "zamba2-7b",            # mamba2 state + shared attn cache
+    "whisper-small",        # enc-dec self+cross cache
+    "llama4-maverick-400b-a17b",  # MoE top-1
+]
+
+S = 12
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_prefill_then_decode_matches_forward(name):
+    cfg = get_config(name, smoke=True)
+    params = api.init(jax.random.key(0), cfg)
+    shape = InputShape("p", S, 2, "prefill")
+    batch = api.synth_batch(jax.random.key(1), cfg, shape)
+
+    # Full forward over S tokens -> cache; reference forward over S+1 tokens.
+    logits_s, cache, _ = api.forward(params, cfg, batch, collect_cache=True)
+    next_tok = jnp.argmax(logits_s[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+
+    ref_batch = dict(batch)
+    ref_batch["tokens"] = jnp.concatenate([batch["tokens"], next_tok], axis=1)
+    ref_logits, _, _ = api.forward(params, cfg, ref_batch)
+    want = ref_logits[:, -1, :]
+
+    # Grow attention caches by 1 slot and decode the next token.
+    def grow(path, leaf):
+        keyname = str(getattr(path[-1], "key", path[-1]))
+        if keyname in ("k", "v", "c_kv", "k_rope", "self_k", "self_v") and (
+            leaf.ndim >= 4 and leaf.shape[2] == batch["tokens"].shape[1] + cfg.num_media_tokens
+        ):
+            pad = [(0, 0)] * leaf.ndim
+            pad[2] = (0, 1)
+            return jnp.pad(leaf, pad)
+        return leaf
+
+    cache = jax.tree_util.tree_map_with_path(grow, cache)
+    pos = jnp.int32(batch["tokens"].shape[1] + cfg.num_media_tokens)
+    got_logits, _ = api.decode_step(params, cfg, next_tok, cache, pos)
+    got = got_logits[:, 0, :]
+
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4,
+        err_msg=f"{name}: decode logits diverge from forward",
+    )

@@ -1,0 +1,80 @@
+"""End-to-end FL behaviour: FedPart runs, learns, books costs correctly, and
+composes with FedProx/MOON (paper Table 1 matrix)."""
+
+import numpy as np
+import pytest
+
+from repro.core.schedule import FedPartSchedule, FNUSchedule
+from repro.data import (VisionDatasetSpec, balanced_eval_set, build_clients,
+                        dirichlet_partition, iid_partition, make_vision_dataset)
+from repro.fl import AlgoConfig, FLRunConfig, nlp_task, resnet_task, run_federated
+
+
+@pytest.fixture(scope="module")
+def vision_setup():
+    spec = VisionDatasetSpec(num_classes=4, image_size=12)
+    X, y = make_vision_dataset(spec, 320, seed=0)
+    Xe, ye = make_vision_dataset(spec, 200, seed=9)
+    eval_set = balanced_eval_set(Xe, ye, per_class=16)
+    clients = build_clients(X, y, iid_partition(len(y), 2, seed=0))
+    adapter = resnet_task("resnet8", num_classes=4)
+    return adapter, clients, eval_set
+
+
+def test_fedpart_learns_and_saves_comm(vision_setup):
+    adapter, clients, eval_set = vision_setup
+    sched = FedPartSchedule(num_groups=10, warmup_rounds=1, rounds_per_layer=1,
+                            cycles=1)
+    cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=2e-3)
+    res = run_federated(adapter, clients, eval_set, sched.rounds(), cfg)
+    assert res.best_acc > 0.3            # well above 0.25 chance
+    assert res.comm_total_bytes < 0.35 * res.comm_fnu_bytes
+    assert res.comp_total_flops < res.comp_fnu_flops
+
+
+def test_fnu_baseline_runs(vision_setup):
+    adapter, clients, eval_set = vision_setup
+    cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=2e-3)
+    res = run_federated(adapter, clients, eval_set, FNUSchedule(3).rounds(), cfg)
+    assert res.comm_total_bytes == res.comm_fnu_bytes
+    assert res.best_acc > 0.25
+
+
+@pytest.mark.parametrize("algo", ["fedprox", "moon"])
+def test_algorithms_compose_with_fedpart(vision_setup, algo):
+    adapter, clients, eval_set = vision_setup
+    sched = FedPartSchedule(num_groups=10, warmup_rounds=1, rounds_per_layer=1,
+                            cycles=1)
+    cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=2e-3,
+                      algo=AlgoConfig(name=algo))
+    res = run_federated(adapter, clients, eval_set, sched.rounds()[:4], cfg)
+    assert np.isfinite(res.history[-1]["loss"])
+
+
+def test_stepsize_tracker_runs(vision_setup):
+    adapter, clients, eval_set = vision_setup
+    sched = FedPartSchedule(num_groups=10, warmup_rounds=2, rounds_per_layer=1,
+                            cycles=1)
+    cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=2e-3, track_stepsizes=True)
+    res = run_federated(adapter, clients, eval_set, sched.rounds()[:4], cfg)
+    assert len(res.tracker.sizes) > 0
+    assert len(res.tracker.boundaries) == 4
+
+
+def test_dirichlet_heterogeneity_runs(vision_setup):
+    adapter, _, eval_set = vision_setup
+    spec = VisionDatasetSpec(num_classes=4, image_size=12)
+    X, y = make_vision_dataset(spec, 320, seed=0)
+    clients = build_clients(X, y, dirichlet_partition(y, 3, alpha=0.5, seed=0))
+    sched = FedPartSchedule(num_groups=10, warmup_rounds=1, rounds_per_layer=1,
+                            cycles=1)
+    cfg = FLRunConfig(local_epochs=1, batch_size=16, lr=2e-3)
+    res = run_federated(adapter, clients, eval_set, sched.rounds()[:4], cfg)
+    assert np.isfinite(res.history[-1]["loss"])
+
+
+def test_client_sampling(vision_setup):
+    adapter, clients, eval_set = vision_setup
+    cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=2e-3, sample_fraction=0.5)
+    res = run_federated(adapter, clients, eval_set, FNUSchedule(2).rounds(), cfg)
+    assert len(res.history) == 2

@@ -1,0 +1,37 @@
+import pytest
+
+from repro.launch.hlo_analysis import (collective_bytes, model_flops_6nd,
+                                       roofline)
+
+SAMPLE_HLO = """
+  %ar = bf16[1024,64]{1,0} all-reduce(%x), replica_groups={}, to_apply=%sum
+  %ag.1 = f32[2048]{0} all-gather(%y), dimensions={0}
+  %a2a = (bf16[16,8]{1,0}, bf16[16,8]{1,0}) all-to-all(%p, %q)
+  %cp = u32[4]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ar2 = bf16[8]{0} all-reduce-start(%w)
+  %ar2d = bf16[8]{0} all-reduce-done(%ar2)
+  %notacoll = bf16[999]{0} add(%a, %b)
+"""
+
+
+def test_collective_parser():
+    out = collective_bytes(SAMPLE_HLO)
+    assert out["per_kind_bytes"]["all-reduce"] == 1024 * 64 * 2 + 8 * 2
+    assert out["per_kind_bytes"]["all-gather"] == 2048 * 4
+    assert out["per_kind_bytes"]["all-to-all"] == 16 * 8 * 2 * 2
+    assert out["per_kind_bytes"]["collective-permute"] == 4 * 4
+    assert out["per_kind_count"]["all-reduce"] == 2   # start counted, done not
+
+
+def test_roofline_terms():
+    t = roofline(flops=197e12, hbm_bytes=819e9, coll_bytes=50e9,
+                 residency_bytes=819e9 / 4)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s_hlo == pytest.approx(1.0)
+    assert t.memory_s_min == pytest.approx(0.5)
+    assert t.collective_s == pytest.approx(1.0)
+    assert t.dominant in ("compute", "collective")
+
+
+def test_model_flops():
+    assert model_flops_6nd(1e9, 1e6) == 6e15

@@ -1,0 +1,57 @@
+"""Flash-attention Pallas kernel vs. pure-jnp oracle: shape/dtype sweep in
+interpret mode (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops
+
+CASES = [
+    # (b, h, hkv, sq, skv, d, causal, window)
+    (1, 2, 2, 128, 128, 64, True, 0),
+    (2, 4, 2, 256, 256, 64, True, 0),      # GQA 2:1
+    (1, 4, 1, 128, 256, 128, True, 0),     # MQA
+    (1, 2, 2, 128, 384, 64, False, 0),     # cross-attention shape
+    (2, 2, 2, 256, 256, 32, True, 64),     # sliding window
+    (1, 2, 2, 128, 128, 96, True, 0),      # non-128 head dim (pad path)
+    (1, 2, 2, 192, 192, 64, True, 0),      # non-block seq (pad path)
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_against_oracle_f32(case):
+    b, h, hkv, sq, skv, d, causal, window = case
+    ks = jax.random.split(jax.random.key(hash(case) % 2**31), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window, interpret=True)
+    ref = ops.attention_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_dtypes(dtype):
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64)).astype(dtype)
+    out = ops.flash_attention(q, k, v, interpret=True)
+    ref = ops.attention_reference(q, k, v)
+    assert out.dtype == dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_window_equals_full_when_large():
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.float32)
+    full = ops.flash_attention(q, k, v, causal=True, window=0, interpret=True)
+    winbig = ops.flash_attention(q, k, v, causal=True, window=4096, interpret=True)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(winbig), atol=1e-6)

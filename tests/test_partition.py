@@ -1,0 +1,76 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import masking
+from repro.core.partition import (
+    build_partition,
+    group_param_bytes,
+    group_param_counts,
+    total_param_count,
+)
+from repro.models import resnet
+
+
+def test_default_partition_ordering(params):
+    p = build_partition(params)
+    # embed first, blocks in order, head last
+    assert p.group_keys[0] == ("embed",)
+    assert p.group_keys[-1] == ("head",)
+    assert p.num_groups == 5
+    assert [k for k in p.group_keys if k[0] == "block"] == [
+        ("block", "blocks", 0), ("block", "blocks", 1), ("block", "blocks", 2)
+    ]
+
+
+def test_partition_is_exhaustive_and_disjoint(params):
+    p = build_partition(params)
+    counts = group_param_counts(params, p)
+    assert counts.sum() == total_param_count(params)
+    assert (counts > 0).all()
+
+
+def test_select_complement_merge_roundtrip(params):
+    p = build_partition(params)
+    for g in range(p.num_groups):
+        sel = masking.select(params, p, g)
+        comp = masking.complement(params, p, g)
+        merged = masking.merge(sel, comp)
+        assert jax.tree.structure(merged) == jax.tree.structure(params)
+        for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mask_matches_select(params):
+    p = build_partition(params)
+    mask = masking.mask_tree(params, p, [1, 3])
+    sel = masking.select(params, p, [1, 3])
+    n_masked = sum(int(m.sum()) for m in jax.tree.leaves(mask))
+    n_sel = total_param_count(sel)
+    assert n_masked == n_sel
+
+
+def test_resnet8_partition_matches_paper_appendix_a():
+    """Paper Appendix A: ResNet-8 has groups #1..#10 (9 conv+BN, 1 FC)."""
+    p8 = resnet.resnet_init(jax.random.key(0), resnet.RESNET8, 10)
+    part = build_partition(p8, resnet.resnet_group_key, resnet.resnet_order_key)
+    assert part.num_groups == 10
+    assert part.group_keys[-1] == ("head",)
+
+
+def test_resnet18_partition_group_count():
+    p18 = resnet.resnet_init(jax.random.key(0), resnet.RESNET18, 10)
+    part = build_partition(p18, resnet.resnet_group_key, resnet.resnet_order_key)
+    # conv_in + 8 blocks x 2 convs + fc = 18 groups
+    assert part.num_groups == 18
+
+
+def test_group_bytes_accounting(params):
+    p = build_partition(params)
+    gb = group_param_bytes(params, p)
+    total = sum(
+        np.prod(np.shape(l)) * np.dtype(l.dtype).itemsize
+        for l in jax.tree.leaves(params)
+    )
+    assert gb.sum() == total

@@ -1,0 +1,118 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation, masking
+from repro.core.partition import build_partition, group_param_counts, total_param_count
+from repro.core.schedule import FedPartSchedule
+from repro.data.partitioner import dirichlet_partition, iid_partition
+from tests.conftest import small_params
+
+PARAMS = small_params()
+PART = build_partition(PARAMS)
+
+
+@given(groups=st.sets(st.integers(0, PART.num_groups - 1), min_size=1))
+@settings(max_examples=25, deadline=None)
+def test_select_complement_partition_property(groups):
+    """select(G) ∪ complement(G) == params, disjointly, for ANY group set."""
+    sel = masking.select(PARAMS, PART, sorted(groups))
+    comp = masking.complement(PARAMS, PART, sorted(groups))
+    assert total_param_count(sel) + total_param_count(comp) == total_param_count(PARAMS)
+    merged = masking.merge(sel, comp)
+    assert jax.tree.structure(merged) == jax.tree.structure(PARAMS)
+
+
+@given(
+    num_groups=st.integers(2, 12),
+    warmup=st.integers(0, 4),
+    rl=st.integers(1, 4),
+    cycles=st.integers(1, 3),
+    bridge=st.integers(0, 3),
+    order=st.sampled_from(["sequential", "reverse", "random"]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=40, deadline=None)
+def test_schedule_invariants(num_groups, warmup, rl, cycles, bridge, order, seed):
+    s = FedPartSchedule(num_groups=num_groups, warmup_rounds=warmup,
+                        rounds_per_layer=rl, cycles=cycles, bridge_rounds=bridge,
+                        order=order, seed=seed)
+    rounds = s.rounds()
+    assert len(rounds) == s.total_rounds
+    # every cycle trains every group exactly rl times
+    for c in range(cycles):
+        counts = {}
+        for r in rounds:
+            if r.phase == "partial" and r.cycle == c:
+                counts[r.group] = counts.get(r.group, 0) + 1
+        assert counts == {g: rl for g in range(num_groups)}
+    # indices strictly consecutive
+    assert [r.index for r in rounds] == list(range(len(rounds)))
+
+
+@given(w=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=5))
+@settings(max_examples=25, deadline=None)
+def test_weighted_mean_convexity(w):
+    """Weighted average of client scalars stays within [min, max]."""
+    trees = [{"x": jnp.full((3,), float(i + 1))} for i in range(len(w))]
+    out = aggregation.tree_mean(trees, weights=w)
+    val = float(out["x"][0])
+    assert 1.0 - 1e-5 <= val <= len(w) + 1e-5
+
+
+@given(n=st.integers(10, 200), clients=st.integers(2, 8), seed=st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_iid_partition_property(n, clients, seed):
+    parts = iid_partition(n, clients, seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n        # disjoint cover
+    sizes = [len(p) for p in parts]
+    assert max(sizes) - min(sizes) <= 1       # balanced
+
+
+@given(
+    clients=st.integers(2, 6),
+    alpha=st.floats(0.1, 10.0),
+    seed=st.integers(0, 50),
+)
+@settings(max_examples=20, deadline=None)
+def test_dirichlet_partition_property(clients, alpha, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 5, 300).astype(np.int64)
+    parts = dirichlet_partition(labels, clients, alpha, seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)
+    assert all(len(p) >= 2 for p in parts)
+
+
+@given(data=st.data())
+@settings(max_examples=15, deadline=None)
+def test_partial_aggregate_preserves_frozen(data):
+    g = data.draw(st.integers(0, PART.num_groups - 1))
+    n_clients = data.draw(st.integers(1, 4))
+    subs = []
+    for i in range(n_clients):
+        c = jax.tree.map(lambda x: x * (i + 2.0), PARAMS)
+        subs.append(masking.select(c, PART, g))
+    new = aggregation.aggregate_partial(PARAMS, subs)
+    comp_old = masking.complement(PARAMS, PART, g)
+    comp_new = masking.complement(new, PART, g)
+    for a, b in zip(jax.tree.leaves(comp_old), jax.tree.leaves(comp_new)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(step=st.integers(1, 1000))
+@settings(max_examples=10, deadline=None)
+def test_masked_adam_pack_block_alignment(step):
+    from repro.kernels.masked_adam import ops as ma_ops
+
+    packed, meta = ma_ops.pack(PARAMS, block_rows=8)
+    assert packed.shape[0] % 8 == 0
+    bm = ma_ops.block_mask_for_group(PARAMS, PART, 0, block_rows=8)
+    assert bm.shape[0] == packed.shape[0] // 8

@@ -1,0 +1,53 @@
+import numpy as np
+import pytest
+
+from repro.core.schedule import (FULL_NETWORK, FedPartSchedule, FNUSchedule,
+                                 matched_fnu)
+
+
+def test_round_counts():
+    s = FedPartSchedule(num_groups=10, warmup_rounds=5, rounds_per_layer=2,
+                        cycles=3, bridge_rounds=5)
+    rounds = s.rounds()
+    assert len(rounds) == s.total_rounds == 5 + 3 * 20 + 2 * 5
+    assert all(r.index == i for i, r in enumerate(rounds))
+
+
+def test_phases_and_groups():
+    s = FedPartSchedule(num_groups=4, warmup_rounds=2, rounds_per_layer=2, cycles=2,
+                        bridge_rounds=1)
+    rounds = s.rounds()
+    assert all(r.is_full for r in rounds[:2])
+    partial = [r for r in rounds if r.phase == "partial"]
+    # sequential: each group appears R/L times consecutively, each cycle
+    groups_c0 = [r.group for r in partial if r.cycle == 0]
+    assert groups_c0 == [0, 0, 1, 1, 2, 2, 3, 3]
+    bridges = [r for r in rounds if r.phase == "bridge"]
+    assert len(bridges) == 1 and bridges[0].is_full
+
+
+def test_reverse_and_random_orders():
+    rev = FedPartSchedule(num_groups=4, warmup_rounds=0, rounds_per_layer=1,
+                          cycles=1, order="reverse")
+    assert [r.group for r in rev.rounds()] == [3, 2, 1, 0]
+    rnd1 = FedPartSchedule(num_groups=8, warmup_rounds=0, rounds_per_layer=1,
+                           cycles=1, order="random", seed=1)
+    rnd2 = FedPartSchedule(num_groups=8, warmup_rounds=0, rounds_per_layer=1,
+                           cycles=1, order="random", seed=1)
+    assert [r.group for r in rnd1.rounds()] == [r.group for r in rnd2.rounds()]
+    assert sorted(r.group for r in rnd1.rounds()) == list(range(8))
+
+
+def test_every_cycle_covers_every_group():
+    s = FedPartSchedule(num_groups=6, warmup_rounds=1, rounds_per_layer=3,
+                        cycles=4, order="random", seed=3)
+    for c in range(4):
+        groups = {r.group for r in s.rounds() if r.phase == "partial" and r.cycle == c}
+        assert groups == set(range(6))
+
+
+def test_matched_fnu_budget():
+    s = FedPartSchedule(num_groups=10, warmup_rounds=5, rounds_per_layer=2, cycles=2)
+    f = matched_fnu(s)
+    assert f.total_rounds == s.total_rounds
+    assert all(r.is_full for r in f.rounds())

@@ -1,0 +1,95 @@
+"""Launcher step functions: FedPart partial steps on stacked models update
+exactly one layer group; optimizer state is subtree-sized."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch import steps
+from repro.models import api
+from repro.models.api import InputShape
+from repro.optim.adam import AdamConfig
+
+TRAIN = InputShape("t", 16, 2, "train")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = api.init(jax.random.key(0), cfg)
+    batch = api.synth_batch(jax.random.key(1), cfg, TRAIN)
+    return cfg, params, batch
+
+
+def test_list_groups(setup):
+    cfg, params, _ = setup
+    groups = steps.list_groups(params)
+    # embed + 2 blocks + tail(final_norm|head) = 4 groups for smoke tinyllama
+    keys = [(g.key, g.index) for g in groups]
+    assert keys[0] == ("embed", None)
+    assert ("blocks", 0) in keys and ("blocks", 1) in keys
+    assert keys[-1][0].startswith("final_norm")
+
+
+def test_fnu_step_decreases_loss(setup):
+    cfg, params, batch = setup
+    step = jax.jit(steps.make_train_step(cfg, AdamConfig(lr=1e-3), remat=False))
+    opt = steps.init_opt_state(params)
+    p1, opt, l0 = step(params, opt, batch)
+    p2, opt, l1 = step(p1, opt, batch)
+    assert float(l1) < float(l0)
+
+
+@pytest.mark.parametrize("gidx", [0, 1, 3])
+def test_fedpart_step_touches_only_group(setup, gidx):
+    cfg, params, batch = setup
+    groups = steps.list_groups(params)
+    group = groups[gidx % len(groups)]
+    step = jax.jit(steps.make_fedpart_train_step(cfg, group, AdamConfig(lr=1e-2),
+                                                 remat=False))
+    opt = steps.init_partial_opt_state(params, group)
+    newp, newopt, loss = step(params, opt, batch)
+    assert np.isfinite(float(loss))
+
+    # which stacked layers changed?
+    for key in params:
+        for (patha, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(params[key])[0],
+            jax.tree_util.tree_flatten_with_path(newp[key])[0],
+        ):
+            a, b = np.asarray(a), np.asarray(b)
+            if group.index is not None and key == group.key:
+                # only layer group.index of this stack changed
+                for layer in range(a.shape[0]):
+                    changed = bool(np.any(a[layer] != b[layer]))
+                    assert changed == (layer == group.index)
+            elif group.index is None and key in group.key.split("|"):
+                assert bool(np.any(a != b))
+            else:
+                np.testing.assert_array_equal(a, b)
+
+
+def test_partial_opt_state_is_smaller(setup):
+    cfg, params, _ = setup
+    groups = steps.list_groups(params)
+    full = steps.init_opt_state(params)
+    part = steps.init_partial_opt_state(params, groups[1])
+    n_full = sum(x.size for x in jax.tree.leaves(full.m))
+    n_part = sum(x.size for x in jax.tree.leaves(part.m))
+    assert n_part < n_full / 2
+
+
+def test_prefill_and_serve_steps(setup):
+    cfg, params, _ = setup
+    shape = InputShape("p", 16, 2, "prefill")
+    batch = api.synth_batch(jax.random.key(2), cfg, shape)
+    logits, cache = jax.jit(steps.make_prefill_step(cfg))(params, batch)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    # decode against a fresh fixed-size cache
+    dshape = InputShape("d", 32, 2, "decode")
+    dbatch = api.synth_batch(jax.random.key(3), cfg, dshape)
+    serve = jax.jit(steps.make_serve_step(cfg))
+    lg, cache2 = serve(params, dbatch["token"], dbatch["cache"], dbatch["pos"])
+    assert lg.shape == (2, 1, cfg.vocab_size)

@@ -1,0 +1,42 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partition import build_partition
+from repro.core.telemetry import StepSizeTracker, estimate_k, update_step_size
+from tests.conftest import small_params
+
+
+def test_update_step_size():
+    a = {"w": jnp.zeros(4)}
+    b = {"w": jnp.full((4,), 3.0)}
+    assert update_step_size(a, b) == pytest.approx(6.0)
+
+
+def test_tracker_spike_detection():
+    t = StepSizeTracker()
+    prev = {"w": jnp.zeros(4)}
+    # small steps, boundary, then big steps (simulated mismatch spike)
+    for delta in (0.1, 0.1, 0.1):
+        new = {"w": prev["w"] + delta}
+        t.record(prev, new)
+        prev = new
+    t.mark_round_boundary()
+    for delta in (0.5, 0.5, 0.5):
+        new = {"w": prev["w"] + delta}
+        t.record(prev, new)
+        prev = new
+    spike = t.post_aggregation_spike(window=3)
+    assert spike == pytest.approx(5.0, rel=0.01)
+
+
+def test_estimate_k_lower_bound():
+    params = small_params()
+    part = build_partition(params)
+    keys = jax.random.split(jax.random.key(0), 6)
+    grads = [jax.tree.map(lambda x, kk=k: jax.random.normal(kk, x.shape) * 0.1, params)
+             for k in keys]
+    k_val = estimate_k(grads, part, params)
+    assert k_val >= 1.0
+    assert k_val < 5.0    # iid gaussian grads -> groups comparable (paper: ~1.1)
