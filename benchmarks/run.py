@@ -25,6 +25,7 @@ BENCHES = [
     "table9_privacy",
     "table13_kvalue",
     "fig1_stepsizes",
+    "engine_bench",
     "kernels_bench",
     "roofline",
 ]

@@ -4,9 +4,15 @@ federated vision task — the paper's core comparison (Table 1) at CPU scale.
 Runs both strategies with a matched round budget, prints accuracy curves and
 the communication/computation ledger.  ~2-4 minutes on CPU.
 
-    PYTHONPATH=src python examples/quickstart.py
+--engine selects the client-simulation engine (README §Client-simulation
+engines).  The default is the sequential oracle: this demo's conv model hits
+the vmap engine's grouped-conv slow path on XLA:CPU; on accelerator backends
+(or matmul models — see benchmarks/engine_bench.py) pick --engine vmap.
+
+    PYTHONPATH=src python examples/quickstart.py [--engine sequential|vmap]
 """
 
+import argparse
 import sys
 
 sys.path.insert(0, "src")
@@ -19,7 +25,13 @@ from repro.data import (VisionDatasetSpec, balanced_eval_set, build_clients,
 from repro.fl import FLRunConfig, resnet_task, run_federated
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--engine", choices=["sequential", "vmap"],
+                    default="sequential",
+                    help="client-simulation engine (see module docstring)")
+    args = ap.parse_args(argv)
+
     spec = VisionDatasetSpec(num_classes=8, image_size=16, noise=1.0)
     X, y = make_vision_dataset(spec, 1200, seed=0)
     Xe, ye = make_vision_dataset(spec, 600, seed=99)
@@ -29,9 +41,10 @@ def main():
 
     schedule = FedPartSchedule(num_groups=10, warmup_rounds=2,
                                rounds_per_layer=1, cycles=1)
-    run_cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=1e-3)
+    run_cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=1e-3,
+                          engine=args.engine)
 
-    print("=== FedPart (partial network updates) ===")
+    print(f"=== FedPart (partial network updates) [engine={args.engine}] ===")
     fp = run_federated(adapter, clients, eval_set, schedule.rounds(), run_cfg,
                        verbose=True)
     print("\n=== FedAvg-FNU (full network updates, matched rounds) ===")

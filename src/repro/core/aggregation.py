@@ -3,7 +3,16 @@
 FNU rounds average every parameter; partial rounds average only the trainable
 group's (pruned) subtrees and splice them into the global model.  Per the
 paper (§4, following FedBN), client-local statistics (BatchNorm running
-moments) are *never* aggregated — they are filtered by path suffix.
+moments) are *never* aggregated — on full AND partial rounds alike — they are
+filtered by path suffix.
+
+Two layouts are supported:
+
+* list-of-pytrees (``aggregate_full`` / ``aggregate_partial``) — the
+  sequential oracle's host-side path;
+* a single *stacked* pytree with a leading client axis
+  (``*_stacked`` variants) — the batched vmap engine's on-device path, one
+  weighted reduction per leaf instead of a Python accumulation loop.
 """
 
 from __future__ import annotations
@@ -26,13 +35,20 @@ def is_local_stat(path: str) -> bool:
     return any(path.endswith(k) or f"/{k}" in path for k in LOCAL_STAT_KEYS)
 
 
+def _normalized_weights(num: int, weights: Sequence[float] | None) -> list[float]:
+    if weights is None:
+        return [1.0 / num] * num
+    if len(weights) != num:
+        raise ValueError(f"{len(weights)} weights for {num} client trees")
+    total = float(sum(weights))
+    if total <= 0.0:
+        raise ValueError(f"client weights must sum to a positive value, got {total}")
+    return [float(x) / total for x in weights]
+
+
 def tree_mean(trees: Sequence[PyTree], weights: Sequence[float] | None = None) -> PyTree:
     """Weighted elementwise mean of same-structure pytrees."""
-    if weights is None:
-        w = [1.0 / len(trees)] * len(trees)
-    else:
-        total = float(sum(weights))
-        w = [float(x) / total for x in weights]
+    w = _normalized_weights(len(trees), weights)
 
     def _avg(*leaves):
         acc = jnp.zeros_like(leaves[0], dtype=jnp.float32)
@@ -43,6 +59,62 @@ def tree_mean(trees: Sequence[PyTree], weights: Sequence[float] | None = None) -
     return jax.tree.map(_avg, *trees)
 
 
+def tree_mean_stacked(
+    stacked: PyTree, weights: jax.Array | Sequence[float] | None = None
+) -> PyTree:
+    """Weighted mean over the leading *client* axis of a stacked pytree.
+
+    One ``tensordot`` per leaf — runs entirely on device, so the batched
+    engine's aggregation compiles into a single dispatch.
+    """
+    num = jax.tree.leaves(stacked)[0].shape[0]
+    if weights is None:
+        w = jnp.full((num,), 1.0 / num, dtype=jnp.float32)
+    else:
+        w = jnp.asarray(weights, dtype=jnp.float32)
+        if w.shape != (num,):
+            raise ValueError(f"weights shape {w.shape} != ({num},)")
+        if not isinstance(w, jax.core.Tracer) and float(jnp.sum(w)) <= 0.0:
+            # Traced weights can't be value-checked here; the vmap engine
+            # guards them host-side before dispatch (batched.run_round).
+            raise ValueError(
+                f"client weights must sum to a positive value, got {float(jnp.sum(w))}"
+            )
+        w = w / jnp.sum(w)
+
+    def _avg(leaf):
+        out = jnp.tensordot(w, leaf.astype(jnp.float32), axes=1)
+        return out.astype(leaf.dtype)
+
+    return jax.tree.map(_avg, stacked)
+
+
+def _splice_skipping_local_stats(global_params: PyTree, averaged: PyTree) -> PyTree:
+    """Take ``averaged`` leaves except at client-local-stat paths (keep global)."""
+
+    def _choose(path, g_leaf, a_leaf):
+        p = "/".join(masking._entry_str(e) for e in path)
+        return g_leaf if is_local_stat(p) else a_leaf
+
+    return jax.tree_util.tree_map_with_path(_choose, global_params, averaged)
+
+
+def drop_local_stats(tree: PyTree, _prefix: str = "") -> PyTree:
+    """Prune client-local-stat leaves from a (possibly pruned) dict pytree."""
+    if not isinstance(tree, dict):
+        return tree
+    out = {}
+    for k, v in tree.items():
+        path = f"{_prefix}/{k}" if _prefix else str(k)
+        if is_local_stat(path):
+            continue
+        sub = drop_local_stats(v, path)
+        if isinstance(sub, dict) and not sub:
+            continue
+        out[k] = sub
+    return out
+
+
 def aggregate_full(
     global_params: PyTree,
     client_params: Sequence[PyTree],
@@ -50,13 +122,7 @@ def aggregate_full(
 ) -> PyTree:
     """FNU aggregation: average everything except client-local statistics."""
     averaged = tree_mean(client_params, weights)
-
-    # Splice averaged leaves into global, skipping local-stat paths.
-    def _choose(path, g_leaf, a_leaf):
-        p = "/".join(masking._entry_str(e) for e in path)
-        return g_leaf if is_local_stat(p) else a_leaf
-
-    return jax.tree_util.tree_map_with_path(_choose, global_params, averaged)
+    return _splice_skipping_local_stats(global_params, averaged)
 
 
 def aggregate_partial(
@@ -68,9 +134,38 @@ def aggregate_partial(
 
     ``client_subtrees`` are pruned pytrees (``masking.select`` output) holding
     only the round's trainable group.  Only those bytes ever travel — this is
-    the paper's Eq. 5 comm saving.
+    the paper's Eq. 5 comm saving.  BN running moments inside the group stay
+    client-local and are excluded from the splice.
     """
-    averaged = tree_mean(client_subtrees, weights)
+    averaged = drop_local_stats(tree_mean(client_subtrees, weights))
+    return masking.tree_update(global_params, averaged)
+
+
+def aggregate_full_stacked(
+    global_params: PyTree,
+    stacked_params: PyTree,
+    weights: jax.Array | Sequence[float] | None = None,
+) -> PyTree:
+    """``aggregate_full`` over a stacked (client-axis) tree, on device."""
+    averaged = tree_mean_stacked(stacked_params, weights)
+    return _splice_skipping_local_stats(global_params, averaged)
+
+
+def aggregate_partial_stacked(
+    global_params: PyTree,
+    stacked_params: PyTree,
+    partition: Partition,
+    group: int,
+    weights: jax.Array | Sequence[float] | None = None,
+) -> PyTree:
+    """``aggregate_partial`` over stacked *full* client params, on device.
+
+    Selects the trainable group under the client axis (path-based, so the
+    leading axis is transparent), averages with one reduction per leaf, and
+    splices — BN running moments excluded exactly as in the host path.
+    """
+    sub = masking.select(stacked_params, partition, group)
+    averaged = drop_local_stats(tree_mean_stacked(sub, weights))
     return masking.tree_update(global_params, averaged)
 
 

@@ -127,6 +127,33 @@ def _merge2(a: PyTree, b: PyTree) -> PyTree:
     raise ValueError("merge: overlapping leaves between pruned trees")
 
 
+# ---------------------------------------------------------------------------
+# Client-axis (stacked) helpers — used by the batched vmap engine
+# ---------------------------------------------------------------------------
+
+def stack_trees(trees: Sequence[PyTree]) -> PyTree:
+    """Stack same-structure pytrees along a new leading *client* axis."""
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *trees)
+
+
+def unstack_tree(stacked: PyTree, num_clients: int) -> list[PyTree]:
+    """Inverse of ``stack_trees``: one pytree per client-axis index (lazy
+    device slices; nothing is copied until a leaf is consumed)."""
+    return [jax.tree.map(lambda x: x[i], stacked) for i in range(num_clients)]
+
+
+def apply_mask_stacked(update: PyTree, mask: PyTree) -> PyTree:
+    """``S ⊙ update`` where ``update`` carries a leading client axis and
+    ``mask`` is an unbatched bool pytree (``mask_tree`` output): the group
+    mask broadcasts across clients — the paper's Eq. 1 form under a client
+    axis.  The engine itself runs the pruned-subtree form (``select``/
+    ``merge``); this is the literal-mask counterpart, kept equivalent by
+    tests/test_partition.py."""
+    return jax.tree.map(
+        lambda u, m: jnp.where(m[None, ...], u, jnp.zeros_like(u)), update, mask
+    )
+
+
 def tree_update(base: PyTree, patch: PyTree) -> PyTree:
     """Return ``base`` with the leaves present in (pruned) ``patch`` replaced."""
     if not isinstance(base, dict):

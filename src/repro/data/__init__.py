@@ -9,4 +9,11 @@ from repro.data.partitioner import (  # noqa: F401
     iid_partition,
     partition_stats,
 )
-from repro.data.pipeline import ClientDataset, balanced_eval_set, build_clients  # noqa: F401
+from repro.data.pipeline import (  # noqa: F401
+    ClientDataset,
+    StackedClientBatches,
+    balanced_eval_set,
+    batch_plan,
+    build_clients,
+    stack_client_batches,
+)

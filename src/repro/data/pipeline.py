@@ -1,13 +1,45 @@
 """Batching pipeline for the FL simulation: per-client epoch iterators with
 deterministic shuffling, plus a balanced held-out eval set (the paper tests
-the global model on a balanced set)."""
+the global model on a balanced set).
+
+Two consumers share one batch-order contract:
+
+* the sequential engine iterates ``ClientDataset.batches`` client by client;
+* the vmap engine (``repro.fl.batched``) materialises the *same* order via
+  ``batch_plan`` and stacks the selected clients along a leading client axis.
+
+Ragged clients (different dataset sizes => different step counts) are handled
+by **pad-and-mask**: every client in a bucket is padded to the bucket's max
+step count with repeated batches whose ``step_valid`` entry is 0 — padded
+steps are computed but discarded, so results match the sequential oracle.
+Clients smaller than the batch size train with ``bs = len(client)`` (exactly
+like the sequential path); since a compiled program needs one static batch
+shape, such clients land in their own *bucket* keyed by ``bs``.
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
+from typing import Iterator, Sequence
 
 import numpy as np
+
+
+def batch_plan(n: int, batch_size: int, epochs: int, seed: int) -> np.ndarray:
+    """Deterministic batch-index plan: ``(steps, bs)`` int array.
+
+    ``epochs`` passes of shuffled, truncated-to-full batches (at least one
+    batch per epoch even if the client has < batch_size samples).  This is
+    THE batch-order contract: both engines derive their batches from it.
+    """
+    rng = np.random.default_rng(seed)
+    bs = min(batch_size, n)
+    rows = []
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for start in range(0, max(n - bs + 1, 1), bs):
+            rows.append(order[start : start + bs])
+    return np.stack(rows).astype(np.int64)
 
 
 @dataclasses.dataclass
@@ -23,14 +55,78 @@ class ClientDataset:
     ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
         """``epochs`` passes of shuffled, truncated-to-full batches (at least
         one batch per epoch even if the client has < batch_size samples)."""
-        rng = np.random.default_rng(seed)
-        n = len(self)
-        for _ in range(epochs):
-            order = rng.permutation(n)
-            bs = min(batch_size, n)
-            for start in range(0, max(n - bs + 1, 1), bs):
-                idx = order[start : start + bs]
-                yield self.inputs[idx], self.labels[idx]
+        for idx in batch_plan(len(self), batch_size, epochs, seed):
+            yield self.inputs[idx], self.labels[idx]
+
+
+@dataclasses.dataclass
+class StackedClientBatches:
+    """One bucket of same-batch-width clients, stacked along a client axis.
+
+    ``inputs``/``labels`` carry a leading ``(clients, steps, bs, ...)`` shape;
+    ``step_valid`` is ``(clients, steps)`` float32 — 0.0 marks padded steps
+    whose results the batched engine discards (the pad-and-mask contract).
+    ``members`` maps bucket rows back to positions in the round's picked-client
+    order.
+    """
+
+    inputs: np.ndarray
+    labels: np.ndarray
+    step_valid: np.ndarray
+    members: tuple[int, ...]
+
+    @property
+    def num_clients(self) -> int:
+        return self.inputs.shape[0]
+
+    @property
+    def num_steps(self) -> int:
+        return self.inputs.shape[1]
+
+    @property
+    def batch_width(self) -> int:
+        return self.inputs.shape[2]
+
+
+def stack_client_batches(
+    datasets: Sequence[ClientDataset],
+    batch_size: int,
+    epochs: int,
+    seeds: Sequence[int],
+) -> list[StackedClientBatches]:
+    """Stack the round's clients into vmap-ready buckets.
+
+    Clients are bucketed by effective batch width ``min(batch_size, n)`` (one
+    compiled program per width); within a bucket, ragged step counts are
+    padded with the client's first batch and masked out via ``step_valid``.
+    """
+    if len(datasets) != len(seeds):
+        raise ValueError("one seed per client dataset is required")
+    buckets: dict[int, list[int]] = {}
+    for pos, ds in enumerate(datasets):
+        buckets.setdefault(min(batch_size, len(ds)), []).append(pos)
+
+    out = []
+    for bs in sorted(buckets):
+        members = buckets[bs]
+        plans = [batch_plan(len(datasets[p]), batch_size, epochs, seeds[p])
+                 for p in members]
+        max_steps = max(len(pl) for pl in plans)
+        xs, ys, valid = [], [], []
+        for p, plan in zip(members, plans):
+            pad = max_steps - len(plan)
+            if pad:
+                plan = np.concatenate([plan, np.repeat(plan[:1], pad, axis=0)])
+            xs.append(datasets[p].inputs[plan])
+            ys.append(datasets[p].labels[plan])
+            v = np.zeros(max_steps, dtype=np.float32)
+            v[: max_steps - pad] = 1.0
+            valid.append(v)
+        out.append(StackedClientBatches(
+            inputs=np.stack(xs), labels=np.stack(ys),
+            step_valid=np.stack(valid), members=tuple(members),
+        ))
+    return out
 
 
 def build_clients(

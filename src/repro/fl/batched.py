@@ -1,0 +1,257 @@
+"""Batched client-simulation engines: vmap-over-clients round execution.
+
+The sequential oracle (``SequentialEngine``, the original ``run_federated``
+inner loop) dispatches O(clients x steps) jitted calls per round and syncs the
+host on every step's loss.  ``VmapEngine`` replaces that with two compiled
+dispatches per (phase, group):
+
+1. *local training*: the selected clients' batches are stacked along a
+   leading client axis (``data.pipeline.stack_client_batches``) and the whole
+   local round runs as one ``jax.vmap``-over-clients program with a
+   ``lax.scan`` over steps inside — partial rounds share the group's pruned
+   backward graph across every client;
+2. *aggregation*: stacked-leaf weighted reductions on device
+   (``core.aggregation.*_stacked``), BN running moments excluded exactly as
+   in the host path.
+
+Ragged client datasets follow the pad-and-mask contract: clients are bucketed
+by effective batch width ``min(batch_size, n)`` (one compiled program per
+width) and padded step-wise inside a bucket; padded steps compute but their
+parameter/optimizer updates and losses are discarded via ``step_valid``, so
+the engine matches the sequential oracle leaf-for-leaf (see
+``tests/test_engine_equivalence.py``).
+
+Both engines expose ``trace_count`` (XLA traces built so far) — the quantity
+``benchmarks/engine_bench.py`` reports next to wall-clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, masking
+from repro.core.partition import Partition
+from repro.core.schedule import FULL_NETWORK, RoundSpec
+from repro.data.pipeline import ClientDataset, stack_client_batches
+from repro.fl.algorithms import AlgoConfig
+from repro.fl.client import LocalTrainer
+from repro.optim.adam import adam_init
+
+PyTree = Any
+
+ENGINES = ("sequential", "vmap")
+
+
+@dataclasses.dataclass
+class SequentialEngine:
+    """Reference oracle: one client at a time, aggregation on host."""
+
+    trainer: LocalTrainer
+    partition: Partition
+    algo: AlgoConfig
+    name: str = "sequential"
+
+    @property
+    def trace_count(self) -> int:
+        return self.trainer.trace_count
+
+    def run_round(
+        self,
+        params: PyTree,
+        spec: RoundSpec,
+        datasets: Sequence[ClientDataset],
+        *,
+        seeds: Sequence[int],
+        weights: Sequence[float],
+        epochs: int,
+        batch_size: int,
+        prev_params: Sequence[PyTree | None] | None = None,
+        tracker=None,
+    ) -> tuple[PyTree, list[float], list[PyTree] | None]:
+        keep_locals = self.algo.name == "moon"
+        uploads, losses, new_locals = [], [], ([] if keep_locals else None)
+        for i, (ds, seed) in enumerate(zip(datasets, seeds)):
+            local, loss = self.trainer.run_local_round(
+                params,
+                spec.group,
+                ds,
+                epochs=epochs,
+                batch_size=batch_size,
+                seed=seed,
+                prev_params=prev_params[i] if prev_params is not None else None,
+                step_tracker=tracker if i == 0 else None,
+            )
+            losses.append(loss)
+            if keep_locals:
+                new_locals.append(local)
+            if spec.is_full:
+                uploads.append(local)
+            else:
+                uploads.append(masking.select(local, self.partition, spec.group))
+        if spec.is_full:
+            new_params = aggregation.aggregate_full(params, uploads, weights)
+        else:
+            new_params = aggregation.aggregate_partial(params, uploads, weights)
+        return new_params, losses, new_locals
+
+
+@dataclasses.dataclass
+class VmapEngine:
+    """Batched engine: whole round = vmapped local training + on-device agg."""
+
+    trainer: LocalTrainer
+    partition: Partition
+    algo: AlgoConfig
+    name: str = "vmap"
+
+    def __post_init__(self):
+        self.trace_count = 0
+        self._local_fns: dict[tuple[int, bool], Callable] = {}
+        self._agg_fns: dict[int, Callable] = {}
+
+    # -- compiled-program builders ----------------------------------------
+
+    def _local_fn(self, group: int, stacked_prev: bool) -> Callable:
+        """Jitted vmap-over-clients local round for ``group`` (FULL_NETWORK
+        for FNU).  Cached per (group, prev-layout); batch/step widths retrace
+        via jit's shape cache."""
+        key = (group, stacked_prev)
+        if key in self._local_fns:
+            return self._local_fns[key]
+
+        step_fn = (
+            self.trainer.make_full_step()
+            if group < 0
+            else self.trainer.make_partial_step(group)
+        )
+        partition = self.partition
+
+        def one_client(global_params, inputs, labels, step_valid, prev):
+            if group < 0:
+                opt0 = adam_init(global_params)
+            else:
+                opt0 = adam_init(masking.select(global_params, partition, group))
+
+            def body(carry, xs):
+                params, opt = carry
+                x, y, valid = xs
+                new_p, new_o, loss = step_fn(params, opt, x, y, global_params, prev)
+                keep = valid > 0
+                params = jax.tree.map(lambda a, b: jnp.where(keep, a, b), new_p, params)
+                opt = jax.tree.map(lambda a, b: jnp.where(keep, a, b), new_o, opt)
+                return (params, opt), jnp.where(keep, loss.astype(jnp.float32), 0.0)
+
+            (params, _), step_losses = jax.lax.scan(
+                body, (global_params, opt0), (inputs, labels, step_valid)
+            )
+            mean_loss = jnp.sum(step_losses) / jnp.maximum(jnp.sum(step_valid), 1.0)
+            return params, mean_loss
+
+        prev_axis = 0 if stacked_prev else None
+
+        def local_round(global_params, inputs, labels, step_valid, prev):
+            self.trace_count += 1  # trace-time side effect: compiled replays skip it
+            return jax.vmap(one_client, in_axes=(None, 0, 0, 0, prev_axis))(
+                global_params, inputs, labels, step_valid, prev
+            )
+
+        self._local_fns[key] = jax.jit(local_round)
+        return self._local_fns[key]
+
+    def _agg_fn(self, group: int) -> Callable:
+        if group in self._agg_fns:
+            return self._agg_fns[group]
+        partition = self.partition
+
+        def agg(global_params, stacked, weights):
+            self.trace_count += 1
+            if group < 0:
+                return aggregation.aggregate_full_stacked(global_params, stacked, weights)
+            return aggregation.aggregate_partial_stacked(
+                global_params, stacked, partition, group, weights
+            )
+
+        self._agg_fns[group] = jax.jit(agg)
+        return self._agg_fns[group]
+
+    # -- round execution ---------------------------------------------------
+
+    def run_round(
+        self,
+        params: PyTree,
+        spec: RoundSpec,
+        datasets: Sequence[ClientDataset],
+        *,
+        seeds: Sequence[int],
+        weights: Sequence[float],
+        epochs: int,
+        batch_size: int,
+        prev_params: Sequence[PyTree | None] | None = None,
+        tracker=None,
+    ) -> tuple[PyTree, list[float], list[PyTree] | None]:
+        if tracker is not None:
+            raise ValueError(
+                "per-step step-size tracking needs engine='sequential' "
+                "(the vmap engine never materialises per-step params)"
+            )
+        # The aggregation normalisation runs inside jit where weights are
+        # traced — guard the degenerate case here, mirroring tree_mean's
+        # host-side check in the sequential engine.
+        if float(sum(weights)) <= 0.0:
+            raise ValueError(
+                f"client weights must sum to a positive value, got {sum(weights)}"
+            )
+        group = FULL_NETWORK if spec.is_full else spec.group
+        use_prev = self.algo.name == "moon"
+        num = len(datasets)
+
+        parts: list[tuple[tuple[int, ...], PyTree, jax.Array]] = []
+        for bucket in stack_client_batches(datasets, batch_size, epochs, seeds):
+            if use_prev:
+                prev_arg = masking.stack_trees([
+                    prev_params[p] if prev_params is not None and prev_params[p] is not None else params
+                    for p in bucket.members
+                ])
+            else:
+                prev_arg = params
+            fn = self._local_fn(group, stacked_prev=use_prev)
+            locals_stacked, bucket_losses = fn(
+                params, bucket.inputs, bucket.labels, bucket.step_valid, prev_arg
+            )
+            parts.append((bucket.members, locals_stacked, bucket_losses))
+
+        if len(parts) == 1 and parts[0][0] == tuple(range(num)):
+            stacked = parts[0][1]
+            losses_dev = parts[0][2]
+        else:
+            # Multiple batch-width buckets: concatenate along the client axis
+            # and restore the round's picked-client order.
+            order = np.concatenate([np.asarray(m) for m, _, _ in parts])
+            inv = jnp.asarray(np.argsort(order))
+            stacked = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0)[inv],
+                *[t for _, t, _ in parts],
+            )
+            losses_dev = jnp.concatenate([l for _, _, l in parts])[inv]
+
+        new_params = self._agg_fn(group)(
+            params, stacked, jnp.asarray(weights, dtype=jnp.float32)
+        )
+        losses = [float(x) for x in np.asarray(losses_dev)]
+        new_locals = masking.unstack_tree(stacked, num) if use_prev else None
+        return new_params, losses, new_locals
+
+
+def make_engine(
+    name: str, *, trainer: LocalTrainer, partition: Partition, algo: AlgoConfig
+):
+    if name == "sequential":
+        return SequentialEngine(trainer=trainer, partition=partition, algo=algo)
+    if name == "vmap":
+        return VmapEngine(trainer=trainer, partition=partition, algo=algo)
+    raise ValueError(f"unknown engine {name!r}; expected one of {ENGINES}")

@@ -33,8 +33,19 @@ class LocalTrainer:
     adam: AdamConfig
 
     def __post_init__(self):
-        self._full_step = jax.jit(self._make_full_step())
+        self.trace_count = 0  # jit (re)traces across all cached step fns
+        self._full_step = jax.jit(self._counted(self.make_full_step()))
         self._partial_steps: dict[int, Callable] = {}
+
+    def _counted(self, fn: Callable) -> Callable:
+        """Wrap a step fn so each XLA trace bumps ``trace_count`` (the wrapper
+        body only runs while tracing; compiled replays skip it)."""
+
+        def traced(*args):
+            self.trace_count += 1
+            return fn(*args)
+
+        return traced
 
     # -- loss assembly -----------------------------------------------------
 
@@ -57,7 +68,9 @@ class LocalTrainer:
 
     # -- step builders -------------------------------------------------------
 
-    def _make_full_step(self):
+    def make_full_step(self):
+        """Raw (unjitted) FNU step — reused by the batched vmap engine."""
+
         def step(params, opt_state, inputs, labels, global_params, prev_params):
             def loss_fn(p):
                 loss = self._total_loss(p, inputs, labels, global_params, prev_params)
@@ -72,7 +85,11 @@ class LocalTrainer:
 
         return step
 
-    def _make_partial_step(self, group: int):
+    def make_partial_step(self, group: int):
+        """Raw (unjitted) partial step for ``group`` — reused by the batched
+        vmap engine (the group is static, so XLA prunes the dead backward
+        graph per group in both engines)."""
+
         def step(params, opt_state, inputs, labels, global_params, prev_params):
             trainable = masking.select(params, self.partition, group)
             frozen = masking.complement(params, self.partition, group)
@@ -94,7 +111,9 @@ class LocalTrainer:
 
     def partial_step(self, group: int) -> Callable:
         if group not in self._partial_steps:
-            self._partial_steps[group] = jax.jit(self._make_partial_step(group))
+            self._partial_steps[group] = jax.jit(
+                self._counted(self.make_partial_step(group))
+            )
         return self._partial_steps[group]
 
     # -- local round ---------------------------------------------------------

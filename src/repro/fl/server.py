@@ -5,24 +5,31 @@ locally, server averages exactly the transmitted parameters (full network on
 FNU rounds, the trainable group's subtree on partial rounds; BN running
 statistics never travel), evaluates the global model on the balanced set,
 and books communication/compute costs.
+
+Client execution is delegated to a pluggable engine (``repro.fl.batched``):
+
+* ``engine="sequential"`` — the reference oracle: a Python loop over the
+  selected clients, one jitted dispatch per (client, step);
+* ``engine="vmap"``       — the batched engine: clients stacked along a
+  leading axis, the whole local round one vmapped compiled program and the
+  aggregation one on-device reduction (equivalent to the oracle to <=1e-5;
+  see ``tests/test_engine_equivalence.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Optional, Sequence
+from typing import Any, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, masking
 from repro.core.costs import comm_cost, comp_cost
 from repro.core.partition import Partition, group_param_counts
-from repro.core.schedule import FULL_NETWORK, RoundSpec
+from repro.core.schedule import RoundSpec
 from repro.core.telemetry import StepSizeTracker
 from repro.fl.algorithms import AlgoConfig
+from repro.fl.batched import make_engine
 from repro.fl.client import LocalTrainer
 from repro.fl.tasks import TaskAdapter
 from repro.optim.adam import AdamConfig
@@ -35,12 +42,14 @@ class FLRunConfig:
     local_epochs: int = 8
     batch_size: int = 32
     lr: float = 1e-3
+    adam_eps: float = 1e-8
     algo: AlgoConfig = AlgoConfig()
     sample_fraction: float = 1.0
     seed: int = 0
     eval_every: int = 1
     eval_batch: int = 256
     track_stepsizes: bool = False
+    engine: str = "sequential"      # "sequential" (oracle) | "vmap" (batched)
 
 
 @dataclasses.dataclass
@@ -75,6 +84,8 @@ def run_federated(
     init_key=None,
     verbose: bool = False,
 ) -> FLResult:
+    if run_cfg.track_stepsizes and run_cfg.engine != "sequential":
+        raise ValueError("track_stepsizes requires engine='sequential'")
     key = init_key if init_key is not None else jax.random.key(run_cfg.seed)
     params = adapter.init(key)
     partition = adapter.partition(params)
@@ -82,7 +93,10 @@ def run_federated(
         adapter=adapter,
         partition=partition,
         algo=run_cfg.algo,
-        adam=AdamConfig(lr=run_cfg.lr),
+        adam=AdamConfig(lr=run_cfg.lr, eps=run_cfg.adam_eps),
+    )
+    engine = make_engine(
+        run_cfg.engine, trainer=trainer, partition=partition, algo=run_cfg.algo
     )
     rng = np.random.default_rng(run_cfg.seed)
     eval_x, eval_y = eval_set
@@ -91,6 +105,7 @@ def run_federated(
     tracker = StepSizeTracker() if run_cfg.track_stepsizes else None
     prev_params: dict[int, PyTree] = {}  # MOON: last local model per client
     history: list[dict] = []
+    is_moon = run_cfg.algo.name == "moon"
 
     n_clients = len(clients_data)
     for spec in rounds:
@@ -99,31 +114,25 @@ def run_federated(
         if tracker is not None:
             tracker.mark_round_boundary()
 
-        uploads, losses, weights = [], [], []
-        for ci in picked:
-            local, loss = trainer.run_local_round(
-                params,
-                spec.group,
-                clients_data[ci],
-                epochs=run_cfg.local_epochs,
-                batch_size=run_cfg.batch_size,
-                seed=run_cfg.seed * 100_003 + spec.index * 1_009 + int(ci),
-                prev_params=prev_params.get(int(ci)),
-                step_tracker=tracker if ci == picked[0] else None,
-            )
-            if run_cfg.algo.name == "moon":
-                prev_params[int(ci)] = local
-            losses.append(loss)
-            weights.append(len(clients_data[ci]))
-            if spec.is_full:
-                uploads.append(local)
-            else:
-                uploads.append(masking.select(local, partition, spec.group))
+        datasets = [clients_data[ci] for ci in picked]
+        seeds = [run_cfg.seed * 100_003 + spec.index * 1_009 + int(ci) for ci in picked]
+        weights = [len(d) for d in datasets]
+        prevs = [prev_params.get(int(ci)) for ci in picked] if is_moon else None
 
-        if spec.is_full:
-            params = aggregation.aggregate_full(params, uploads, weights)
-        else:
-            params = aggregation.aggregate_partial(params, uploads, weights)
+        params, losses, new_locals = engine.run_round(
+            params,
+            spec,
+            datasets,
+            seeds=seeds,
+            weights=weights,
+            epochs=run_cfg.local_epochs,
+            batch_size=run_cfg.batch_size,
+            prev_params=prevs,
+            tracker=tracker,
+        )
+        if new_locals is not None:
+            for ci, local in zip(picked, new_locals):
+                prev_params[int(ci)] = local
 
         entry = {"round": spec.index, "phase": spec.phase, "group": spec.group,
                  "loss": float(np.mean(losses))}

@@ -74,8 +74,15 @@ def _conv_flops(spec, image_size=32) -> float:
     return total
 
 
+_RESNET_SPECS = {
+    "resnet4": resnet.RESNET4,   # test-scale: fast compile, same BN/shortcut structure
+    "resnet8": resnet.RESNET8,
+    "resnet18": resnet.RESNET18,
+}
+
+
 def resnet_task(depth: str = "resnet8", num_classes: int = 20) -> TaskAdapter:
-    spec = resnet.RESNET8 if depth == "resnet8" else resnet.RESNET18
+    spec = _RESNET_SPECS[depth]
 
     def init(key):
         return resnet.resnet_init(key, spec, num_classes)

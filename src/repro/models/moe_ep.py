@@ -33,6 +33,21 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+# jax >= 0.5 promotes shard_map to jax.shard_map; the replication-check
+# kwarg was also renamed (check_rep -> check_vma) on its own schedule, so
+# pick both the symbol and the kwarg by inspection, not version guesswork.
+import inspect as _inspect
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_KW = {
+    ("check_vma" if "check_vma" in _inspect.signature(_shard_map).parameters
+     else "check_rep"): False
+}
+
 from repro.configs.base import ModelConfig
 from repro.models.layers import mlp_flops
 
@@ -167,11 +182,11 @@ def moe_apply_ep(params: PyTree, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Ar
         y = jax.lax.psum(y_partial, "model")
         return y.reshape(b_loc, s, d), aux
 
-    sm = jax.shard_map(
+    sm = _shard_map(
         body,
         mesh=mesh,
         in_specs=(p_specs, x_spec),
         out_specs=(x_spec, P()),
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )
     return sm(params, x)

@@ -74,6 +74,7 @@ def bn_apply(
 # ResNet
 # ---------------------------------------------------------------------------
 
+RESNET4 = {"stages": (1, 1), "channels": (8, 16), "name": "resnet4"}   # test-scale
 RESNET8 = {"stages": (1, 1, 2), "channels": (16, 32, 64), "name": "resnet8"}
 RESNET18 = {"stages": (2, 2, 2, 2), "channels": (64, 128, 256, 512), "name": "resnet18"}
 

@@ -1,9 +1,27 @@
+import os
+
 import jax
 import jax.numpy as jnp
 import pytest
 
 # NOTE: no XLA_FLAGS here — smoke tests and benches see 1 device; only
 # launch/dryrun.py (run as its own process) forces 512 host devices.
+
+# Persistent XLA compile cache (keyed by HLO): identical programs built by
+# different jit instances — e.g. the eval fn across every run_federated call,
+# or a step fn shared by two tests — compile once per machine instead of once
+# per LocalTrainer.  This is what keeps the tier-1 lane fast.
+_CACHE_DIR = os.path.join(os.path.dirname(__file__), os.pardir, ".jax_cache")
+jax.config.update("jax_compilation_cache_dir", os.path.abspath(_CACHE_DIR))
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.2)
+
+
+def pytest_collection_modifyitems(config, items):
+    """Everything not marked ``slow`` is tier-1 (the default `pytest -q` run,
+    see pytest.ini); tag it so `-m tier1` selects the same subset."""
+    for item in items:
+        if "slow" not in item.keywords:
+            item.add_marker(pytest.mark.tier1)
 
 
 @pytest.fixture(scope="session")

@@ -56,3 +56,109 @@ def test_bn_stats_never_aggregated():
         else:
             np.testing.assert_allclose(np.asarray(nw), np.asarray(old) + 1.0, rtol=1e-5)
     assert saw_stat
+
+
+# ---------------------------------------------------------------------------
+# Edge cases: single client, zero weights, BN stats on partial rounds,
+# and the stacked (client-axis) reductions used by the vmap engine.
+# ---------------------------------------------------------------------------
+
+def test_single_client_round_is_identity_full(params):
+    """With one client, full aggregation must return that client's params."""
+    client = jax.tree.map(lambda x: x * 1.5 + 0.25, params)
+    out = aggregation.aggregate_full(params, [client], weights=[17])
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(client)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_single_client_round_is_identity_partial(params):
+    part = build_partition(params)
+    client = jax.tree.map(lambda x: x - 2.0, params)
+    out = aggregation.aggregate_partial(params, [masking.select(client, part, 2)],
+                                        weights=[5])
+    for (path, _), a, b in zip(
+        jax.tree_util.tree_flatten_with_path(params)[0],
+        jax.tree.leaves(out),
+        jax.tree.leaves(params),
+    ):
+        ps = "/".join(str(getattr(k, "key", k)) for k in path)
+        if part.group_of(ps) == 2:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b) - 2.0, rtol=1e-5)
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("weights", [[0, 0], [0.0, -1.0], [-3, 3]])
+def test_zero_weight_guard(params, weights):
+    """Degenerate client weights must fail loudly, not divide by zero."""
+    with pytest.raises(ValueError, match="positive"):
+        aggregation.tree_mean([params, params], weights=weights)
+
+
+def test_weight_count_mismatch_guard(params):
+    with pytest.raises(ValueError, match="weights"):
+        aggregation.tree_mean([params, params], weights=[1.0])
+
+
+def test_bn_stats_never_aggregated_on_partial_rounds():
+    """Partial uploads carry the group's BN running moments, but the server
+    must splice only the learnable leaves (paper §4: local statistics never
+    travel into the global model)."""
+    p = resnet.resnet_init(jax.random.key(0), resnet.RESNET8, 4)
+    part = build_partition(p, resnet.resnet_group_key, resnet.resnet_order_key)
+    clients = [masking.select(jax.tree.map(lambda x: x + 1.0 + i, p), part, g)
+               for i in range(2) for g in [1]]
+    new = aggregation.aggregate_partial(p, clients, weights=[1, 3])
+    saw_stat = saw_learnable = False
+    for (path, old), nw in zip(jax.tree_util.tree_flatten_with_path(p)[0],
+                               jax.tree.leaves(new)):
+        ps = "/".join(str(getattr(k, "key", k)) for k in path)
+        if part.group_of(ps) != 1:
+            np.testing.assert_array_equal(np.asarray(nw), np.asarray(old))
+        elif aggregation.is_local_stat(ps):
+            saw_stat = True
+            np.testing.assert_array_equal(np.asarray(nw), np.asarray(old))
+        else:
+            saw_learnable = True
+            # weighted mean of (+1, +2) at weights (1, 3) -> +1.75
+            np.testing.assert_allclose(np.asarray(nw), np.asarray(old) + 1.75,
+                                       rtol=1e-5, atol=1e-6)
+    assert saw_stat and saw_learnable
+
+
+def test_stacked_mean_matches_list_mean(params):
+    clients = [jax.tree.map(lambda x: x * (i + 1.0), params) for i in range(3)]
+    w = [1.0, 4.0, 2.0]
+    ref = aggregation.tree_mean(clients, weights=w)
+    stacked = masking.stack_trees(clients)
+    out = aggregation.tree_mean_stacked(stacked, w)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_stacked_partial_matches_list_partial():
+    p = resnet.resnet_init(jax.random.key(1), resnet.RESNET8, 4)
+    part = build_partition(p, resnet.resnet_group_key, resnet.resnet_order_key)
+    group, w = 3, [2.0, 1.0]
+    clients = [jax.tree.map(lambda x: x + 0.5 * (i + 1), p) for i in range(2)]
+    ref = aggregation.aggregate_partial(p, [masking.select(c, part, group) for c in clients], w)
+    out = aggregation.aggregate_partial_stacked(p, masking.stack_trees(clients), part, group, w)
+    assert jax.tree.structure(out) == jax.tree.structure(ref)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_stacked_full_matches_list_full():
+    p = resnet.resnet_init(jax.random.key(2), resnet.RESNET8, 4)
+    clients = [jax.tree.map(lambda x: x - 0.1 * (i + 1), p) for i in range(3)]
+    w = [1.0, 1.0, 2.0]
+    ref = aggregation.aggregate_full(p, clients, w)
+    out = aggregation.aggregate_full_stacked(p, masking.stack_trees(clients), w)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_stacked_zero_weight_guard(params):
+    stacked = masking.stack_trees([params, params])
+    with pytest.raises(ValueError, match="positive"):
+        aggregation.tree_mean_stacked(stacked, [0.0, 0.0])

@@ -59,3 +59,67 @@ def test_tiny_client_still_yields():
     clients = build_clients(X, y, [np.arange(5)])
     batches = list(clients[0].batches(batch_size=32, epochs=1, seed=0))
     assert len(batches) == 1 and batches[0][0].shape[0] == 5
+
+
+def test_batch_plan_matches_batches_iterator():
+    """ClientDataset.batches and batch_plan are the same contract — the
+    sequential and vmap engines must consume identical batch orders."""
+    from repro.data import ClientDataset, batch_plan
+
+    rng = np.random.default_rng(0)
+    ds = ClientDataset(rng.normal(size=(37, 4)), rng.integers(0, 3, 37))
+    plan = batch_plan(len(ds), batch_size=8, epochs=2, seed=11)
+    got = list(ds.batches(batch_size=8, epochs=2, seed=11))
+    assert len(got) == len(plan)
+    for (x, y), idx in zip(got, plan):
+        np.testing.assert_array_equal(x, ds.inputs[idx])
+        np.testing.assert_array_equal(y, ds.labels[idx])
+
+
+def test_stack_client_batches_pads_and_masks_ragged_steps():
+    from repro.data import ClientDataset, stack_client_batches
+
+    rng = np.random.default_rng(1)
+    sizes = [24, 40]                      # 3 vs 5 steps/epoch at bs=8
+    dss = [ClientDataset(rng.normal(size=(n, 4)), rng.integers(0, 3, n))
+           for n in sizes]
+    (bucket,) = stack_client_batches(dss, batch_size=8, epochs=1, seeds=[5, 6])
+    assert bucket.num_clients == 2
+    assert bucket.batch_width == 8
+    assert bucket.num_steps == 5
+    np.testing.assert_array_equal(bucket.step_valid, [[1, 1, 1, 0, 0],
+                                                      [1, 1, 1, 1, 1]])
+    # valid steps carry exactly the sequential iterator's batches
+    for ci, ds in enumerate(dss):
+        for si, (x, y) in enumerate(ds.batches(8, 1, [5, 6][ci])):
+            np.testing.assert_array_equal(bucket.inputs[ci, si], x)
+            np.testing.assert_array_equal(bucket.labels[ci, si], y)
+
+
+def test_stack_client_batches_buckets_small_clients():
+    from repro.data import ClientDataset, stack_client_batches
+
+    rng = np.random.default_rng(2)
+    sizes = [5, 16, 24]                   # 5 < bs -> own bucket with bs=5
+    dss = [ClientDataset(rng.normal(size=(n, 4)), rng.integers(0, 3, n))
+           for n in sizes]
+    buckets = stack_client_batches(dss, batch_size=8, epochs=2, seeds=[1, 2, 3])
+    assert [b.batch_width for b in buckets] == [5, 8]
+    assert buckets[0].members == (0,)
+    assert buckets[1].members == (1, 2)
+    # every bucket row replays the sequential iterator exactly
+    for b in buckets:
+        for row, pos in enumerate(b.members):
+            seq = list(dss[pos].batches(8, 2, [1, 2, 3][pos]))
+            for si, (x, y) in enumerate(seq):
+                np.testing.assert_array_equal(b.inputs[row, si], x)
+                np.testing.assert_array_equal(b.labels[row, si], y)
+            assert b.step_valid[row].sum() == len(seq)
+
+
+def test_stack_client_batches_seed_count_mismatch():
+    from repro.data import ClientDataset, stack_client_batches
+
+    ds = ClientDataset(np.zeros((8, 2)), np.zeros(8, dtype=np.int64))
+    with pytest.raises(ValueError, match="seed"):
+        stack_client_batches([ds], batch_size=4, epochs=1, seeds=[1, 2])

@@ -1,0 +1,147 @@
+"""The batched vmap engine must match the sequential oracle.
+
+Same federation, same schedule, same seeds, both engines: global params,
+per-round history losses, and the comm/comp cost books must agree to <=1e-5
+for FNU and partial rounds, across FedAvg / FedProx / MOON, including ragged
+client sizes (different step counts, and — in the bucket test — a client
+smaller than the batch size, which lands in its own batch-width bucket).
+
+Note on Adam eps: with the default eps=1e-8, Adam's bias-corrected first
+steps normalise near-zero gradients to ±1, so benign float reassociation
+between the vmapped and per-step compiled programs can flip an update's sign
+and diverge by O(lr).  The runs here pin ``adam_eps=1e-3`` to keep the
+comparison in Adam's linear regime — both engines still execute identical
+configs, so this tests engine equivalence, not optimizer robustness.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.schedule import FedPartSchedule, FNUSchedule
+from repro.data import (VisionDatasetSpec, balanced_eval_set, build_clients,
+                        make_vision_dataset)
+from repro.fl import AlgoConfig, FLRunConfig, resnet_task, run_federated
+
+BATCH = 16
+
+
+def _make_setup(client_sizes):
+    spec = VisionDatasetSpec(num_classes=4, image_size=8)
+    X, y = make_vision_dataset(spec, sum(client_sizes), seed=0)
+    Xe, ye = make_vision_dataset(spec, 64, seed=9)
+    eval_set = balanced_eval_set(Xe, ye, per_class=8)
+    bounds = np.cumsum((0,) + tuple(client_sizes))
+    parts = [np.arange(bounds[i], bounds[i + 1]) for i in range(len(client_sizes))]
+    # resnet4: same BN / shortcut / multi-group structure as resnet8 at a
+    # fraction of the XLA compile cost (the dominant cost here).
+    return resnet_task("resnet4", num_classes=4), build_clients(X, y, parts), eval_set
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # Ragged step counts (36 -> 2 steps/epoch, 56 -> 3, 40 -> 2) in one
+    # batch-width bucket: exercises the pad-and-mask step masking.
+    return _make_setup((36, 56, 40))
+
+
+def _run(setup, algo: str, engine: str, rounds):
+    adapter, clients, eval_set = setup
+    cfg = FLRunConfig(local_epochs=1, batch_size=BATCH, lr=2e-3, adam_eps=1e-3,
+                      algo=AlgoConfig(name=algo), engine=engine)
+    return run_federated(adapter, clients, eval_set, rounds, cfg)
+
+
+def _assert_equivalent(a, b):
+    flat_a = jax.tree_util.tree_flatten_with_path(a.params)[0]
+    flat_b = jax.tree.leaves(b.params)
+    assert len(flat_a) == len(flat_b)
+    for (path, la), lb in zip(flat_a, flat_b):
+        np.testing.assert_allclose(
+            np.asarray(la), np.asarray(lb), rtol=1e-5, atol=1e-5,
+            err_msg=f"param {jax.tree_util.keystr(path)} diverged",
+        )
+    la = np.array([h["loss"] for h in a.history])
+    lb = np.array([h["loss"] for h in b.history])
+    np.testing.assert_allclose(la, lb, rtol=1e-5, atol=1e-5)
+    assert a.comm_total_bytes == b.comm_total_bytes
+    assert a.comm_fnu_bytes == b.comm_fnu_bytes
+    assert a.comp_total_flops == b.comp_total_flops
+    assert a.comp_fnu_flops == b.comp_fnu_flops
+
+
+# 1 FNU warmup + 1 partial round (group 0): covers both phases per algorithm.
+MIXED = FedPartSchedule(num_groups=6, warmup_rounds=1, rounds_per_layer=1,
+                        cycles=1).rounds()[:2]
+
+
+@pytest.mark.parametrize("algo", ["fedavg", "fedprox", "moon"])
+def test_vmap_matches_sequential_mixed_schedule(setup, algo):
+    seq = _run(setup, algo, "sequential", MIXED)
+    vm = _run(setup, algo, "vmap", MIXED)
+    _assert_equivalent(seq, vm)
+
+
+def test_vmap_matches_sequential_small_client_bucket():
+    """A client below the batch size (12 < 16) trains with bs=12 in the
+    sequential oracle; the vmap engine must route it through its own
+    batch-width bucket and still agree.  One partial round: bucket routing is
+    phase-independent, and the fresh batch shapes make this the
+    compile-heaviest case in the module."""
+    small = _make_setup((12, 36, 20))
+    seq = _run(small, "fedavg", "sequential", MIXED[1:])
+    vm = _run(small, "fedavg", "vmap", MIXED[1:])
+    _assert_equivalent(seq, vm)
+
+
+@pytest.mark.slow
+def test_vmap_matches_sequential_deeper_schedule(setup):
+    """Longer horizon (second partial group + an extra FNU): drift stays
+    bounded over more rounds too."""
+    rounds = FedPartSchedule(num_groups=6, warmup_rounds=1, rounds_per_layer=1,
+                             cycles=1).rounds()[:4]
+    for algo in ("fedavg", "moon"):
+        seq = _run(setup, algo, "sequential", rounds)
+        vm = _run(setup, algo, "vmap", rounds)
+        _assert_equivalent(seq, vm)
+
+
+def test_vmap_matches_sequential_fnu_only(setup):
+    rounds = FNUSchedule(2).rounds()
+    seq = _run(setup, "fedavg", "sequential", rounds)
+    vm = _run(setup, "fedavg", "vmap", rounds)
+    _assert_equivalent(seq, vm)
+
+
+def test_vmap_rejects_stepsize_tracking(setup):
+    adapter, clients, eval_set = setup
+    cfg = FLRunConfig(local_epochs=1, batch_size=BATCH, engine="vmap",
+                      track_stepsizes=True)
+    with pytest.raises(ValueError, match="sequential"):
+        run_federated(adapter, clients, eval_set, FNUSchedule(1).rounds(), cfg)
+
+
+def test_vmap_zero_weight_guard(setup):
+    """Degenerate round weights must raise (as the oracle does via
+    tree_mean), not propagate NaN through the on-device aggregation."""
+    from repro.fl import LocalTrainer, make_engine
+    from repro.optim.adam import AdamConfig
+
+    adapter, clients, _ = setup
+    params = adapter.init(jax.random.key(0))
+    part = adapter.partition(params)
+    algo = AlgoConfig()
+    trainer = LocalTrainer(adapter=adapter, partition=part, algo=algo,
+                           adam=AdamConfig(lr=1e-3))
+    engine = make_engine("vmap", trainer=trainer, partition=part, algo=algo)
+    with pytest.raises(ValueError, match="positive"):
+        engine.run_round(params, MIXED[1], clients,
+                         seeds=[1, 2, 3], weights=[0, 0, 0],
+                         epochs=1, batch_size=BATCH)
+
+
+def test_unknown_engine_rejected(setup):
+    adapter, clients, eval_set = setup
+    cfg = FLRunConfig(engine="pmap")
+    with pytest.raises(ValueError, match="unknown engine"):
+        run_federated(adapter, clients, eval_set, FNUSchedule(1).rounds(), cfg)

@@ -1,5 +1,11 @@
 """End-to-end FL behaviour: FedPart runs, learns, books costs correctly, and
-composes with FedProx/MOON (paper Table 1 matrix)."""
+composes with FedProx/MOON (paper Table 1 matrix).
+
+These runs use the sequential oracle engine: on CPU the conv model's
+per-client weights make the vmapped engine lower to grouped convolutions,
+which XLA:CPU executes slower than the per-client loop.  The batched engine
+gets its own end-to-end coverage (and the oracle-agreement pin) in
+tests/test_engine_equivalence.py and benchmarks/engine_bench.py."""
 
 import numpy as np
 import pytest
@@ -47,7 +53,7 @@ def test_algorithms_compose_with_fedpart(vision_setup, algo):
                             cycles=1)
     cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=2e-3,
                       algo=AlgoConfig(name=algo))
-    res = run_federated(adapter, clients, eval_set, sched.rounds()[:4], cfg)
+    res = run_federated(adapter, clients, eval_set, sched.rounds()[:3], cfg)
     assert np.isfinite(res.history[-1]["loss"])
 
 
@@ -69,7 +75,7 @@ def test_dirichlet_heterogeneity_runs(vision_setup):
     sched = FedPartSchedule(num_groups=10, warmup_rounds=1, rounds_per_layer=1,
                             cycles=1)
     cfg = FLRunConfig(local_epochs=1, batch_size=16, lr=2e-3)
-    res = run_federated(adapter, clients, eval_set, sched.rounds()[:4], cfg)
+    res = run_federated(adapter, clients, eval_set, sched.rounds()[:3], cfg)
     assert np.isfinite(res.history[-1]["loss"])
 
 

@@ -54,6 +54,10 @@ print(json.dumps(results))
 """
 
 
+import pytest
+
+
+@pytest.mark.slow
 def test_ep_matches_auto():
     res = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,

@@ -31,7 +31,12 @@ def _loss_fn(batch):
     return loss
 
 
-@pytest.mark.parametrize("group", [0, 1, 2, 4])
+@pytest.mark.parametrize("group", [
+    0,
+    pytest.param(1, marks=pytest.mark.slow),
+    2,
+    pytest.param(4, marks=pytest.mark.slow),
+])
 def test_masked_equals_partitioned(group):
     params = small_params()
     part = build_partition(params)

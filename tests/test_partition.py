@@ -51,6 +51,17 @@ def test_mask_matches_select(params):
     assert n_masked == n_sel
 
 
+def test_apply_mask_stacked_broadcasts_over_clients(params):
+    part = build_partition(params)
+    mask = masking.mask_tree(params, part, 1)
+    clients = [jax.tree.map(lambda x, i=i: x + float(i), params) for i in range(3)]
+    stacked = masking.stack_trees(clients)
+    out = masking.apply_mask_stacked(stacked, mask)
+    ref = masking.stack_trees([masking.apply_mask(c, mask) for c in clients])
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_resnet8_partition_matches_paper_appendix_a():
     """Paper Appendix A: ResNet-8 has groups #1..#10 (9 conv+BN, 1 FC)."""
     p8 = resnet.resnet_init(jax.random.key(0), resnet.RESNET8, 10)
@@ -59,6 +70,7 @@ def test_resnet8_partition_matches_paper_appendix_a():
     assert part.group_keys[-1] == ("head",)
 
 
+@pytest.mark.slow
 def test_resnet18_partition_group_count():
     p18 = resnet.resnet_init(jax.random.key(0), resnet.RESNET18, 10)
     part = build_partition(p18, resnet.resnet_group_key, resnet.resnet_order_key)

@@ -36,6 +36,7 @@ def test_psnr_metric():
     assert 15 < float(psnr(x, noisy)) < 25
 
 
+@pytest.mark.slow
 def test_dlg_full_beats_partial():
     params, loss_fn = tiny_model()
     part = build_partition(params)
@@ -52,6 +53,7 @@ def test_dlg_full_beats_partial():
     assert psnr_full > psnr_part + 1.0, (psnr_full, psnr_part)
 
 
+@pytest.mark.slow
 def test_dlg_full_reconstruction_quality():
     params, loss_fn = tiny_model()
     target = jax.random.normal(jax.random.key(5), (1, 48)) * 0.5

@@ -12,6 +12,9 @@ from repro.data import (VisionDatasetSpec, balanced_eval_set, build_clients,
                         iid_partition, make_vision_dataset)
 from repro.fl import FLRunConfig, resnet_task, run_federated
 
+# Full FedPart runs + checkpoint roundtrips: minutes of wall-clock.
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def fl_run():
