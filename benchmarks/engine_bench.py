@@ -1,21 +1,28 @@
-"""Sequential vs. batched (vmap) client engine: wall-clock and traces.
+"""Client-engine bench: sequential vs vmap vs shard_map wall-clock + traces.
 
 The sequential oracle dispatches one jitted call per (client, step) and syncs
 the host on every loss; the vmap engine runs the whole round as one vmapped
-program plus one on-device aggregation.  This bench measures steady-state
-*per-round* wall-clock (compile excluded — each engine gets one warmup round
-per phase) and the number of XLA traces each engine built, for a partial
-round and an FNU round.
+program plus one on-device aggregation; the shard_map engine spreads the
+client axis over a device mesh (``--sim-devices``) and psums the aggregate.
+This bench measures steady-state *per-round* wall-clock (compile excluded —
+each engine gets one warmup round per phase), the number of XLA traces each
+engine built, and — for shard_map — per-device client throughput, for a
+partial round and an FNU round.
 
-The default workload is the cross-device regime the batched engine targets —
+The default workload is the cross-device regime the batched engines target —
 many small clients on a tiny transformer — where per-dispatch overhead
 dominates per-step compute and vmap amortises it across the client axis
 (>=3x at 8 clients on this container's 2 CPU cores).  ``--task vision``
 switches to the paper's conv model: there, per-client conv weights lower to
-grouped convolutions that XLA:CPU executes poorly, so the vmap engine only
-pays off on accelerator backends — the bench reports it honestly either way.
+grouped convolutions that XLA:CPU executes poorly, so the batched engines
+only pay off on accelerator backends — the bench reports it honestly either
+way.  CPU "devices" forced via --sim-devices share the same physical cores:
+shard_map numbers there measure engine overhead, not real parallel speedup
+(docs/ENGINES.md).
 
     PYTHONPATH=src python benchmarks/engine_bench.py --clients 8 --reps 5
+    PYTHONPATH=src python benchmarks/engine_bench.py \
+        --engine shard_map --sim-devices 4
 
 Also exposes ``run(quick=True)`` for ``python -m benchmarks.run``.
 """
@@ -27,6 +34,12 @@ import sys
 import time
 
 sys.path.insert(0, "src")
+
+if __name__ == "__main__":
+    # shard_map on CPU: simulate N host devices (XLA reads the flag at
+    # first-import time, so set it before the jax import below).
+    from repro.launch._simdev import force_sim_devices
+    force_sim_devices()
 
 import jax
 import numpy as np
@@ -63,14 +76,14 @@ def _setup(task: str, clients: int, samples_per_client: int):
 
 
 def _time_engine(engine_name, adapter, data, params, partition, spec,
-                 *, epochs, batch_size, reps):
+                 *, epochs, batch_size, reps, sim_devices=0):
     """Fresh trainer+engine; one warmup round (compile), then ``reps`` timed
-    rounds.  Returns (seconds_per_round, traces_compiled)."""
+    rounds.  Returns (seconds_per_round, traces_compiled, mesh_devices)."""
     algo = AlgoConfig()
     trainer = LocalTrainer(adapter=adapter, partition=partition, algo=algo,
                            adam=AdamConfig(lr=1e-3))
     engine = make_engine(engine_name, trainer=trainer, partition=partition,
-                         algo=algo)
+                         algo=algo, sim_devices=sim_devices)
     seeds = list(range(len(data)))
     weights = [len(d) for d in data]
 
@@ -85,11 +98,12 @@ def _time_engine(engine_name, adapter, data, params, partition, spec,
     for _ in range(reps):
         one_round()
     per_round = (time.perf_counter() - t0) / reps
-    return per_round, engine.trace_count
+    devices = getattr(engine, "num_devices", 1)
+    return per_round, engine.trace_count, devices
 
 
 def bench(task="nlp", clients=8, samples_per_client=32, epochs=1, reps=5,
-          verbose=True):
+          engines=("sequential", "vmap"), sim_devices=0, verbose=True):
     adapter, data, params, partition, batch_size = _setup(
         task, clients, samples_per_client)
     rows = []
@@ -98,28 +112,42 @@ def bench(task="nlp", clients=8, samples_per_client=32, epochs=1, reps=5,
         ("fnu", RoundSpec(0, "warmup", -1, FULL_NETWORK)),
     ]:
         times, traces = {}, {}
-        for name in ("sequential", "vmap"):
-            sec, tr = _time_engine(name, adapter, data, params, partition,
-                                   spec, epochs=epochs,
-                                   batch_size=batch_size, reps=reps)
+        for name in engines:
+            sec, tr, ndev = _time_engine(name, adapter, data, params,
+                                         partition, spec, epochs=epochs,
+                                         batch_size=batch_size, reps=reps,
+                                         sim_devices=sim_devices)
             times[name], traces[name] = sec, tr
+            derived = f"traces={tr}"
+            extra = ""
+            if name == "shard_map":
+                # per-device client throughput: the scaling quantity this
+                # engine exists for (clients processed per second per device)
+                thr = clients / (sec * ndev)
+                derived += f" devices={ndev} {thr:.1f} clients/s/dev"
+                extra = f" [{ndev} dev, {thr:.1f} clients/s/dev]"
             rows.append({
                 "name": f"engine_{task}_{phase}_{name}_c{clients}",
                 "us_per_call": sec * 1e6,
-                "derived": f"traces={tr}",
+                "derived": derived,
             })
-        speedup = times["sequential"] / times["vmap"]
-        rows.append({
-            "name": f"engine_{task}_{phase}_speedup_c{clients}",
-            "us_per_call": 0.0,
-            "derived": f"{speedup:.2f}x",
-        })
-        if verbose:
-            print(f"[{task}:{phase:7s}] clients={clients:3d} "
-                  f"sequential={times['sequential']*1e3:8.1f} ms/round "
-                  f"(traces={traces['sequential']})  "
-                  f"vmap={times['vmap']*1e3:8.1f} ms/round "
-                  f"(traces={traces['vmap']})  speedup={speedup:.2f}x")
+            if verbose:
+                print(f"[{task}:{phase:7s}] clients={clients:3d} "
+                      f"{name}={sec*1e3:8.1f} ms/round "
+                      f"(traces={tr}){extra}")
+        if "sequential" in times:
+            for name in engines:
+                if name == "sequential":
+                    continue
+                speedup = times["sequential"] / times[name]
+                rows.append({
+                    "name": f"engine_{task}_{phase}_{name}_speedup_c{clients}",
+                    "us_per_call": 0.0,
+                    "derived": f"{speedup:.2f}x",
+                })
+                if verbose:
+                    print(f"[{task}:{phase:7s}] clients={clients:3d} "
+                          f"{name} speedup vs sequential: {speedup:.2f}x")
     return rows
 
 
@@ -139,10 +167,24 @@ def main(argv=None) -> int:
     ap.add_argument("--samples-per-client", type=int, default=32)
     ap.add_argument("--epochs", type=int, default=1)
     ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--engine",
+                    choices=["all", "sequential", "vmap", "shard_map"],
+                    default="all",
+                    help="bench one engine (always paired with the "
+                         "sequential baseline) or the default seq+vmap pair")
+    ap.add_argument("--sim-devices", type=int, default=0,
+                    help="shard_map mesh size; on CPU, N>1 forces N "
+                         "simulated host devices (must be first jax use)")
     args = ap.parse_args(argv)
+    if args.engine == "all":
+        engines = ("sequential", "vmap")
+    elif args.engine == "sequential":
+        engines = ("sequential",)
+    else:
+        engines = ("sequential", args.engine)
     bench(task=args.task, clients=args.clients,
           samples_per_client=args.samples_per_client, epochs=args.epochs,
-          reps=args.reps)
+          reps=args.reps, engines=engines, sim_devices=args.sim_devices)
     return 0
 
 

@@ -4,18 +4,26 @@ federated vision task — the paper's core comparison (Table 1) at CPU scale.
 Runs both strategies with a matched round budget, prints accuracy curves and
 the communication/computation ledger.  ~2-4 minutes on CPU.
 
---engine selects the client-simulation engine (README §Client-simulation
-engines).  The default is the sequential oracle: this demo's conv model hits
-the vmap engine's grouped-conv slow path on XLA:CPU; on accelerator backends
-(or matmul models — see benchmarks/engine_bench.py) pick --engine vmap.
+--engine selects the client-simulation engine (docs/ENGINES.md).  The default
+is the sequential oracle: this demo's conv model hits the batched engines'
+grouped-conv slow path on XLA:CPU; on accelerator backends (or matmul models —
+see benchmarks/engine_bench.py) pick --engine vmap, or --engine shard_map with
+--sim-devices N to spread clients over N devices.
 
-    PYTHONPATH=src python examples/quickstart.py [--engine sequential|vmap]
+    PYTHONPATH=src python examples/quickstart.py \
+        [--engine sequential|vmap|shard_map] [--sim-devices N]
 """
 
 import argparse
 import sys
 
 sys.path.insert(0, "src")
+
+if __name__ == "__main__":
+    # shard_map on CPU: simulate N host devices (must precede the jax import
+    # that repro pulls in below).
+    from repro.launch._simdev import force_sim_devices
+    force_sim_devices()
 
 import numpy as np
 
@@ -27,9 +35,11 @@ from repro.fl import FLRunConfig, resnet_task, run_federated
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--engine", choices=["sequential", "vmap"],
+    ap.add_argument("--engine", choices=["sequential", "vmap", "shard_map"],
                     default="sequential",
                     help="client-simulation engine (see module docstring)")
+    ap.add_argument("--sim-devices", type=int, default=0,
+                    help="shard_map mesh size (0 = all visible devices)")
     args = ap.parse_args(argv)
 
     spec = VisionDatasetSpec(num_classes=8, image_size=16, noise=1.0)
@@ -42,7 +52,7 @@ def main(argv=None):
     schedule = FedPartSchedule(num_groups=10, warmup_rounds=2,
                                rounds_per_layer=1, cycles=1)
     run_cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=1e-3,
-                          engine=args.engine)
+                          engine=args.engine, sim_devices=args.sim_devices)
 
     print(f"=== FedPart (partial network updates) [engine={args.engine}] ===")
     fp = run_federated(adapter, clients, eval_set, schedule.rounds(), run_cfg,

@@ -1,0 +1,26 @@
+"""jax API compat shims shared across the repo.
+
+jax >= 0.5 promotes ``shard_map`` to ``jax.shard_map``; the replication-check
+kwarg was also renamed (``check_rep`` -> ``check_vma``) on its own schedule.
+Resolve both the symbol and the kwarg by inspection, not version guesswork,
+in exactly one place — ``models/moe_ep.py`` and ``fl/batched.py`` both build
+on this.
+"""
+
+from __future__ import annotations
+
+import inspect as _inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map
+
+# Splat into every shard_map call to disable the replication check under
+# whichever name this jax spells it.
+SHARD_MAP_NO_CHECK_KW = {
+    ("check_vma" if "check_vma" in _inspect.signature(shard_map).parameters
+     else "check_rep"): False
+}

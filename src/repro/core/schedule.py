@@ -8,8 +8,24 @@ one layer group.  The canonical schedule is::
         for group in order(1..M): [partial(group) x R/L]
         [bridge FNU x B]            # paper inserts 5 between cycles
 
-Orders: ``sequential`` (shallow->deep, the default), ``reverse``, ``random``
-(reshuffled every cycle) — Table 7's three variants.
+Bridges only separate cycles, so a run has ``W + C*M*(R/L) + (C-1)*B``
+rounds (``total_rounds``).  Orders: ``sequential`` (shallow->deep, the
+default), ``reverse``, ``random`` (reshuffled every cycle) — Table 7's three
+variants.
+
+Example — the paper's default shape at toy scale::
+
+    >>> sched = FedPartSchedule(num_groups=3, warmup_rounds=1,
+    ...                         rounds_per_layer=2, cycles=2, bridge_rounds=1)
+    >>> [(r.phase, r.group) for r in sched.rounds()[:4]]
+    [('warmup', -1), ('partial', 0), ('partial', 0), ('partial', 1)]
+    >>> sched.total_rounds == 1 + 2 * 3 * 2 + 1 * 1
+    True
+
+Every consumer — ``fl.server.run_federated``, the mesh trainer in
+``launch.fedtrain``, the cost ledger in ``core.costs`` — iterates the same
+``RoundSpec`` list, so schedule semantics live in exactly one place (see
+docs/ARCHITECTURE.md).
 """
 
 from __future__ import annotations
@@ -41,7 +57,19 @@ class RoundSpec:
 
 @dataclasses.dataclass(frozen=True)
 class FedPartSchedule:
-    """Round-by-round plan for a FedPart run."""
+    """Round-by-round plan for a FedPart run.
+
+    Degenerate corners are well-defined: ``cycles=0`` yields only the warm-up
+    (no partial rounds, no bridges), ``warmup_rounds=0`` starts partial
+    immediately, and ``order="random"`` is deterministic under a fixed
+    ``seed`` (one fresh permutation per cycle from a single generator).
+
+    >>> FedPartSchedule(num_groups=4, warmup_rounds=2, cycles=0).total_rounds
+    2
+    >>> s = FedPartSchedule(num_groups=3, warmup_rounds=0, rounds_per_layer=1)
+    >>> [r.group for r in s.rounds()]
+    [0, 1, 2]
+    """
 
     num_groups: int
     warmup_rounds: int = 5
@@ -52,6 +80,7 @@ class FedPartSchedule:
     seed: int = 0
 
     def rounds(self) -> list[RoundSpec]:
+        """Materialise the full ``RoundSpec`` list, indices 0..total-1."""
         rng = np.random.default_rng(self.seed)
         specs: list[RoundSpec] = []
         idx = 0
@@ -85,6 +114,8 @@ class FedPartSchedule:
 
     @property
     def total_rounds(self) -> int:
+        """``W + C*M*(R/L) + (C-1)*B`` — the paper's round budget with
+        bridges only *between* cycles (none after the last)."""
         per_cycle = self.num_groups * self.rounds_per_layer
         bridges = self.bridge_rounds * max(self.cycles - 1, 0)
         return self.warmup_rounds + self.cycles * per_cycle + bridges

@@ -67,7 +67,11 @@ class StackedClientBatches:
     ``step_valid`` is ``(clients, steps)`` float32 — 0.0 marks padded steps
     whose results the batched engine discards (the pad-and-mask contract).
     ``members`` maps bucket rows back to positions in the round's picked-client
-    order.
+    order.  When the bucket was built with ``pad_clients_to > 1`` the client
+    axis may carry trailing *padding clients* (rows ``>= len(members)``):
+    copies of the first member with ``step_valid`` all zero, so they train
+    nothing — the engine gives them zero aggregation weight and slices them
+    off every per-client output.
     """
 
     inputs: np.ndarray
@@ -78,6 +82,11 @@ class StackedClientBatches:
     @property
     def num_clients(self) -> int:
         return self.inputs.shape[0]
+
+    @property
+    def num_real(self) -> int:
+        """Clients that correspond to actual round participants."""
+        return len(self.members)
 
     @property
     def num_steps(self) -> int:
@@ -93,15 +102,26 @@ def stack_client_batches(
     batch_size: int,
     epochs: int,
     seeds: Sequence[int],
+    *,
+    pad_clients_to: int = 1,
 ) -> list[StackedClientBatches]:
     """Stack the round's clients into vmap-ready buckets.
 
     Clients are bucketed by effective batch width ``min(batch_size, n)`` (one
     compiled program per width); within a bucket, ragged step counts are
     padded with the client's first batch and masked out via ``step_valid``.
+
+    ``pad_clients_to`` rounds each bucket's *client axis* up to a multiple of
+    the given value by appending padding clients (first member's data,
+    ``step_valid`` all zero).  The shard_map engine uses this so every device
+    in the mesh receives the same per-shard client count; padding clients get
+    zero aggregation weight, so results are unchanged (see
+    ``StackedClientBatches``).
     """
     if len(datasets) != len(seeds):
         raise ValueError("one seed per client dataset is required")
+    if pad_clients_to < 1:
+        raise ValueError(f"pad_clients_to must be >= 1, got {pad_clients_to}")
     buckets: dict[int, list[int]] = {}
     for pos, ds in enumerate(datasets):
         buckets.setdefault(min(batch_size, len(ds)), []).append(pos)
@@ -122,6 +142,11 @@ def stack_client_batches(
             v = np.zeros(max_steps, dtype=np.float32)
             v[: max_steps - pad] = 1.0
             valid.append(v)
+        n_pad = -len(members) % pad_clients_to
+        for _ in range(n_pad):
+            xs.append(xs[0])
+            ys.append(ys[0])
+            valid.append(np.zeros(max_steps, dtype=np.float32))
         out.append(StackedClientBatches(
             inputs=np.stack(xs), labels=np.stack(ys),
             step_valid=np.stack(valid), members=tuple(members),

@@ -1,5 +1,6 @@
 from repro.fl.algorithms import AlgoConfig  # noqa: F401
-from repro.fl.batched import ENGINES, SequentialEngine, VmapEngine, make_engine  # noqa: F401
+from repro.fl.batched import (ENGINES, SequentialEngine, ShardMapEngine,  # noqa: F401
+                              VmapEngine, make_engine)
 from repro.fl.client import LocalTrainer  # noqa: F401
 from repro.fl.server import FLResult, FLRunConfig, run_federated  # noqa: F401
 from repro.fl.tasks import TaskAdapter, nlp_task, resnet_task  # noqa: F401

@@ -1,28 +1,49 @@
-"""Batched client-simulation engines: vmap-over-clients round execution.
+"""Batched client-simulation engines: vmap- and shard_map-over-clients.
 
 The sequential oracle (``SequentialEngine``, the original ``run_federated``
 inner loop) dispatches O(clients x steps) jitted calls per round and syncs the
-host on every step's loss.  ``VmapEngine`` replaces that with two compiled
-dispatches per (phase, group):
+host on every step's loss.  The two batched engines replace that with a
+handful of compiled dispatches per (phase, group), sharing one *pad-and-mask
+local-round core* (``_BatchedEngineBase``):
 
-1. *local training*: the selected clients' batches are stacked along a
-   leading client axis (``data.pipeline.stack_client_batches``) and the whole
-   local round runs as one ``jax.vmap``-over-clients program with a
-   ``lax.scan`` over steps inside — partial rounds share the group's pruned
-   backward graph across every client;
-2. *aggregation*: stacked-leaf weighted reductions on device
-   (``core.aggregation.*_stacked``), BN running moments excluded exactly as
-   in the host path.
+* ``VmapEngine`` — the selected clients' batches are stacked along a leading
+  client axis (``data.pipeline.stack_client_batches``) and the whole local
+  round runs as one ``jax.vmap``-over-clients program with a ``lax.scan`` over
+  steps inside, followed by one on-device stacked aggregation
+  (``core.aggregation.*_stacked``).  Single device.
+* ``ShardMapEngine`` — the stacked client axis is distributed over a 1-D
+  ``jax.sharding.Mesh`` ("clients" axis, ``launch.mesh.make_client_mesh``)
+  via ``shard_map``: each device vmaps the local round over its shard of
+  clients, and aggregation is an on-mesh ``psum`` of weight-scaled updates —
+  only the round's *transmitted* subtree (the trainable group on partial
+  rounds, BN running moments always excluded) ever crosses devices, mirroring
+  the paper's communication claim.  Clients are padded up to a multiple of
+  the mesh size (zero-weight padding clients; see ``stack_client_batches``).
 
 Ragged client datasets follow the pad-and-mask contract: clients are bucketed
 by effective batch width ``min(batch_size, n)`` (one compiled program per
 width) and padded step-wise inside a bucket; padded steps compute but their
 parameter/optimizer updates and losses are discarded via ``step_valid``, so
-the engine matches the sequential oracle leaf-for-leaf (see
-``tests/test_engine_equivalence.py``).
+the engines match the sequential oracle leaf-for-leaf (see
+``tests/test_engine_equivalence.py`` and docs/ENGINES.md).
 
-Both engines expose ``trace_count`` (XLA traces built so far) — the quantity
+All engines expose ``trace_count`` (XLA traces built so far) — the quantity
 ``benchmarks/engine_bench.py`` reports next to wall-clock.
+
+Example (any engine is a drop-in swap at the config level)::
+
+    from repro.fl import FLRunConfig, run_federated
+    cfg = FLRunConfig(engine="vmap")                      # single device
+    cfg = FLRunConfig(engine="shard_map", sim_devices=0)  # all devices
+    run_federated(adapter, clients, eval_set, rounds, cfg)
+
+or directly, one round at a time::
+
+    engine = make_engine("shard_map", trainer=trainer,
+                         partition=partition, algo=algo, sim_devices=2)
+    new_params, losses, _ = engine.run_round(
+        params, spec, datasets, seeds=seeds, weights=weights,
+        epochs=1, batch_size=32)
 """
 
 from __future__ import annotations
@@ -33,8 +54,11 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregation, masking
+from repro.core.compat import SHARD_MAP_NO_CHECK_KW as _SHARD_MAP_KW
+from repro.core.compat import shard_map as _shard_map
 from repro.core.partition import Partition
 from repro.core.schedule import FULL_NETWORK, RoundSpec
 from repro.data.pipeline import ClientDataset, stack_client_batches
@@ -44,7 +68,9 @@ from repro.optim.adam import adam_init
 
 PyTree = Any
 
-ENGINES = ("sequential", "vmap")
+ENGINES = ("sequential", "vmap", "shard_map")
+
+CLIENT_AXIS = "clients"  # mesh axis name the shard_map engine reduces over
 
 
 @dataclasses.dataclass
@@ -101,29 +127,40 @@ class SequentialEngine:
 
 
 @dataclasses.dataclass
-class VmapEngine:
-    """Batched engine: whole round = vmapped local training + on-device agg."""
+class _BatchedEngineBase:
+    """Shared pad-and-mask local-round core for the stacked engines.
+
+    Owns the pieces both batched engines agree on:
+
+    * ``_one_client_fn(group)`` — the scan-over-steps local round for a single
+      client (padded steps masked via ``step_valid``), ready to be ``vmap``-ed
+      over a client axis;
+    * the bucketed batch plan (``_buckets``): one
+      ``data.pipeline.stack_client_batches`` bucket per effective batch
+      width, with the MOON prev-model stacking and padding-client handling;
+    * ``_gather_order`` — concatenating per-bucket per-client outputs back
+      into the round's picked-client order.
+
+    Subclasses implement ``_local_fn`` (how a bucket's stacked clients are
+    executed: plain ``vmap`` vs ``shard_map``-over-mesh) and ``run_round``
+    (how the buckets' results are aggregated).
+    """
 
     trainer: LocalTrainer
     partition: Partition
     algo: AlgoConfig
-    name: str = "vmap"
 
     def __post_init__(self):
         self.trace_count = 0
         self._local_fns: dict[tuple[int, bool], Callable] = {}
-        self._agg_fns: dict[int, Callable] = {}
+        self._agg_fns: dict[Any, Callable] = {}
 
-    # -- compiled-program builders ----------------------------------------
+    # -- shared local-round core -------------------------------------------
 
-    def _local_fn(self, group: int, stacked_prev: bool) -> Callable:
-        """Jitted vmap-over-clients local round for ``group`` (FULL_NETWORK
-        for FNU).  Cached per (group, prev-layout); batch/step widths retrace
-        via jit's shape cache."""
-        key = (group, stacked_prev)
-        if key in self._local_fns:
-            return self._local_fns[key]
-
+    def _one_client_fn(self, group: int) -> Callable:
+        """Single-client local round: ``lax.scan`` over (possibly padded)
+        steps; invalid steps compute but their parameter/optimizer updates and
+        losses are discarded (the pad-and-mask contract)."""
         step_fn = (
             self.trainer.make_full_step()
             if group < 0
@@ -152,6 +189,87 @@ class VmapEngine:
             mean_loss = jnp.sum(step_losses) / jnp.maximum(jnp.sum(step_valid), 1.0)
             return params, mean_loss
 
+        return one_client
+
+    def _local_fn(self, group: int, stacked_prev: bool) -> Callable:
+        raise NotImplementedError
+
+    # -- shared host-side plumbing -----------------------------------------
+
+    def _guard_round(self, weights: Sequence[float], tracker) -> None:
+        if tracker is not None:
+            raise ValueError(
+                "per-step step-size tracking needs engine='sequential' "
+                f"(the {self.name} engine never materialises per-step params)"
+            )
+        # The aggregation normalisation runs inside jit where weights are
+        # traced — guard the degenerate case here, mirroring tree_mean's
+        # host-side check in the sequential engine.
+        if float(sum(weights)) <= 0.0:
+            raise ValueError(
+                f"client weights must sum to a positive value, got {sum(weights)}"
+            )
+
+    def _buckets(
+        self,
+        params: PyTree,
+        datasets: Sequence[ClientDataset],
+        *,
+        batch_size: int,
+        epochs: int,
+        seeds: Sequence[int],
+        prev_params: Sequence[PyTree | None] | None,
+        use_prev: bool,
+        pad_clients_to: int = 1,
+    ):
+        """Yield ``(bucket, prev_arg)`` per batch-width bucket.  ``prev_arg``
+        is the MOON previous-local-model argument: stacked per client (padding
+        clients fall back to the global model) when ``use_prev``, else the
+        global params broadcast unbatched."""
+        for bucket in stack_client_batches(
+            datasets, batch_size, epochs, seeds, pad_clients_to=pad_clients_to
+        ):
+            if use_prev:
+                prevs = [
+                    prev_params[p] if prev_params is not None and prev_params[p] is not None else params
+                    for p in bucket.members
+                ]
+                prevs += [params] * (bucket.num_clients - bucket.num_real)
+                prev_arg = masking.stack_trees(prevs)
+            else:
+                prev_arg = params
+            yield bucket, prev_arg
+
+    @staticmethod
+    def _gather_order(parts: list[tuple[tuple[int, ...], PyTree]], num: int) -> PyTree:
+        """Concatenate per-bucket per-client outputs (leading client axis,
+        already sliced to real members) back into picked-client order."""
+        if len(parts) == 1 and parts[0][0] == tuple(range(num)):
+            return parts[0][1]
+        order = np.concatenate([np.asarray(m) for m, _ in parts])
+        inv = jnp.asarray(np.argsort(order))
+        return jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0)[inv], *[t for _, t in parts]
+        )
+
+
+@dataclasses.dataclass
+class VmapEngine(_BatchedEngineBase):
+    """Batched engine: whole round = vmapped local training + on-device agg."""
+
+    name: str = "vmap"
+
+    # -- compiled-program builders ----------------------------------------
+
+    def _local_fn(self, group: int, stacked_prev: bool) -> Callable:
+        """Jitted vmap-over-clients local round for ``group`` (FULL_NETWORK
+        for FNU).  Cached per (group, prev-layout); batch/step widths retrace
+        via jit's shape cache."""
+        key = (group, stacked_prev)
+        if key in self._local_fns:
+            return self._local_fns[key]
+
+        one_client = self._one_client_fn(group)
         prev_axis = 0 if stacked_prev else None
 
         def local_round(global_params, inputs, labels, step_valid, prev):
@@ -194,51 +312,23 @@ class VmapEngine:
         prev_params: Sequence[PyTree | None] | None = None,
         tracker=None,
     ) -> tuple[PyTree, list[float], list[PyTree] | None]:
-        if tracker is not None:
-            raise ValueError(
-                "per-step step-size tracking needs engine='sequential' "
-                "(the vmap engine never materialises per-step params)"
-            )
-        # The aggregation normalisation runs inside jit where weights are
-        # traced — guard the degenerate case here, mirroring tree_mean's
-        # host-side check in the sequential engine.
-        if float(sum(weights)) <= 0.0:
-            raise ValueError(
-                f"client weights must sum to a positive value, got {sum(weights)}"
-            )
+        self._guard_round(weights, tracker)
         group = FULL_NETWORK if spec.is_full else spec.group
         use_prev = self.algo.name == "moon"
         num = len(datasets)
 
-        parts: list[tuple[tuple[int, ...], PyTree, jax.Array]] = []
-        for bucket in stack_client_batches(datasets, batch_size, epochs, seeds):
-            if use_prev:
-                prev_arg = masking.stack_trees([
-                    prev_params[p] if prev_params is not None and prev_params[p] is not None else params
-                    for p in bucket.members
-                ])
-            else:
-                prev_arg = params
+        parts: list[tuple[tuple[int, ...], tuple[PyTree, jax.Array]]] = []
+        for bucket, prev_arg in self._buckets(
+            params, datasets, batch_size=batch_size, epochs=epochs, seeds=seeds,
+            prev_params=prev_params, use_prev=use_prev,
+        ):
             fn = self._local_fn(group, stacked_prev=use_prev)
             locals_stacked, bucket_losses = fn(
                 params, bucket.inputs, bucket.labels, bucket.step_valid, prev_arg
             )
-            parts.append((bucket.members, locals_stacked, bucket_losses))
+            parts.append((bucket.members, (locals_stacked, bucket_losses)))
 
-        if len(parts) == 1 and parts[0][0] == tuple(range(num)):
-            stacked = parts[0][1]
-            losses_dev = parts[0][2]
-        else:
-            # Multiple batch-width buckets: concatenate along the client axis
-            # and restore the round's picked-client order.
-            order = np.concatenate([np.asarray(m) for m, _, _ in parts])
-            inv = jnp.asarray(np.argsort(order))
-            stacked = jax.tree.map(
-                lambda *xs: jnp.concatenate(xs, axis=0)[inv],
-                *[t for _, t, _ in parts],
-            )
-            losses_dev = jnp.concatenate([l for _, _, l in parts])[inv]
-
+        stacked, losses_dev = self._gather_order(parts, num)
         new_params = self._agg_fn(group)(
             params, stacked, jnp.asarray(weights, dtype=jnp.float32)
         )
@@ -247,11 +337,181 @@ class VmapEngine:
         return new_params, losses, new_locals
 
 
+@dataclasses.dataclass
+class ShardMapEngine(_BatchedEngineBase):
+    """Multi-device engine: client axis sharded over a 1-D mesh.
+
+    Each bucket's stacked clients are padded to a multiple of the mesh size
+    and distributed over the ``"clients"`` axis; every device runs the shared
+    vmapped local-round core for its shard, then the round's transmitted
+    subtree — the trainable group's weight-scaled update, BN running moments
+    dropped — is ``psum``-reduced across the mesh.  Frozen groups are
+    replicated with the broadcast global model and never cross devices, so a
+    partial round's inter-device traffic shrinks exactly like the paper's
+    client<->server communication (Eq. 5).
+
+    ``devices=0`` meshes every visible device.  MOON is the exception to the
+    only-the-update-travels rule: its per-client local models leave the mesh
+    sharded, but ``run_round`` then reorders and unstacks them into the
+    host-side per-client store ``run_federated`` keeps, which does gather
+    them each round (the cost of MOON's contrastive term, not of this
+    engine).
+    """
+
+    name: str = "shard_map"
+    devices: int = 0
+
+    def __post_init__(self):
+        super().__post_init__()
+        from repro.launch.mesh import make_client_mesh
+
+        self.mesh = make_client_mesh(self.devices)
+
+    @property
+    def num_devices(self) -> int:
+        return self.mesh.shape[CLIENT_AXIS]
+
+    # -- compiled-program builders ----------------------------------------
+
+    def _local_fn(self, group: int, stacked_prev: bool) -> Callable:
+        """Jitted shard_map'd (local round + on-mesh weighted reduction) for
+        ``group``.  Each device vmaps its client shard; the weight-scaled
+        trainable-subtree sum is psum'd so the result is replicated."""
+        key = (group, stacked_prev)
+        if key in self._local_fns:
+            return self._local_fns[key]
+
+        one_client = self._one_client_fn(group)
+        partition = self.partition
+        prev_axis = 0 if stacked_prev else None
+
+        def device_round(global_params, inputs, labels, step_valid, prev, w_norm):
+            self.trace_count += 1
+            locals_stacked, losses = jax.vmap(
+                one_client, in_axes=(None, 0, 0, 0, prev_axis)
+            )(global_params, inputs, labels, step_valid, prev)
+            sub = (
+                locals_stacked if group < 0
+                else masking.select(locals_stacked, partition, group)
+            )
+            sub = aggregation.drop_local_stats(sub)
+            update = jax.tree.map(
+                lambda x: jnp.tensordot(w_norm, x.astype(jnp.float32), axes=1), sub
+            )
+            update = jax.lax.psum(update, CLIENT_AXIS)
+            if stacked_prev:
+                return update, losses, locals_stacked
+            return update, losses
+
+        c = P(CLIENT_AXIS)
+        in_specs = (P(), c, c, c, c if stacked_prev else P(), c)
+        out_specs = (P(), c, c) if stacked_prev else (P(), c)
+        self._local_fns[key] = jax.jit(_shard_map(
+            device_round, mesh=self.mesh, in_specs=in_specs,
+            out_specs=out_specs, **_SHARD_MAP_KW,
+        ))
+        return self._local_fns[key]
+
+    def _splice_fn(self, group: int, n_buckets: int) -> Callable:
+        """Sum the buckets' psum'd updates and splice into the global model
+        (cast back to each leaf's dtype; BN stats already dropped on-mesh)."""
+        key = (group, n_buckets)
+        if key in self._agg_fns:
+            return self._agg_fns[key]
+        partition = self.partition
+
+        def splice(global_params, updates):
+            self.trace_count += 1
+            summed = jax.tree.map(lambda *xs: sum(xs), *updates)
+            ref = (
+                global_params if group < 0
+                else masking.select(global_params, partition, group)
+            )
+            ref = aggregation.drop_local_stats(ref)
+            averaged = jax.tree.map(lambda s, r: s.astype(r.dtype), summed, ref)
+            return masking.tree_update(global_params, averaged)
+
+        self._agg_fns[key] = jax.jit(splice)
+        return self._agg_fns[key]
+
+    # -- round execution ---------------------------------------------------
+
+    def run_round(
+        self,
+        params: PyTree,
+        spec: RoundSpec,
+        datasets: Sequence[ClientDataset],
+        *,
+        seeds: Sequence[int],
+        weights: Sequence[float],
+        epochs: int,
+        batch_size: int,
+        prev_params: Sequence[PyTree | None] | None = None,
+        tracker=None,
+    ) -> tuple[PyTree, list[float], list[PyTree] | None]:
+        self._guard_round(weights, tracker)
+        group = FULL_NETWORK if spec.is_full else spec.group
+        use_prev = self.algo.name == "moon"
+        num = len(datasets)
+        w = np.asarray(weights, dtype=np.float32)
+        w_norm = w / w.sum()
+
+        updates: list[PyTree] = []
+        loss_parts: list[tuple[tuple[int, ...], jax.Array]] = []
+        local_parts: list[tuple[tuple[int, ...], PyTree]] = []
+        for bucket, prev_arg in self._buckets(
+            params, datasets, batch_size=batch_size, epochs=epochs, seeds=seeds,
+            prev_params=prev_params, use_prev=use_prev,
+            pad_clients_to=self.num_devices,
+        ):
+            wb = np.zeros(bucket.num_clients, dtype=np.float32)
+            wb[: bucket.num_real] = w_norm[list(bucket.members)]
+            fn = self._local_fn(group, stacked_prev=use_prev)
+            out = fn(params, bucket.inputs, bucket.labels, bucket.step_valid,
+                     prev_arg, wb)
+            update, bucket_losses = out[0], out[1]
+            updates.append(update)
+            n = bucket.num_real
+            loss_parts.append((bucket.members, bucket_losses[:n]))
+            if use_prev:
+                local_parts.append((
+                    bucket.members,
+                    jax.tree.map(lambda x: x[:n], out[2]),
+                ))
+
+        new_params = self._splice_fn(group, len(updates))(params, updates)
+        losses_dev = self._gather_order(loss_parts, num)
+        losses = [float(x) for x in np.asarray(losses_dev)]
+        if use_prev:
+            stacked = self._gather_order(local_parts, num)
+            new_locals = masking.unstack_tree(stacked, num)
+        else:
+            new_locals = None
+        return new_params, losses, new_locals
+
+
 def make_engine(
-    name: str, *, trainer: LocalTrainer, partition: Partition, algo: AlgoConfig
+    name: str,
+    *,
+    trainer: LocalTrainer,
+    partition: Partition,
+    algo: AlgoConfig,
+    sim_devices: int = 0,
 ):
+    """Build a client-simulation engine by name.
+
+    ``sim_devices`` only matters for ``"shard_map"``: the number of devices
+    to mesh over the ``"clients"`` axis (0 = all visible devices)::
+
+        engine = make_engine("vmap", trainer=trainer, partition=partition,
+                             algo=AlgoConfig())
+        engine.run_round(...)   # same contract for every engine
+    """
     if name == "sequential":
         return SequentialEngine(trainer=trainer, partition=partition, algo=algo)
     if name == "vmap":
         return VmapEngine(trainer=trainer, partition=partition, algo=algo)
+    if name == "shard_map":
+        return ShardMapEngine(trainer=trainer, partition=partition, algo=algo,
+                              devices=sim_devices)
     raise ValueError(f"unknown engine {name!r}; expected one of {ENGINES}")

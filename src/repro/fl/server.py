@@ -12,8 +12,14 @@ Client execution is delegated to a pluggable engine (``repro.fl.batched``):
   selected clients, one jitted dispatch per (client, step);
 * ``engine="vmap"``       — the batched engine: clients stacked along a
   leading axis, the whole local round one vmapped compiled program and the
-  aggregation one on-device reduction (equivalent to the oracle to <=1e-5;
-  see ``tests/test_engine_equivalence.py``).
+  aggregation one on-device reduction;
+* ``engine="shard_map"``  — the multi-device engine: the stacked client axis
+  sharded over a 1-D "clients" mesh (``sim_devices`` of them; 0 = all), local
+  rounds vmapped per device and aggregation an on-mesh psum of the
+  transmitted subtree only.
+
+All three are equivalent to <=1e-5 (``tests/test_engine_equivalence.py``);
+docs/ENGINES.md is the quick reference for picking one.
 """
 
 from __future__ import annotations
@@ -49,7 +55,8 @@ class FLRunConfig:
     eval_every: int = 1
     eval_batch: int = 256
     track_stepsizes: bool = False
-    engine: str = "sequential"      # "sequential" (oracle) | "vmap" (batched)
+    engine: str = "sequential"      # "sequential" | "vmap" | "shard_map"
+    sim_devices: int = 0            # shard_map mesh size (0 = all devices)
 
 
 @dataclasses.dataclass
@@ -96,7 +103,8 @@ def run_federated(
         adam=AdamConfig(lr=run_cfg.lr, eps=run_cfg.adam_eps),
     )
     engine = make_engine(
-        run_cfg.engine, trainer=trainer, partition=partition, algo=run_cfg.algo
+        run_cfg.engine, trainer=trainer, partition=partition,
+        algo=run_cfg.algo, sim_devices=run_cfg.sim_devices,
     )
     rng = np.random.default_rng(run_cfg.seed)
     eval_x, eval_y = eval_set

@@ -1,0 +1,38 @@
+"""Pre-jax-import helper: force N simulated CPU host devices.
+
+XLA reads ``XLA_FLAGS`` once, at backend init, so this must run before the
+first ``import jax`` anywhere in the process — which is why this module
+imports nothing but the stdlib and why entry points (launch/fedtrain.py,
+examples/quickstart.py, benchmarks/engine_bench.py) call it at the very top
+of the file, before their other imports pull jax in.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+
+def force_sim_devices(argv: list[str] | None = None) -> None:
+    """Scan argv for ``--sim-devices N`` / ``--sim-devices=N``; for N > 1,
+    append ``--xla_force_host_platform_device_count=N`` to ``XLA_FLAGS``.
+
+    Missing or non-numeric values are ignored here — argparse sees the same
+    argv later and prints the real usage error.
+    """
+    argv = sys.argv[1:] if argv is None else argv
+    val = None
+    for i, arg in enumerate(argv):
+        if arg == "--sim-devices" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif arg.startswith("--sim-devices="):
+            val = arg.split("=", 1)[1]
+    try:
+        n = int(val) if val is not None else 0
+    except ValueError:
+        return
+    if n > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}"
+        ).strip()

@@ -19,9 +19,14 @@ It also fronts the many-client *simulation* half (fl/) so the engine choice is
 a launch-surface flag: ``--sim-clients N`` runs the paper-faithful federation
 on a synthetic vision task with ``--engine sequential`` (per-client oracle
 loop, the default — the conv model hits vmap's grouped-conv slow path on
-XLA:CPU) or ``--engine vmap`` (batched vmap-over-clients):
+XLA:CPU), ``--engine vmap`` (batched vmap-over-clients), or
+``--engine shard_map`` (clients sharded over ``--sim-devices`` mesh devices;
+on CPU the flag also forces that many simulated host devices — see
+docs/ENGINES.md):
 
     python -m repro.launch.fedtrain --sim-clients 8 --rounds 12 --engine vmap
+    python -m repro.launch.fedtrain --sim-clients 8 --rounds 12 \
+        --engine shard_map --sim-devices 4
 """
 
 from __future__ import annotations
@@ -29,6 +34,12 @@ from __future__ import annotations
 import argparse
 import time
 from typing import Any
+
+if __name__ == "__main__":
+    # --sim-devices N on CPU simulates an N-device host; XLA reads the flag
+    # at first-import time, so it must be set before jax loads below.
+    from repro.launch._simdev import force_sim_devices
+    force_sim_devices()
 
 import jax
 import jax.numpy as jnp
@@ -116,7 +127,7 @@ def run_simulation(args) -> int:
     sched = FedPartSchedule(num_groups=10, warmup_rounds=args.warmup,
                             rounds_per_layer=args.rl, cycles=cycles)
     cfg = FLRunConfig(local_epochs=1, batch_size=args.batch, lr=args.lr,
-                      engine=args.engine)
+                      engine=args.engine, sim_devices=args.sim_devices)
     t0 = time.time()
     res = run_federated(adapter, clients, eval_set,
                         sched.rounds()[: args.rounds], cfg, verbose=True)
@@ -142,10 +153,15 @@ def main(argv=None) -> int:
     ap.add_argument("--sim-clients", type=int, default=0,
                     help="simulate N federated clients (fl/ stack) instead of "
                          "the mesh trainer")
-    ap.add_argument("--engine", choices=["sequential", "vmap"],
+    ap.add_argument("--engine", choices=["sequential", "vmap", "shard_map"],
                     default="sequential",
                     help="client engine for --sim-clients: per-client oracle "
-                         "loop (default) or batched vmap-over-clients")
+                         "loop (default), batched vmap-over-clients, or "
+                         "mesh-sharded shard_map (see --sim-devices)")
+    ap.add_argument("--sim-devices", type=int, default=0,
+                    help="shard_map mesh size over the 'clients' axis "
+                         "(0 = all visible devices; on CPU, N>1 also forces "
+                         "N simulated host devices)")
     args = ap.parse_args(argv)
 
     if args.sim_clients > 0:

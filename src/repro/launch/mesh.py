@@ -9,6 +9,7 @@ jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -20,6 +21,27 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests / local runs)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_client_mesh(devices: int = 0) -> jax.sharding.Mesh:
+    """1-D mesh with a single ``"clients"`` axis for the FL simulation's
+    shard_map engine (``repro.fl.batched.ShardMapEngine``): the round's
+    stacked client axis is sharded over it, one vmapped shard per device.
+
+    ``devices=0`` takes every visible device; otherwise the first ``devices``
+    of them.  On CPU, simulate a multi-device host with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before the
+    first jax import).
+    """
+    avail = jax.devices()
+    n = len(avail) if devices in (0, None) else int(devices)
+    if n < 1 or n > len(avail):
+        raise ValueError(
+            f"requested {devices} mesh devices but only {len(avail)} are "
+            "visible; on CPU set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=N before the first jax import"
+        )
+    return jax.sharding.Mesh(np.asarray(avail[:n]), ("clients",))
 
 
 def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

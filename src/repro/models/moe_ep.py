@@ -33,20 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-# jax >= 0.5 promotes shard_map to jax.shard_map; the replication-check
-# kwarg was also renamed (check_rep -> check_vma) on its own schedule, so
-# pick both the symbol and the kwarg by inspection, not version guesswork.
-import inspect as _inspect
-
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-else:  # pragma: no cover - depends on installed jax
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-_SHARD_MAP_KW = {
-    ("check_vma" if "check_vma" in _inspect.signature(_shard_map).parameters
-     else "check_rep"): False
-}
+# The jax shard_map symbol/kwarg churn is resolved once in core/compat.py.
+from repro.core.compat import SHARD_MAP_NO_CHECK_KW as _SHARD_MAP_KW
+from repro.core.compat import shard_map as _shard_map
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import mlp_flops

@@ -123,3 +123,32 @@ def test_stack_client_batches_seed_count_mismatch():
     ds = ClientDataset(np.zeros((8, 2)), np.zeros(8, dtype=np.int64))
     with pytest.raises(ValueError, match="seed"):
         stack_client_batches([ds], batch_size=4, epochs=1, seeds=[1, 2])
+
+
+def test_stack_client_batches_pads_clients_to_mesh_multiple():
+    from repro.data import ClientDataset, stack_client_batches
+
+    rng = np.random.default_rng(3)
+    sizes = [5, 16, 24, 32]               # buckets: bs=5 (1 client), bs=8 (3)
+    dss = [ClientDataset(rng.normal(size=(n, 4)), rng.integers(0, 3, n))
+           for n in sizes]
+    buckets = stack_client_batches(dss, batch_size=8, epochs=1,
+                                   seeds=[1, 2, 3, 4], pad_clients_to=4)
+    # every bucket's client axis is a multiple of 4; members stay real-only
+    assert [b.num_clients for b in buckets] == [4, 4]
+    assert [b.num_real for b in buckets] == [1, 3]
+    assert buckets[0].members == (0,)
+    assert buckets[1].members == (1, 2, 3)
+    for b in buckets:
+        # padding clients copy the first member's data with all steps invalid
+        for row in range(b.num_real, b.num_clients):
+            np.testing.assert_array_equal(b.inputs[row], b.inputs[0])
+            assert b.step_valid[row].sum() == 0
+        # real rows are untouched by padding
+        for row, pos in enumerate(b.members):
+            seq = list(dss[pos].batches(8, 1, [1, 2, 3, 4][pos]))
+            assert b.step_valid[row].sum() == len(seq)
+
+    with pytest.raises(ValueError, match="pad_clients_to"):
+        stack_client_batches(dss, batch_size=8, epochs=1,
+                             seeds=[1, 2, 3, 4], pad_clients_to=0)

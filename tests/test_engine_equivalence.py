@@ -1,10 +1,17 @@
-"""The batched vmap engine must match the sequential oracle.
+"""The batched engines (vmap, shard_map) must match the sequential oracle.
 
-Same federation, same schedule, same seeds, both engines: global params,
+Same federation, same schedule, same seeds, every engine: global params,
 per-round history losses, and the comm/comp cost books must agree to <=1e-5
 for FNU and partial rounds, across FedAvg / FedProx / MOON, including ragged
 client sizes (different step counts, and — in the bucket test — a client
 smaller than the batch size, which lands in its own batch-width bucket).
+
+The shard_map engine is additionally pinned against the oracle on a
+*multi-device* mesh: a subprocess forces 2 simulated host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=2``, which must precede
+the first jax import — hence the subprocess, same pattern as
+tests/test_moe_ep.py) so the client axis is genuinely sharded, padding
+clients and all.  In-process tests cover the degenerate 1-device mesh.
 
 Note on Adam eps: with the default eps=1e-8, Adam's bias-corrected first
 steps normalise near-zero gradients to ±1, so benign float reassociation
@@ -113,15 +120,17 @@ def test_vmap_matches_sequential_fnu_only(setup):
     _assert_equivalent(seq, vm)
 
 
-def test_vmap_rejects_stepsize_tracking(setup):
+@pytest.mark.parametrize("engine", ["vmap", "shard_map"])
+def test_batched_engines_reject_stepsize_tracking(setup, engine):
     adapter, clients, eval_set = setup
-    cfg = FLRunConfig(local_epochs=1, batch_size=BATCH, engine="vmap",
+    cfg = FLRunConfig(local_epochs=1, batch_size=BATCH, engine=engine,
                       track_stepsizes=True)
     with pytest.raises(ValueError, match="sequential"):
         run_federated(adapter, clients, eval_set, FNUSchedule(1).rounds(), cfg)
 
 
-def test_vmap_zero_weight_guard(setup):
+@pytest.mark.parametrize("engine", ["vmap", "shard_map"])
+def test_batched_engines_zero_weight_guard(setup, engine):
     """Degenerate round weights must raise (as the oracle does via
     tree_mean), not propagate NaN through the on-device aggregation."""
     from repro.fl import LocalTrainer, make_engine
@@ -133,7 +142,7 @@ def test_vmap_zero_weight_guard(setup):
     algo = AlgoConfig()
     trainer = LocalTrainer(adapter=adapter, partition=part, algo=algo,
                            adam=AdamConfig(lr=1e-3))
-    engine = make_engine("vmap", trainer=trainer, partition=part, algo=algo)
+    engine = make_engine(engine, trainer=trainer, partition=part, algo=algo)
     with pytest.raises(ValueError, match="positive"):
         engine.run_round(params, MIXED[1], clients,
                          seeds=[1, 2, 3], weights=[0, 0, 0],
@@ -145,3 +154,110 @@ def test_unknown_engine_rejected(setup):
     cfg = FLRunConfig(engine="pmap")
     with pytest.raises(ValueError, match="unknown engine"):
         run_federated(adapter, clients, eval_set, FNUSchedule(1).rounds(), cfg)
+
+
+# -- shard_map engine -------------------------------------------------------
+
+
+def test_shard_map_matches_sequential_single_device(setup):
+    """Degenerate 1-device mesh: the shard_map machinery (client padding,
+    on-mesh psum, splice) must already agree in-process before the
+    multi-device subprocess test sharpens it."""
+    seq = _run(setup, "fedavg", "sequential", MIXED)
+    sm = _run(setup, "fedavg", "shard_map", MIXED)
+    _assert_equivalent(seq, sm)
+
+
+def test_shard_map_rejects_oversized_mesh(setup):
+    """Asking for more mesh devices than exist must fail with the hint about
+    forcing host devices, not a cryptic mesh error."""
+    adapter, clients, eval_set = setup
+    cfg = FLRunConfig(local_epochs=1, batch_size=BATCH, engine="shard_map",
+                      sim_devices=len(jax.devices()) + 1)
+    with pytest.raises(ValueError, match="host"):
+        run_federated(adapter, clients, eval_set, FNUSchedule(1).rounds(), cfg)
+
+
+# The multi-device run needs XLA_FLAGS before the first jax import, so it
+# lives in a subprocess (the pattern test_moe_ep.py established).  2 forced
+# host devices, ragged clients (3 -> padded to 4, two per device), plus a
+# small-client two-bucket case; sequential vs shard_map for all three
+# algorithms, vmap riding along on fedavg to pin the three-way equality.
+_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys, json
+sys.path.insert(0, "src")
+import jax
+import numpy as np
+jax.config.update("jax_compilation_cache_dir", os.path.abspath(".jax_cache"))
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.2)
+
+from repro.core.schedule import FedPartSchedule
+from repro.data import (VisionDatasetSpec, balanced_eval_set, build_clients,
+                        make_vision_dataset)
+from repro.fl import AlgoConfig, FLRunConfig, resnet_task, run_federated
+
+assert len(jax.devices()) == 2, jax.devices()
+
+def make_setup(client_sizes):
+    spec = VisionDatasetSpec(num_classes=4, image_size=8)
+    X, y = make_vision_dataset(spec, sum(client_sizes), seed=0)
+    Xe, ye = make_vision_dataset(spec, 64, seed=9)
+    eval_set = balanced_eval_set(Xe, ye, per_class=8)
+    bounds = np.cumsum((0,) + tuple(client_sizes))
+    parts = [np.arange(bounds[i], bounds[i + 1])
+             for i in range(len(client_sizes))]
+    return resnet_task("resnet4", num_classes=4), build_clients(X, y, parts), eval_set
+
+def run(setup, algo, engine, rounds):
+    adapter, clients, eval_set = setup
+    cfg = FLRunConfig(local_epochs=1, batch_size=16, lr=2e-3, adam_eps=1e-3,
+                      algo=AlgoConfig(name=algo), engine=engine, sim_devices=2)
+    return run_federated(adapter, clients, eval_set, rounds, cfg)
+
+def diffs(a, b):
+    pd = max(float(np.max(np.abs(np.asarray(x) - np.asarray(z))))
+             for x, z in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)))
+    ld = max(abs(x["loss"] - z["loss"]) for x, z in zip(a.history, b.history))
+    books = (a.comm_total_bytes == b.comm_total_bytes
+             and a.comm_fnu_bytes == b.comm_fnu_bytes
+             and a.comp_total_flops == b.comp_total_flops
+             and a.comp_fnu_flops == b.comp_fnu_flops)
+    return {"param_maxdiff": pd, "loss_maxdiff": ld, "books_equal": books}
+
+MIXED = FedPartSchedule(num_groups=6, warmup_rounds=1, rounds_per_layer=1,
+                        cycles=1).rounds()[:2]
+results = {}
+ragged = make_setup((36, 56, 40))         # one bucket, padded 3 -> 4 clients
+for algo in ("fedavg", "fedprox", "moon"):
+    seq = run(ragged, algo, "sequential", MIXED)
+    shard = run(ragged, algo, "shard_map", MIXED)
+    results[algo] = diffs(seq, shard)
+    if algo == "fedavg":
+        results["fedavg_vmap_vs_shard"] = diffs(
+            run(ragged, algo, "vmap", MIXED), shard)
+buckets = make_setup((12, 36, 20))        # two buckets, each padded to 2
+results["fedavg_buckets"] = diffs(
+    run(buckets, "fedavg", "sequential", MIXED[1:]),
+    run(buckets, "fedavg", "shard_map", MIXED[1:]))
+print(json.dumps(results))
+"""
+
+
+def test_shard_map_matches_sequential_multidevice():
+    import json
+    import os
+    import subprocess
+    import sys
+
+    res = subprocess.run(
+        [sys.executable, "-c", _SHARD_SCRIPT], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=900,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    for case, r in out.items():
+        assert r["param_maxdiff"] <= 1e-5, (case, r)
+        assert r["loss_maxdiff"] <= 1e-5, (case, r)
+        assert r["books_equal"], (case, r)

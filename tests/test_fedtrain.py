@@ -35,6 +35,30 @@ def test_rounds_cycle_and_learn(setup):
     assert losses[-1] < losses[0]          # same batch -> must improve
 
 
+def test_force_sim_devices_flag_forms(monkeypatch):
+    """The pre-jax-import sniffer must accept both '--sim-devices N' and
+    '--sim-devices=N', and leave malformed argv for argparse to reject."""
+    import os
+
+    from repro.launch._simdev import force_sim_devices
+
+    for argv in (["--sim-devices", "4"], ["--sim-devices=4"]):
+        monkeypatch.delenv("XLA_FLAGS", raising=False)
+        force_sim_devices(argv)
+        assert os.environ["XLA_FLAGS"] == \
+            "--xla_force_host_platform_device_count=4"
+    monkeypatch.setenv("XLA_FLAGS", "--existing")
+    force_sim_devices(["--sim-devices", "2"])
+    assert os.environ["XLA_FLAGS"] == \
+        "--existing --xla_force_host_platform_device_count=2"
+    # no-ops: N<=1, missing value, non-numeric value (argparse's job)
+    for argv in (["--sim-devices", "1"], ["--sim-devices"],
+                 ["--sim-devices", "lots"], []):
+        monkeypatch.delenv("XLA_FLAGS", raising=False)
+        force_sim_devices(argv)
+        assert "XLA_FLAGS" not in os.environ
+
+
 def test_transmission_ledger(setup):
     cfg, params, trainer, _ = setup
     full = trainer.transmitted_params(params, RoundSpec(0, "warmup", -1, FULL_NETWORK))

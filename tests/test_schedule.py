@@ -51,3 +51,66 @@ def test_matched_fnu_budget():
     f = matched_fnu(s)
     assert f.total_rounds == s.total_rounds
     assert all(r.is_full for r in f.rounds())
+
+
+def test_zero_cycles_is_warmup_only():
+    """cycles=0: no partial rounds, no bridges — just the FNU warm-up (the
+    degenerate FedAvg corner of the schedule space)."""
+    s = FedPartSchedule(num_groups=7, warmup_rounds=3, rounds_per_layer=2,
+                        cycles=0, bridge_rounds=5)
+    rounds = s.rounds()
+    assert len(rounds) == s.total_rounds == 3
+    assert all(r.phase == "warmup" and r.is_full for r in rounds)
+
+
+def test_zero_warmup_starts_partial_immediately():
+    s = FedPartSchedule(num_groups=3, warmup_rounds=0, rounds_per_layer=2,
+                        cycles=2, bridge_rounds=1)
+    rounds = s.rounds()
+    assert rounds[0].phase == "partial" and rounds[0].group == 0
+    assert len(rounds) == s.total_rounds == 0 + 2 * 3 * 2 + 1
+    assert all(r.index == i for i, r in enumerate(rounds))
+
+
+def test_random_order_deterministic_and_per_cycle():
+    """order="random" under a fixed seed: identical schedule objects produce
+    identical round lists, and each cycle draws a *fresh* permutation from the
+    one generator (so cycles differ from each other with overwhelming
+    probability at 8! arrangements)."""
+    mk = lambda: FedPartSchedule(num_groups=8, warmup_rounds=1,
+                                 rounds_per_layer=1, cycles=3,
+                                 bridge_rounds=2, order="random", seed=7)
+    a, b = mk().rounds(), mk().rounds()
+    assert [(r.phase, r.group) for r in a] == [(r.phase, r.group) for r in b]
+    per_cycle = [[r.group for r in a if r.phase == "partial" and r.cycle == c]
+                 for c in range(3)]
+    assert all(sorted(g) == list(range(8)) for g in per_cycle)
+    assert len({tuple(g) for g in per_cycle}) > 1
+
+
+def test_schedule_doctests_run():
+    """The runnable examples in core/schedule.py's docstrings must actually
+    run (pytest.ini doesn't collect doctests globally, so exercise them
+    here — docs that can rot silently aren't docs)."""
+    import doctest
+
+    import repro.core.schedule as m
+
+    res = doctest.testmod(m)
+    assert res.failed == 0
+    assert res.attempted >= 4     # module example + FedPartSchedule examples
+
+
+def test_round_count_matches_paper_formula():
+    """total_rounds == W + C*M*(R/L) + (C-1)*B across a grid: the paper's
+    W + C*(M*R/L + B) budget with the last cycle's bridge dropped (bridges
+    only separate cycles; code and docstring agree)."""
+    for W in (0, 2, 5):
+        for C in (1, 2, 4):
+            for M, RL, B in ((3, 1, 2), (10, 2, 5), (6, 3, 0)):
+                s = FedPartSchedule(num_groups=M, warmup_rounds=W,
+                                    rounds_per_layer=RL, cycles=C,
+                                    bridge_rounds=B)
+                expect = W + C * M * RL + (C - 1) * B
+                assert s.total_rounds == expect
+                assert len(s.rounds()) == expect
