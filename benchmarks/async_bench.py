@@ -1,0 +1,152 @@
+"""Async-runtime bench: staleness x participation time-to-accuracy sweep.
+
+For a fixed FedPart schedule on the tiny-transformer NLP task (the regime
+where the batched engines win on CPU — docs/ENGINES.md), sweep the async
+runtime's two levers against a heterogeneous, jittery fleet:
+
+* **participation** — the fraction of the fleet sampled per dispatch
+  (``FLRunConfig.sample_fraction``);
+* **staleness exponent** — the polynomial discount ``(1+s)^-a`` FedBuff
+  applies to late updates (0 = no discount).
+
+plus the sync-barrier oracle as the reference row.  Each cell reports final
+and best accuracy, *virtual* total time, time-to-accuracy at the threshold,
+and the max staleness actually observed — the trade the async literature
+cares about (fast virtual clock vs degraded merges).  Results are printed as
+the usual CSV rows and, with ``--json``, written machine-readable for the
+``BENCH_*.json`` trajectory.
+
+    PYTHONPATH=src python benchmarks/async_bench.py --clients 8 --rounds 12
+    PYTHONPATH=src python benchmarks/async_bench.py --json async.json
+
+Also exposes ``run(quick=True)`` for ``python -m benchmarks.run``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, "src")
+# repo root, so `benchmarks.common` resolves when run as a script too
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.schedule import FedPartSchedule
+from repro.data import (TextDatasetSpec, balanced_eval_set, build_clients,
+                        iid_partition, make_text_dataset)
+from repro.fl import AvailabilityConfig, FLRunConfig, nlp_task, run_federated
+
+
+def _setup(clients: int, samples_per_client: int):
+    cfg = get_config("nlp-transformer", smoke=True).with_(
+        num_layers=1, d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+        vocab_size=256, max_position_embeddings=12)
+    spec = TextDatasetSpec(num_classes=4, vocab_size=256, seq_len=12)
+    X, y = make_text_dataset(spec, samples_per_client * clients, seed=0)
+    Xe, ye = make_text_dataset(spec, 320, seed=99)
+    eval_set = balanced_eval_set(Xe, ye, per_class=32)
+    data = build_clients(X, y, iid_partition(len(y), clients, seed=0))
+    adapter = nlp_task(num_classes=4, cfg=cfg)
+    num_groups = adapter.partition(adapter.init(jax.random.key(0))).num_groups
+    return adapter, data, eval_set, num_groups
+
+
+def bench(clients=8, samples_per_client=32, rounds=12, threshold=0.4,
+          participations=(1.0, 0.5), staleness_exps=(0.0, 0.5, 2.0),
+          speed_spread=3.0, verbose=True):
+    adapter, data, eval_set, num_groups = _setup(clients, samples_per_client)
+    sched = FedPartSchedule(num_groups=num_groups, warmup_rounds=2,
+                            rounds_per_layer=1, cycles=3, bridge_rounds=1)
+    specs = sched.rounds()[:rounds]
+    fleet = AvailabilityConfig(speed_spread=speed_spread, latency_jitter=0.2,
+                               seed=7)
+    base = dict(local_epochs=1, batch_size=8, lr=3e-3, engine="vmap",
+                availability=fleet)
+
+    configs = [("sync_oracle", dict(runtime="async", async_policy="sync",
+                                    sample_fraction=1.0))]
+    for part in participations:
+        for a in staleness_exps:
+            configs.append((
+                f"fedbuff_p{part:g}_a{a:g}",
+                dict(runtime="async", async_policy="fedbuff",
+                     buffer_k=max(1, int(round(part * clients)) // 2),
+                     staleness_exponent=a, sample_fraction=part),
+            ))
+
+    rows = []
+    for name, kw in configs:
+        cfg = FLRunConfig(**base, **kw)
+        t0 = time.time()
+        res = run_federated(adapter, data, eval_set, specs, cfg)
+        wall = time.time() - t0
+        tl = res.timeline
+        tta = tl.time_to_accuracy(threshold)
+        stale = max((h["staleness_max"] for h in res.history), default=0)
+        row = {
+            "name": f"async_{name}_c{clients}",
+            "us_per_call": 1e6 * wall / max(len(specs), 1),
+            "derived": (f"best_acc={res.best_acc:.4f} "
+                        f"vtime={tl.total_seconds:.2f}s "
+                        f"tta@{threshold:g}="
+                        f"{'inf' if np.isinf(tta) else f'{tta:.2f}'} "
+                        f"max_stale={stale}"),
+            "best_acc": res.best_acc,
+            "final_acc": res.final_acc,
+            "virtual_seconds": tl.total_seconds,
+            "time_to_accuracy": None if np.isinf(tta) else tta,
+            "accuracy_curve": tl.accuracy_curve(),
+            "max_staleness": stale,
+            "delivered_comm_bytes": tl.delivered_comm_bytes,
+            "spent_comp_flops": tl.spent_comp_flops,
+            "participation": kw.get("sample_fraction", 1.0),
+            "staleness_exponent": kw.get("staleness_exponent", 0.0),
+            "buffer_k": kw.get("buffer_k", 0),
+            "policy": kw["async_policy"],
+        }
+        rows.append(row)
+        if verbose:
+            print(f"[{name:20s}] wall={wall:5.1f}s {row['derived']}")
+    return rows
+
+
+def run(quick: bool = True):
+    """Harness hook: a reduced sweep in quick mode."""
+    if quick:
+        return bench(clients=6, rounds=8, participations=(0.5,),
+                     staleness_exps=(0.0, 2.0), verbose=False)
+    return bench(clients=16, rounds=24, verbose=False)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--samples-per-client", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--threshold", type=float, default=0.4,
+                    help="accuracy threshold for time-to-accuracy")
+    ap.add_argument("--speed-spread", type=float, default=3.0)
+    ap.add_argument("--json", default="",
+                    help="also write rows as machine-readable JSON to PATH")
+    args = ap.parse_args(argv)
+    rows = bench(clients=args.clients,
+                 samples_per_client=args.samples_per_client,
+                 rounds=args.rounds, threshold=args.threshold,
+                 speed_spread=args.speed_spread)
+    if args.json:
+        from benchmarks.common import write_json_rows
+        write_json_rows(args.json, rows, bench="async_bench",
+                        clients=args.clients, rounds=args.rounds,
+                        threshold=args.threshold,
+                        speed_spread=args.speed_spread)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,6 +8,8 @@ prints them as CSV.  ``us_per_call`` is wall-time per communication round.
 
 from __future__ import annotations
 
+import json
+import platform
 import time
 
 import numpy as np
@@ -50,6 +52,29 @@ def fedpart_schedule(num_groups, quick=True, cycles=1, rl=1, warmup=2,
     return FedPartSchedule(num_groups=num_groups, warmup_rounds=warmup,
                            rounds_per_layer=rl, cycles=cycles,
                            bridge_rounds=bridge, order=order, seed=seed)
+
+
+def write_json_rows(path: str, rows: list[dict], **meta) -> None:
+    """Write bench rows as machine-readable JSON (the ``BENCH_*.json``
+    trajectory format): ``{"meta": {...}, "rows": [...]}`` with enough
+    environment context to compare runs across commits."""
+    import jax
+
+    payload = {
+        "meta": {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "python": platform.python_version(),
+            **meta,
+        },
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=False)
+        f.write("\n")
+    print(f"[json] wrote {len(rows)} rows -> {path}")
 
 
 def timed_run(name, adapter, clients, eval_set, rounds, run_cfg):

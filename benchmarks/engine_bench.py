@@ -20,20 +20,31 @@ way.  CPU "devices" forced via --sim-devices share the same physical cores:
 shard_map numbers there measure engine overhead, not real parallel speedup
 (docs/ENGINES.md).
 
+The batched engines donate the global params into their aggregation jit by
+default (in-place splice; ``make_engine(donate=...)``): each batched-engine
+timing is taken both ways and a ``*_donate_delta`` row records the
+throughput change and the live-device-buffer delta.
+
     PYTHONPATH=src python benchmarks/engine_bench.py --clients 8 --reps 5
     PYTHONPATH=src python benchmarks/engine_bench.py \
         --engine shard_map --sim-devices 4
+    PYTHONPATH=src python benchmarks/engine_bench.py --json bench.json
 
-Also exposes ``run(quick=True)`` for ``python -m benchmarks.run``.
+``--json PATH`` additionally writes the rows as machine-readable JSON (the
+``BENCH_*.json`` trajectory format).  Also exposes ``run(quick=True)`` for
+``python -m benchmarks.run``.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
 sys.path.insert(0, "src")
+# repo root, so `benchmarks.common` resolves when run as a script too
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 if __name__ == "__main__":
     # shard_map on CPU: simulate N host devices (XLA reads the flag at
@@ -75,31 +86,46 @@ def _setup(task: str, clients: int, samples_per_client: int):
     return adapter, data, params, adapter.partition(params), batch_size
 
 
+def _live_bytes() -> int:
+    import gc
+    gc.collect()
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.live_arrays())
+
+
 def _time_engine(engine_name, adapter, data, params, partition, spec,
-                 *, epochs, batch_size, reps, sim_devices=0):
+                 *, epochs, batch_size, reps, sim_devices=0, donate=True):
     """Fresh trainer+engine; one warmup round (compile), then ``reps`` timed
-    rounds.  Returns (seconds_per_round, traces_compiled, mesh_devices)."""
+    rounds.  Returns (seconds_per_round, traces, mesh_devices, live_bytes).
+
+    With donation on, ``run_round`` consumes its params argument, so the
+    timed loop threads the returned tree through a private copy (identical
+    shapes every round — no retraces, same per-round work either way)."""
     algo = AlgoConfig()
     trainer = LocalTrainer(adapter=adapter, partition=partition, algo=algo,
                            adam=AdamConfig(lr=1e-3))
     engine = make_engine(engine_name, trainer=trainer, partition=partition,
-                         algo=algo, sim_devices=sim_devices)
+                         algo=algo, sim_devices=sim_devices, donate=donate)
     seeds = list(range(len(data)))
     weights = [len(d) for d in data]
+    import jax.numpy as jnp
+    p = jax.tree.map(jnp.copy, params)   # donation-safe private copy
 
-    def one_round():
+    def one_round(p):
         new_params, _, _ = engine.run_round(
-            params, spec, data, seeds=seeds, weights=weights,
+            p, spec, data, seeds=seeds, weights=weights,
             epochs=epochs, batch_size=batch_size)
         jax.block_until_ready(jax.tree.leaves(new_params))
+        return new_params
 
-    one_round()                      # compile
+    p = one_round(p)                 # compile
     t0 = time.perf_counter()
     for _ in range(reps):
-        one_round()
+        p = one_round(p)
     per_round = (time.perf_counter() - t0) / reps
+    live = _live_bytes()
     devices = getattr(engine, "num_devices", 1)
-    return per_round, engine.trace_count, devices
+    return per_round, engine.trace_count, devices, live
 
 
 def bench(task="nlp", clients=8, samples_per_client=32, epochs=1, reps=5,
@@ -113,10 +139,9 @@ def bench(task="nlp", clients=8, samples_per_client=32, epochs=1, reps=5,
     ]:
         times, traces = {}, {}
         for name in engines:
-            sec, tr, ndev = _time_engine(name, adapter, data, params,
-                                         partition, spec, epochs=epochs,
-                                         batch_size=batch_size, reps=reps,
-                                         sim_devices=sim_devices)
+            sec, tr, ndev, live = _time_engine(
+                name, adapter, data, params, partition, spec, epochs=epochs,
+                batch_size=batch_size, reps=reps, sim_devices=sim_devices)
             times[name], traces[name] = sec, tr
             derived = f"traces={tr}"
             extra = ""
@@ -135,6 +160,25 @@ def bench(task="nlp", clients=8, samples_per_client=32, epochs=1, reps=5,
                 print(f"[{task}:{phase:7s}] clients={clients:3d} "
                       f"{name}={sec*1e3:8.1f} ms/round "
                       f"(traces={tr}){extra}")
+            if name != "sequential":
+                # Buffer-donation delta: same engine with donate=False (the
+                # pre-donation behavior) vs the donate=True timing above.
+                sec_nd, _, _, live_nd = _time_engine(
+                    name, adapter, data, params, partition, spec,
+                    epochs=epochs, batch_size=batch_size, reps=reps,
+                    sim_devices=sim_devices, donate=False)
+                thr_delta = (sec_nd / sec - 1.0) * 100.0
+                mem_delta = (live_nd - live) / 1e6
+                rows.append({
+                    "name": f"engine_{task}_{phase}_{name}_donate_delta_c{clients}",
+                    "us_per_call": (sec_nd - sec) * 1e6,
+                    "derived": (f"donate {thr_delta:+.1f}% throughput "
+                                f"{mem_delta:+.2f}MB live saved"),
+                })
+                if verbose:
+                    print(f"[{task}:{phase:7s}] clients={clients:3d} "
+                          f"{name} donation: {thr_delta:+.1f}% throughput, "
+                          f"live buffers {mem_delta:+.2f} MB vs no-donate")
         if "sequential" in times:
             for name in engines:
                 if name == "sequential":
@@ -175,6 +219,8 @@ def main(argv=None) -> int:
     ap.add_argument("--sim-devices", type=int, default=0,
                     help="shard_map mesh size; on CPU, N>1 forces N "
                          "simulated host devices (must be first jax use)")
+    ap.add_argument("--json", default="",
+                    help="also write rows as machine-readable JSON to PATH")
     args = ap.parse_args(argv)
     if args.engine == "all":
         engines = ("sequential", "vmap")
@@ -182,9 +228,16 @@ def main(argv=None) -> int:
         engines = ("sequential",)
     else:
         engines = ("sequential", args.engine)
-    bench(task=args.task, clients=args.clients,
-          samples_per_client=args.samples_per_client, epochs=args.epochs,
-          reps=args.reps, engines=engines, sim_devices=args.sim_devices)
+    rows = bench(task=args.task, clients=args.clients,
+                 samples_per_client=args.samples_per_client,
+                 epochs=args.epochs, reps=args.reps, engines=engines,
+                 sim_devices=args.sim_devices)
+    if args.json:
+        from benchmarks.common import write_json_rows
+        write_json_rows(args.json, rows, bench="engine_bench",
+                        task=args.task, clients=args.clients,
+                        reps=args.reps, engines=list(engines),
+                        sim_devices=args.sim_devices)
     return 0
 
 

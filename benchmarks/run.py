@@ -26,6 +26,7 @@ BENCHES = [
     "table13_kvalue",
     "fig1_stepsizes",
     "engine_bench",
+    "async_bench",
     "kernels_bench",
     "roofline",
 ]

@@ -122,6 +122,60 @@ def comp_cost(
     )
 
 
+# ---------------------------------------------------------------------------
+# Virtual time (async runtime)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VirtualTimeModel:
+    """Maps the cost ledger onto a *virtual* wall-clock for the async runtime.
+
+    The event-driven simulator (``repro.fl.runtime``) needs a duration for
+    every dispatched client round: local compute scaled by the client's speed
+    multiplier, plus up/down transfer of the round's transmitted subtree, plus
+    a fixed network latency — all in simulated seconds.  The absolute scales
+    are arbitrary (only ratios matter for time-to-accuracy comparisons); the
+    defaults are calibrated to the repo's *test-scale* workloads — where
+    "flops" are the param-count proxy ``comp_cost`` books — so a full-network
+    round lands at O(0.1-1) virtual seconds instead of microseconds.
+
+    ``round_seconds`` is deliberately deterministic — stochastic jitter and
+    speed heterogeneity live in the availability model
+    (``repro.fl.runtime.clients``), which passes them in as multipliers.
+    """
+
+    flops_per_second: float = 1e6
+    bytes_per_second: float = 1e6
+    base_latency_s: float = 0.0
+
+    def comp_seconds(self, flops: float, speed: float = 1.0) -> float:
+        if speed <= 0.0:
+            raise ValueError(f"client speed multiplier must be > 0, got {speed}")
+        return float(flops) / (self.flops_per_second * speed)
+
+    def comm_seconds(self, nbytes: float) -> float:
+        return float(nbytes) / self.bytes_per_second
+
+    def round_seconds(
+        self,
+        flops: float,
+        nbytes: float,
+        *,
+        speed: float = 1.0,
+        jitter: float = 1.0,
+    ) -> float:
+        """One client's dispatch->completion duration: download + local
+        training + upload (the transmitted subtree travels both ways)."""
+        if jitter <= 0.0:
+            raise ValueError(f"latency jitter multiplier must be > 0, got {jitter}")
+        base = (
+            self.comp_seconds(flops, speed)
+            + 2.0 * self.comm_seconds(nbytes)
+            + self.base_latency_s
+        )
+        return base * jitter
+
+
 def paper_asymptotic_comp_ratio(bwd_fwd_ratio: float = 2.0) -> float:
     """Eq. 6's closed form: (M·D_f + (M+1)/2·D_b) / (M·(D_f+D_b)) -> 2/3."""
     return (1.0 + bwd_fwd_ratio / 2.0) / (1.0 + bwd_fwd_ratio)

@@ -122,6 +122,59 @@ class FedPartSchedule:
 
 
 @dataclasses.dataclass(frozen=True)
+class ScheduleIndex:
+    """``RoundSpec``-by-*server-version* lookup for asynchronous runtimes.
+
+    Synchronous training identifies "round" with "position in the schedule";
+    an asynchronous server does not — client completions arrive continuously
+    and the schedule must advance on **server aggregations** (version bumps),
+    never on client completions.  ``ScheduleIndex`` makes that rule
+    well-defined: version ``v`` (the number of aggregations the server has
+    committed) maps to ``specs[v]``, and dispatches issued while the server
+    sits at version ``v`` train the group of ``specs[v]`` regardless of how
+    many stale cohorts are still in flight.  Versions past the end clamp to
+    the final spec so late dispatches (drained after the last planned
+    aggregation) stay well-defined.
+
+    >>> idx = ScheduleIndex.from_rounds(
+    ...     FedPartSchedule(num_groups=2, warmup_rounds=1,
+    ...                     rounds_per_layer=1).rounds())
+    >>> (idx.for_version(0).phase, idx.for_version(1).group)
+    ('warmup', 0)
+    >>> idx.for_version(99).group == idx.for_version(len(idx) - 1).group
+    True
+    >>> idx.staleness(completed_at_version=3, dispatched_at_version=1)
+    2
+    """
+
+    specs: tuple[RoundSpec, ...]
+
+    @classmethod
+    def from_rounds(cls, rounds: Sequence[RoundSpec]) -> "ScheduleIndex":
+        specs = tuple(rounds)
+        if not specs:
+            raise ValueError("ScheduleIndex needs at least one RoundSpec")
+        return cls(specs=specs)
+
+    def for_version(self, version: int) -> RoundSpec:
+        """The spec governing dispatches while the server is at ``version``."""
+        if version < 0:
+            raise ValueError(f"server version must be >= 0, got {version}")
+        return self.specs[min(version, len(self.specs) - 1)]
+
+    @staticmethod
+    def staleness(completed_at_version: int, dispatched_at_version: int) -> int:
+        """Server versions the model advanced while the update was in flight."""
+        return max(completed_at_version - dispatched_at_version, 0)
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    def __iter__(self) -> Iterator[RoundSpec]:
+        return iter(self.specs)
+
+
+@dataclasses.dataclass(frozen=True)
 class FNUSchedule:
     """Baseline: every round trains the full network (FedAvg et al.)."""
 

@@ -70,6 +70,64 @@ class StepSizeTracker:
 
 
 # ---------------------------------------------------------------------------
+# Virtual-time timeline (async runtime): time-to-accuracy as first-class output
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Timeline:
+    """Event log of a federated run against the *virtual* clock.
+
+    The async runtime (``repro.fl.runtime``) books every dispatch, client
+    completion/drop, server merge, and evaluation here with its simulated
+    timestamp, so time-to-accuracy curves — the quantity the async literature
+    optimises — come out of a run as first-class data instead of being
+    re-derived from round counts.
+
+    Events are dicts with at least ``{"t", "kind"}``; merges add
+    ``{"version", "loss", "staleness_mean", "staleness_max"}``, evals add
+    ``{"version", "acc"}``, completions add the per-update comm bytes and
+    comp flops actually spent (dropped clients burn compute but deliver no
+    bytes upstream).
+    """
+
+    events: list[dict] = dataclasses.field(default_factory=list)
+
+    def record(self, t: float, kind: str, **fields) -> None:
+        self.events.append({"t": float(t), "kind": kind, **fields})
+
+    def of_kind(self, kind: str) -> list[dict]:
+        return [e for e in self.events if e["kind"] == kind]
+
+    @property
+    def total_seconds(self) -> float:
+        return max((e["t"] for e in self.events), default=0.0)
+
+    @property
+    def delivered_comm_bytes(self) -> int:
+        """Upstream bytes of updates that actually reached the server."""
+        return int(sum(e.get("comm_bytes", 0) for e in self.of_kind("complete")))
+
+    @property
+    def spent_comp_flops(self) -> float:
+        """Local-training FLOPs spent, including dropped clients' wasted work."""
+        return float(sum(e.get("comp_flops", 0.0)
+                         for e in self.of_kind("complete") + self.of_kind("drop")))
+
+    def accuracy_curve(self) -> list[tuple[float, float]]:
+        """``(virtual_seconds, accuracy)`` per evaluation, time-ordered."""
+        return [(e["t"], e["acc"]) for e in sorted(self.of_kind("eval"),
+                                                   key=lambda e: e["t"])]
+
+    def time_to_accuracy(self, threshold: float) -> float:
+        """First virtual time the eval accuracy reaches ``threshold``
+        (``inf`` if it never does) — the sweep metric in async_bench."""
+        for t, acc in self.accuracy_curve():
+            if acc >= threshold:
+                return t
+        return float("inf")
+
+
+# ---------------------------------------------------------------------------
 # Monte-Carlo estimate of k (Assumption 3 / Appendix G)
 # ---------------------------------------------------------------------------
 

@@ -2,5 +2,8 @@ from repro.fl.algorithms import AlgoConfig  # noqa: F401
 from repro.fl.batched import (ENGINES, SequentialEngine, ShardMapEngine,  # noqa: F401
                               VmapEngine, make_engine)
 from repro.fl.client import LocalTrainer  # noqa: F401
-from repro.fl.server import FLResult, FLRunConfig, run_federated  # noqa: F401
+from repro.fl.runtime import (AvailabilityConfig, ClientAvailability,  # noqa: F401
+                              run_federated_async)
+from repro.fl.server import (RUNTIMES, FLResult, FLRunConfig,  # noqa: F401
+                             run_federated)
 from repro.fl.tasks import TaskAdapter, nlp_task, resnet_task  # noqa: F401

@@ -30,6 +30,19 @@ the engines match the sequential oracle leaf-for-leaf (see
 All engines expose ``trace_count`` (XLA traces built so far) — the quantity
 ``benchmarks/engine_bench.py`` reports next to wall-clock.
 
+Beyond ``run_round`` (train + aggregate, the synchronous contract), every
+engine also exposes ``run_local`` — cohort training *without* aggregation,
+returning the stacked locally-trained params.  That is the async runtime's
+execution backend (``repro.fl.runtime``): a dispatched cohort is one stacked
+batch through the same compiled local-round core, and aggregation happens
+later in the server policy, possibly against a newer global model.
+
+With ``donate=True`` (default) the batched engines donate the global params
+into the aggregation jit (in-place splice — ``run_round`` then *consumes* its
+params argument; thread the returned tree) and the stacked MOON prev-model
+tree into the local-round jit.  ``benchmarks/engine_bench.py`` times every
+batched engine both ways and reports the delta.
+
 Example (any engine is a drop-in swap at the config level)::
 
     from repro.fl import FLRunConfig, run_federated
@@ -125,6 +138,31 @@ class SequentialEngine:
             new_params = aggregation.aggregate_partial(params, uploads, weights)
         return new_params, losses, new_locals
 
+    def run_local(
+        self,
+        params: PyTree,
+        spec: RoundSpec,
+        datasets: Sequence[ClientDataset],
+        *,
+        seeds: Sequence[int],
+        epochs: int,
+        batch_size: int,
+        prev_params: Sequence[PyTree | None] | None = None,
+    ) -> tuple[PyTree, list[float]]:
+        """Cohort training without aggregation (async runtime backend): the
+        per-client oracle loop, locals stacked into the common client-axis
+        layout the policies consume."""
+        locals_, losses = [], []
+        for i, (ds, seed) in enumerate(zip(datasets, seeds)):
+            local, loss = self.trainer.run_local_round(
+                params, spec.group, ds,
+                epochs=epochs, batch_size=batch_size, seed=seed,
+                prev_params=prev_params[i] if prev_params is not None else None,
+            )
+            locals_.append(local)
+            losses.append(loss)
+        return masking.stack_trees(locals_), losses
+
 
 @dataclasses.dataclass
 class _BatchedEngineBase:
@@ -149,11 +187,32 @@ class _BatchedEngineBase:
     trainer: LocalTrainer
     partition: Partition
     algo: AlgoConfig
+    donate: bool = True
 
     def __post_init__(self):
         self.trace_count = 0
         self._local_fns: dict[tuple[int, bool], Callable] = {}
         self._agg_fns: dict[Any, Callable] = {}
+        self._cohort_fns: dict[tuple[int, bool], Callable] = {}
+
+    # Donation sets (active when ``donate``).  Only buffers whose shapes can
+    # actually alias an output are donated — donating the stacked
+    # inputs/labels would just trigger XLA's "not usable" warning:
+    #
+    # * the *global params* into the aggregation/splice jit (arg 0): output
+    #   tree is leaf-for-leaf shape-identical, so the splice updates in
+    #   place instead of holding two full models live.  This makes
+    #   ``run_round`` consume its params argument — callers thread the
+    #   returned tree (``run_federated`` always did).
+    # * the *stacked MOON prev-model* tree into the local-round jit (arg 4):
+    #   it is rebuilt host-side every round and matches the stacked-locals
+    #   output exactly, saving one whole per-client model copy per bucket.
+
+    def _donate_prev(self, stacked_prev: bool) -> tuple[int, ...]:
+        return (4,) if (self.donate and stacked_prev) else ()
+
+    def _donate_params(self) -> tuple[int, ...]:
+        return (0,) if self.donate else ()
 
     # -- shared local-round core -------------------------------------------
 
@@ -252,6 +311,62 @@ class _BatchedEngineBase:
             lambda *xs: jnp.concatenate(xs, axis=0)[inv], *[t for _, t in parts]
         )
 
+    # -- cohort execution (async runtime backend) ---------------------------
+
+    @property
+    def _cohort_pad(self) -> int:
+        """Client-axis padding multiple for cohort dispatches (mesh size for
+        the shard_map engine, 1 otherwise)."""
+        return 1
+
+    def _cohort_fn(self, group: int, stacked_prev: bool) -> Callable:
+        """Local-round program *without* aggregation: returns the stacked
+        locally-trained params + per-client losses.  The async runtime's
+        policies aggregate later, possibly against a newer global model."""
+        raise NotImplementedError
+
+    def run_local(
+        self,
+        params: PyTree,
+        spec: RoundSpec,
+        datasets: Sequence[ClientDataset],
+        *,
+        seeds: Sequence[int],
+        epochs: int,
+        batch_size: int,
+        prev_params: Sequence[PyTree | None] | None = None,
+    ) -> tuple[PyTree, list[float]]:
+        """Train one *cohort* (clients dispatched together against the same
+        global model) and return ``(stacked_locals, losses)`` — no
+        aggregation.  This is the async runtime's execution backend: a cohort
+        is one stacked batch through the same compiled local-round core the
+        synchronous ``run_round`` uses, so the batched engines are the
+        backend, not a parallel implementation.  ``stacked_locals`` carries a
+        leading client axis in ``datasets`` order (padding clients sliced
+        off)."""
+        group = FULL_NETWORK if spec.is_full else spec.group
+        use_prev = self.algo.name == "moon"
+        num = len(datasets)
+
+        parts: list[tuple[tuple[int, ...], tuple[PyTree, jax.Array]]] = []
+        for bucket, prev_arg in self._buckets(
+            params, datasets, batch_size=batch_size, epochs=epochs, seeds=seeds,
+            prev_params=prev_params, use_prev=use_prev,
+            pad_clients_to=self._cohort_pad,
+        ):
+            fn = self._cohort_fn(group, stacked_prev=use_prev)
+            locals_stacked, bucket_losses = fn(
+                params, bucket.inputs, bucket.labels, bucket.step_valid, prev_arg
+            )
+            n = bucket.num_real
+            parts.append((bucket.members, (
+                jax.tree.map(lambda x: x[:n], locals_stacked), bucket_losses[:n],
+            )))
+
+        stacked, losses_dev = self._gather_order(parts, num)
+        losses = [float(x) for x in np.asarray(losses_dev)]
+        return stacked, losses
+
 
 @dataclasses.dataclass
 class VmapEngine(_BatchedEngineBase):
@@ -278,8 +393,14 @@ class VmapEngine(_BatchedEngineBase):
                 global_params, inputs, labels, step_valid, prev
             )
 
-        self._local_fns[key] = jax.jit(local_round)
+        self._local_fns[key] = jax.jit(
+            local_round, donate_argnums=self._donate_prev(stacked_prev))
         return self._local_fns[key]
+
+    def _cohort_fn(self, group: int, stacked_prev: bool) -> Callable:
+        # The vmap local round already returns (stacked locals, losses) —
+        # sync and async dispatches share one compiled program per group.
+        return self._local_fn(group, stacked_prev)
 
     def _agg_fn(self, group: int) -> Callable:
         if group in self._agg_fns:
@@ -294,7 +415,9 @@ class VmapEngine(_BatchedEngineBase):
                 global_params, stacked, partition, group, weights
             )
 
-        self._agg_fns[group] = jax.jit(agg)
+        # Donating the global params makes the splice an in-place update —
+        # callers must treat run_round as consuming its params argument.
+        self._agg_fns[group] = jax.jit(agg, donate_argnums=self._donate_params())
         return self._agg_fns[group]
 
     # -- round execution ---------------------------------------------------
@@ -406,11 +529,47 @@ class ShardMapEngine(_BatchedEngineBase):
         c = P(CLIENT_AXIS)
         in_specs = (P(), c, c, c, c if stacked_prev else P(), c)
         out_specs = (P(), c, c) if stacked_prev else (P(), c)
-        self._local_fns[key] = jax.jit(_shard_map(
-            device_round, mesh=self.mesh, in_specs=in_specs,
-            out_specs=out_specs, **_SHARD_MAP_KW,
-        ))
+        self._local_fns[key] = jax.jit(
+            _shard_map(
+                device_round, mesh=self.mesh, in_specs=in_specs,
+                out_specs=out_specs, **_SHARD_MAP_KW,
+            ),
+            donate_argnums=self._donate_prev(stacked_prev),
+        )
         return self._local_fns[key]
+
+    @property
+    def _cohort_pad(self) -> int:
+        return self.num_devices
+
+    def _cohort_fn(self, group: int, stacked_prev: bool) -> Callable:
+        """Plain (no-psum) shard_map'd local round for async cohorts: each
+        device vmaps its client shard and the stacked locals leave the mesh
+        sharded — aggregation happens later, in the server policy, possibly
+        against a newer global model, so it cannot be fused on-mesh here."""
+        key = (group, stacked_prev)
+        if key in self._cohort_fns:
+            return self._cohort_fns[key]
+
+        one_client = self._one_client_fn(group)
+        prev_axis = 0 if stacked_prev else None
+
+        def device_cohort(global_params, inputs, labels, step_valid, prev):
+            self.trace_count += 1
+            return jax.vmap(one_client, in_axes=(None, 0, 0, 0, prev_axis))(
+                global_params, inputs, labels, step_valid, prev
+            )
+
+        c = P(CLIENT_AXIS)
+        in_specs = (P(), c, c, c, c if stacked_prev else P())
+        self._cohort_fns[key] = jax.jit(
+            _shard_map(
+                device_cohort, mesh=self.mesh, in_specs=in_specs,
+                out_specs=(c, c), **_SHARD_MAP_KW,
+            ),
+            donate_argnums=self._donate_prev(stacked_prev),
+        )
+        return self._cohort_fns[key]
 
     def _splice_fn(self, group: int, n_buckets: int) -> Callable:
         """Sum the buckets' psum'd updates and splice into the global model
@@ -431,7 +590,7 @@ class ShardMapEngine(_BatchedEngineBase):
             averaged = jax.tree.map(lambda s, r: s.astype(r.dtype), summed, ref)
             return masking.tree_update(global_params, averaged)
 
-        self._agg_fns[key] = jax.jit(splice)
+        self._agg_fns[key] = jax.jit(splice, donate_argnums=self._donate_params())
         return self._agg_fns[key]
 
     # -- round execution ---------------------------------------------------
@@ -497,6 +656,7 @@ def make_engine(
     partition: Partition,
     algo: AlgoConfig,
     sim_devices: int = 0,
+    donate: bool = True,
 ):
     """Build a client-simulation engine by name.
 
@@ -506,12 +666,20 @@ def make_engine(
         engine = make_engine("vmap", trainer=trainer, partition=partition,
                              algo=AlgoConfig())
         engine.run_round(...)   # same contract for every engine
+
+    ``donate`` (batched engines only) donates the global params into the
+    aggregation/splice jit (in-place update) and the stacked MOON prev-model
+    tree into the local-round jit.  With donation on, ``run_round``
+    *consumes* its params argument — callers must thread the returned params
+    into the next round (``run_federated`` does; pass ``donate=False`` to
+    keep re-feeding the same tree, e.g. for fixed-workload benchmarking).
     """
     if name == "sequential":
         return SequentialEngine(trainer=trainer, partition=partition, algo=algo)
     if name == "vmap":
-        return VmapEngine(trainer=trainer, partition=partition, algo=algo)
+        return VmapEngine(trainer=trainer, partition=partition, algo=algo,
+                          donate=donate)
     if name == "shard_map":
         return ShardMapEngine(trainer=trainer, partition=partition, algo=algo,
-                              devices=sim_devices)
+                              donate=donate, devices=sim_devices)
     raise ValueError(f"unknown engine {name!r}; expected one of {ENGINES}")

@@ -1,0 +1,5 @@
+from repro.fl.runtime.clients import AvailabilityConfig, ClientAvailability  # noqa: F401
+from repro.fl.runtime.engine import run_federated_async  # noqa: F401
+from repro.fl.runtime.policy import (POLICIES, AggregationPolicy,  # noqa: F401
+                                     ClientUpdate, FedBuffPolicy,
+                                     SyncFedAvgPolicy, make_policy)

@@ -1,0 +1,105 @@
+"""Client availability / latency model for the async runtime.
+
+Real federated deployments never see the simulator's implicit "every client
+is always reachable, equally fast, and perfectly reliable" regime: devices
+come and go, compute speeds span orders of magnitude, and a fraction of
+dispatched work simply vanishes (Sen et al. 2025; Liu et al. 2023).
+``ClientAvailability`` is the seeded, deterministic stand-in for all of that:
+
+* **compute-speed multipliers** — one persistent log-uniform draw per client
+  in ``[1/(1+spread), 1+spread]``; a client's local round takes
+  ``flops / (flops_per_second * speed)`` virtual seconds;
+* **latency jitter** — a fresh multiplicative draw per dispatch in
+  ``[1, 1+jitter]``, modelling network variance on top of the deterministic
+  cost model (``core.costs.VirtualTimeModel``);
+* **dropout** — per-dispatch probability that the client trains but its
+  update never reaches the server (compute burned, no bytes delivered);
+* **unavailability** — per-dispatch probability a client cannot be sampled
+  at all (the arrival process: offline, charging, metered network).
+
+Everything draws from one ``numpy`` generator seeded by
+``AvailabilityConfig.seed``, consumed in dispatch order, so a run is
+reproducible event-for-event.  Crucially, a **degenerate config (all knobs
+0) consumes no randomness at all** — the async runtime's client-selection
+stream then advances exactly like the synchronous server's, which is what
+makes the sync-equivalence guarantee testable (docs/ASYNC.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityConfig:
+    """Knobs of the client availability / latency model (all default to the
+    degenerate "perfect fleet": homogeneous, instant, reliable, always on)."""
+
+    speed_spread: float = 0.0       # persistent per-client speed heterogeneity
+    latency_jitter: float = 0.0     # per-dispatch multiplicative latency noise
+    dropout_prob: float = 0.0       # per-dispatch update-loss probability
+    unavailable_prob: float = 0.0   # per-dispatch sampling-exclusion probability
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("speed_spread", "latency_jitter"):
+            if getattr(self, name) < 0.0:
+                raise ValueError(f"{name} must be >= 0, got {getattr(self, name)}")
+        for name in ("dropout_prob", "unavailable_prob"):
+            v = getattr(self, name)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"{name} must be in [0, 1), got {v}")
+
+    @property
+    def is_degenerate(self) -> bool:
+        """True when the model is the perfect fleet (sync-equivalent)."""
+        return (self.speed_spread == 0.0 and self.latency_jitter == 0.0
+                and self.dropout_prob == 0.0 and self.unavailable_prob == 0.0)
+
+
+class ClientAvailability:
+    """Seeded realisation of ``AvailabilityConfig`` for ``num_clients``."""
+
+    def __init__(self, cfg: AvailabilityConfig, num_clients: int):
+        if num_clients < 1:
+            raise ValueError(f"num_clients must be >= 1, got {num_clients}")
+        self.cfg = cfg
+        self.num_clients = num_clients
+        rng = np.random.default_rng(cfg.seed)
+        if cfg.speed_spread > 0.0:
+            lo, hi = -np.log1p(cfg.speed_spread), np.log1p(cfg.speed_spread)
+            self.speeds = np.exp(rng.uniform(lo, hi, num_clients))
+        else:
+            self.speeds = np.ones(num_clients, dtype=np.float64)
+        # Per-dispatch draws come from a *separate* stream so adding clients
+        # (more speed draws) doesn't shift the event randomness.
+        self._rng = np.random.default_rng((cfg.seed, 0x5EED))
+
+    def speed(self, client_id: int) -> float:
+        return float(self.speeds[client_id])
+
+    def jitter(self) -> float:
+        """Multiplicative latency factor for one dispatch (1.0 when off)."""
+        if self.cfg.latency_jitter <= 0.0:
+            return 1.0
+        return float(self._rng.uniform(1.0, 1.0 + self.cfg.latency_jitter))
+
+    def drops(self) -> bool:
+        """Whether this dispatch's update is lost in transit."""
+        if self.cfg.dropout_prob <= 0.0:
+            return False
+        return bool(self._rng.random() < self.cfg.dropout_prob)
+
+    def available(self, candidates: Sequence[int]) -> list[int]:
+        """Filter a candidate (idle) client list through the arrival process.
+
+        With ``unavailable_prob == 0`` this is the identity and consumes no
+        randomness (the degenerate-config contract)."""
+        cand = list(candidates)
+        if self.cfg.unavailable_prob <= 0.0 or not cand:
+            return cand
+        keep = self._rng.random(len(cand)) >= self.cfg.unavailable_prob
+        return [c for c, k in zip(cand, keep) if k]

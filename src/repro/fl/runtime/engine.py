@@ -1,0 +1,289 @@
+"""Event-driven asynchronous federated runtime (virtual clock).
+
+``run_federated_async`` replaces the synchronous "everyone trains, then we
+average" barrier with an explicit discrete-event simulation:
+
+1. **Dispatch.**  While the server sits at version ``v``, it samples a cohort
+   of idle, available clients (``sample_fraction`` of the fleet) and trains
+   them *as one stacked batch* through the session's client engine
+   (``fl.batched.make_engine`` — the vmap / shard_map engines are the
+   execution backend, not a parallel implementation).  Every client in the
+   cohort trains the layer group scheduled for version ``v``
+   (``core.schedule.ScheduleIndex``) against the version-``v`` model.
+2. **Flight.**  Each client's completion is booked on a virtual timeline:
+   local compute scaled by its persistent speed multiplier, up/down transfer
+   of the transmitted subtree, latency jitter, dropout — all from the seeded
+   availability model (``runtime.clients``) and the virtual-time cost model
+   (``core.costs.VirtualTimeModel``).
+3. **Merge.**  Delivered updates accumulate in the server buffer; the
+   aggregation policy (``runtime.policy``) decides when to merge (barrier,
+   or FedBuff's goal-K) and discounts stale updates polynomially.  A merge
+   bumps the server version — which advances the FedPart schedule — and
+   triggers the next dispatch, so slow clients from old versions keep
+   training while the server moves on: that overlap is the async win.
+
+Time-to-accuracy comes out as first-class output: every dispatch, delivery,
+drop, merge, and eval is logged against the virtual clock in a
+``core.telemetry.Timeline`` attached to the returned ``FLResult``.
+
+**Degenerate-config equivalence** (pinned in tests/test_async_runtime.py):
+with full participation, a perfect fleet (default ``AvailabilityConfig``),
+``buffer_k = 0`` (goal = cohort size) and ``staleness_exponent = 0``, every
+cohort is a barrier round — the client-selection RNG stream, per-client
+seeds, local training programs, and aggregation arithmetic all coincide with
+the synchronous path, so params / losses / cost books match ``run_federated``
+to <=1e-5 under every engine.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import TYPE_CHECKING, Any, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import aggregation, masking
+from repro.core.costs import comm_cost, comp_cost
+from repro.core.partition import (group_param_bytes, group_param_counts,
+                                  total_param_bytes)
+from repro.core.schedule import RoundSpec, ScheduleIndex
+from repro.core.telemetry import Timeline
+from repro.fl.batched import make_engine
+from repro.fl.client import LocalTrainer
+from repro.fl.runtime.clients import ClientAvailability
+from repro.fl.runtime.policy import ClientUpdate, make_policy
+from repro.fl.tasks import TaskAdapter
+from repro.optim.adam import AdamConfig
+
+if TYPE_CHECKING:  # imported lazily at runtime to avoid the fl.server cycle
+    from repro.fl.server import FLResult, FLRunConfig
+
+PyTree = Any
+
+
+def _steps_per_round(n: int, batch_size: int, epochs: int) -> int:
+    """Local step count of ``data.pipeline.batch_plan`` without building it."""
+    bs = min(batch_size, n)
+    per_epoch = (n - bs) // bs + 1 if n >= bs else 1
+    return epochs * per_epoch
+
+
+def run_federated_async(
+    adapter: TaskAdapter,
+    clients_data: Sequence,
+    eval_set: tuple[np.ndarray, np.ndarray],
+    rounds: Sequence[RoundSpec],
+    run_cfg: "FLRunConfig",
+    *,
+    init_key=None,
+    verbose: bool = False,
+) -> "FLResult":
+    from repro.fl.server import FLResult  # deferred: fl.server imports us
+
+    if run_cfg.track_stepsizes:
+        raise ValueError("track_stepsizes requires runtime='sync' with "
+                         "engine='sequential'")
+    if not rounds:  # mirror the sync loop's graceful no-op
+        key = init_key if init_key is not None else jax.random.key(run_cfg.seed)
+        params = adapter.init(key)
+        partition = adapter.partition(params)
+        return FLResult(history=[], params=params, partition=partition,
+                        tracker=None, comm_total_bytes=0, comp_total_flops=0.0,
+                        comm_fnu_bytes=0, comp_fnu_flops=0.0,
+                        timeline=Timeline())
+    key = init_key if init_key is not None else jax.random.key(run_cfg.seed)
+    params = adapter.init(key)
+    partition = adapter.partition(params)
+    trainer = LocalTrainer(
+        adapter=adapter,
+        partition=partition,
+        algo=run_cfg.algo,
+        adam=AdamConfig(lr=run_cfg.lr, eps=run_cfg.adam_eps),
+    )
+    engine = make_engine(
+        run_cfg.engine, trainer=trainer, partition=partition,
+        algo=run_cfg.algo, sim_devices=run_cfg.sim_devices,
+        donate=run_cfg.donate_buffers,
+    )
+    policy = make_policy(
+        run_cfg.async_policy, partition,
+        staleness_exponent=run_cfg.staleness_exponent,
+        buffer_goal=run_cfg.buffer_k,
+    )
+    sched = ScheduleIndex.from_rounds(rounds)
+    n_clients = len(clients_data)
+    avail = ClientAvailability(run_cfg.availability, n_clients)
+    vtm = run_cfg.vtime
+    timeline = Timeline()
+    # Same selection stream as the synchronous server: one choice() per
+    # dispatch, over arange(n) whenever the whole fleet is idle+available.
+    rng = np.random.default_rng(run_cfg.seed)
+    eval_x, eval_y = eval_set
+    eval_fn = jax.jit(adapter.evaluate)
+    is_moon = run_cfg.algo.name == "moon"
+    prev_store: dict[int, PyTree] = {}
+
+    # Cost tables: upstream bytes + per-step flops per scheduled group.
+    group_bytes = group_param_bytes(params, partition)
+    full_bytes = int(total_param_bytes(params))
+    group_counts = group_param_counts(params, partition).astype(np.float64)
+    _flops_cache: dict[int, float] = {}
+
+    def _step_flops(spec: RoundSpec) -> float:
+        if spec.group not in _flops_cache:
+            _flops_cache[spec.group] = float(
+                comp_cost(partition, [spec], group_fwd_flops=group_counts)
+                .per_round_flops[0]
+            )
+        return _flops_cache[spec.group]
+
+    # -- event-loop state ---------------------------------------------------
+    events: list[tuple[float, int, str, ClientUpdate]] = []   # min-heap
+    seq = itertools.count()          # FIFO tiebreak for simultaneous events
+    busy: set[int] = set()
+    buffer: list[ClientUpdate] = []
+    history: list[dict] = []
+    version = 0                      # server aggregations committed so far
+    vclock = 0.0
+    pending = 0                      # in-flight updates that WILL deliver
+    last_cohort = 0
+    total = len(rounds)
+
+    def dispatch(t: float) -> int:
+        """Sample a cohort at the current version, train it as one stacked
+        batch, and book each member's completion on the virtual timeline."""
+        nonlocal pending, last_cohort
+        spec = sched.for_version(version)
+        idle = [ci for ci in range(n_clients) if ci not in busy]
+        if not idle:
+            return 0
+        cand = avail.available(idle)
+        if not cand:
+            # Every idle client failed the arrival draw; rather than spinning
+            # the virtual clock, model "the server waits for the next one".
+            cand = idle
+        n_pick = max(1, int(round(run_cfg.sample_fraction * n_clients)))
+        k = min(n_pick, len(cand))
+        picked = [cand[i] for i in
+                  np.asarray(rng.choice(len(cand), size=k, replace=False))]
+
+        datasets = [clients_data[ci] for ci in picked]
+        seeds = [run_cfg.seed * 100_003 + spec.index * 1_009 + int(ci)
+                 for ci in picked]
+        prevs = [prev_store.get(int(ci)) for ci in picked] if is_moon else None
+        stacked, losses = engine.run_local(
+            params, spec, datasets, seeds=seeds,
+            epochs=run_cfg.local_epochs, batch_size=run_cfg.batch_size,
+            prev_params=prevs,
+        )
+        if is_moon:
+            for i, ci in enumerate(picked):
+                prev_store[int(ci)] = jax.tree.map(lambda x: x[i], stacked)
+
+        sub = stacked if spec.is_full else masking.select(
+            stacked, partition, spec.group)
+        sub = aggregation.drop_local_stats(sub)
+        subs = masking.unstack_tree(sub, len(picked))
+        up_bytes = full_bytes if spec.is_full else int(group_bytes[spec.group])
+        step_flops = _step_flops(spec)
+
+        for i, ci in enumerate(picked):
+            flops = step_flops * _steps_per_round(
+                len(datasets[i]), run_cfg.batch_size, run_cfg.local_epochs)
+            dur = vtm.round_seconds(
+                flops, up_bytes, speed=avail.speed(ci), jitter=avail.jitter())
+            upd = ClientUpdate(
+                client_id=int(ci), version=version, group=spec.group,
+                subtree=subs[i], weight=float(len(datasets[i])),
+                loss=losses[i], dispatched_t=t, completed_t=t + dur,
+                comp_flops=flops,
+            )
+            kind = "drop" if avail.drops() else "complete"
+            if kind == "complete":
+                pending += 1
+            heapq.heappush(events, (t + dur, next(seq), kind, upd))
+            busy.add(int(ci))
+        timeline.record(t, "dispatch", version=version, group=spec.group,
+                        clients=[int(c) for c in picked])
+        last_cohort = k
+        return k
+
+    def flush() -> None:
+        """Commit one server aggregation: merge the buffer, eval on the sync
+        cadence, advance the schedule, dispatch the next cohort."""
+        nonlocal params, version
+        spec = rounds[version]
+        params, info = policy.merge(params, buffer, version)
+        buffer.clear()
+        entry = {"round": spec.index, "phase": spec.phase, "group": spec.group,
+                 "loss": info["loss"], "t": vclock, "merged": info["merged"],
+                 "staleness_mean": info["staleness_mean"],
+                 "staleness_max": info["staleness_max"]}
+        timeline.record(vclock, "merge", version=version, **{
+            k: info[k] for k in
+            ("loss", "merged", "staleness_mean", "staleness_max")})
+        if spec.index % run_cfg.eval_every == 0 or spec.index == total - 1:
+            acc = float(eval_fn(params, eval_x[: run_cfg.eval_batch],
+                                eval_y[: run_cfg.eval_batch]))
+            entry["acc"] = acc
+            timeline.record(vclock, "eval", version=version, acc=acc)
+        history.append(entry)
+        if verbose:
+            print(f"merge v{version:3d} [{spec.phase}:{spec.group:3d}] "
+                  f"t={vclock:8.2f}s loss={entry['loss']:.4f} "
+                  f"acc={entry.get('acc', float('nan')):.4f} "
+                  f"stale(mean={entry['staleness_mean']:.2f},"
+                  f"max={entry['staleness_max']})")
+        version += 1
+        if version < total:
+            dispatch(vclock)
+
+    # -- main loop ----------------------------------------------------------
+    dispatch(0.0)
+    while version < total:
+        if not events:
+            # No one in flight: either merge the stragglers' leftovers or
+            # re-dispatch (e.g. a fully-dropped cohort).
+            if buffer and policy.should_merge(len(buffer), 0, last_cohort):
+                flush()
+                continue
+            if dispatch(vclock) == 0:
+                raise RuntimeError(
+                    "async runtime stalled: no events in flight, nothing "
+                    "dispatchable, and the buffer cannot merge")
+            continue
+        t, _, kind, upd = heapq.heappop(events)
+        vclock = t
+        busy.discard(upd.client_id)
+        if kind == "complete":
+            pending -= 1
+            buffer.append(upd)
+            timeline.record(t, "complete", client=upd.client_id,
+                            staleness=upd.staleness(version),
+                            comm_bytes=(full_bytes if upd.group < 0
+                                        else int(group_bytes[upd.group])),
+                            comp_flops=upd.comp_flops)
+        else:
+            timeline.record(t, "drop", client=upd.client_id,
+                            comp_flops=upd.comp_flops)
+        if buffer and policy.should_merge(len(buffer), pending, last_cohort):
+            flush()
+
+    # Cost books over the committed server rounds — identical to the sync
+    # ledger by construction (the schedule advanced exactly through `rounds`);
+    # the timeline holds the per-update async accounting on top.
+    comm = comm_cost(params, partition, rounds)
+    comp = comp_cost(partition, rounds, group_fwd_flops=group_counts)
+    return FLResult(
+        history=history,
+        params=params,
+        partition=partition,
+        tracker=None,
+        comm_total_bytes=comm.total_bytes,
+        comp_total_flops=float(comp.total_flops),
+        comm_fnu_bytes=comm.fnu_total_bytes,
+        comp_fnu_flops=float(comp.fnu_total_flops),
+        timeline=timeline,
+    )

@@ -1,0 +1,210 @@
+"""Server aggregation policies for the async runtime.
+
+A policy decides **when** buffered client updates are merged into the global
+model and **how much** each one counts.  Two are provided:
+
+* ``SyncFedAvgPolicy`` ("sync") — the oracle: a barrier per cohort.  Merge
+  only once nothing is left in flight, i.e. classic synchronous FedAvg
+  expressed as an event-driven policy.  With a perfect fleet this reproduces
+  ``run_federated``'s synchronous loop exactly (the degenerate-config
+  equivalence pinned in tests/test_async_runtime.py).
+* ``FedBuffPolicy`` ("fedbuff") — buffered asynchronous aggregation (Nguyen
+  et al., FedBuff): merge as soon as ``buffer_goal`` (K) updates have
+  arrived, without waiting for stragglers.  Updates dispatched against an
+  older server version are discounted by the polynomial staleness weight
+  ``(1 + staleness)^(-staleness_exponent)`` (Xie et al., FedAsync's poly
+  strategy); exponent 0 recovers plain sample-size weighting.
+
+The FedPart interplay is the part the literature doesn't cover: each update
+carries only its dispatch-time *transmitted subtree* (the scheduled layer
+group, BN running moments already dropped), and the schedule advances on
+server versions, so a buffer can hold updates for **different** layer groups.
+``merge`` therefore averages per group and splices each averaged subtree into
+the *current* global model — a stale update for group ``g`` merges against
+today's frozen context, never against the model it was trained from.  The
+averaging path reuses ``core.aggregation`` (``tree_mean_stacked`` + splice),
+i.e. exactly the synchronous engines' aggregation arithmetic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, masking
+from repro.core.partition import Partition
+
+PyTree = Any
+
+POLICIES = ("sync", "fedbuff")
+
+
+@dataclasses.dataclass
+class ClientUpdate:
+    """One client's delivered contribution, as the server buffer sees it."""
+
+    client_id: int
+    version: int            # server version at dispatch (staleness anchor)
+    group: int              # layer group trained (FULL_NETWORK on FNU rounds)
+    subtree: PyTree         # transmitted subtree, BN running moments dropped
+    weight: float           # sample-size weight (len of the client dataset)
+    loss: float
+    dispatched_t: float     # virtual dispatch time
+    completed_t: float = float("nan")
+    comp_flops: float = 0.0  # local-training FLOPs this dispatch burned
+
+    def staleness(self, current_version: int) -> int:
+        return max(current_version - self.version, 0)
+
+
+@dataclasses.dataclass
+class AggregationPolicy:
+    """Base: polynomial staleness weighting + per-group splice merging."""
+
+    partition: Partition
+    staleness_exponent: float = 0.0
+    buffer_goal: int = 0            # K; 0 = whatever the last cohort's size was
+
+    name = "base"
+
+    def staleness_scale(self, staleness: int) -> float:
+        """``(1 + s)^(-a)`` — 1.0 for fresh updates, monotone decreasing."""
+        if staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {staleness}")
+        if self.staleness_exponent == 0.0:
+            return 1.0
+        return float((1.0 + staleness) ** (-self.staleness_exponent))
+
+    def goal(self, cohort_size: int) -> int:
+        return self.buffer_goal if self.buffer_goal > 0 else cohort_size
+
+    def should_merge(self, buffered: int, pending: int, cohort_size: int) -> bool:
+        """Called after every delivery/drop.  ``pending`` counts updates still
+        in flight that *will* be delivered (drops excluded)."""
+        raise NotImplementedError
+
+    def merge(
+        self,
+        global_params: PyTree,
+        updates: Sequence[ClientUpdate],
+        version: int,
+    ) -> tuple[PyTree, dict]:
+        """Merge buffered updates into the current global model.
+
+        Updates are grouped by trained layer group (buffer order preserved).
+        Per group, staleness enters twice, following FedAsync's polynomial
+        strategy generalised to buffers:
+
+        * **within** the buffer, each update's sample-size weight is scaled
+          by ``(1+s)^-a`` before averaging (staler contributions count less
+          against fresher ones);
+        * **against** the current model, the averaged subtree is mixed in
+          with coefficient ``m = sum(w*scale)/sum(w)`` — the sample-weighted
+          mean staleness scale — so a buffer of stale updates moves the
+          global model less: ``(1-m)*current + m*averaged``.
+
+        With exponent 0 every scale is exactly 1.0, ``m == 1.0``, and the
+        merge reduces to the synchronous splice (the degenerate-config
+        equivalence).  The splice always lands on the *current* frozen
+        context — a stale group-``g`` update never resurrects the model it
+        was trained from.  When a FULL_NETWORK update shares the buffer with
+        partial-group updates, the full tree merges **first** and the
+        targeted subtrees splice on top, so a partial update is never wiped
+        by a later full splice and the result is independent of arrival
+        order; each group's mixing context is the progressively-merged
+        model, not a pre-merge snapshot.  Returns ``(new_params, info)``
+        with the merge telemetry (mean loss, staleness stats, per-group
+        counts)."""
+        if not updates:
+            raise ValueError("merge called with an empty buffer")
+        by_group: dict[int, list[ClientUpdate]] = {}
+        for u in updates:
+            by_group.setdefault(u.group, []).append(u)
+
+        params = global_params
+        # FULL_NETWORK (group < 0) first, then partial groups: order-
+        # independent, and targeted subtrees win where they overlap the full
+        # splice.  (Partial groups are disjoint by construction.)
+        for group in sorted(by_group, key=lambda g: (g >= 0, g)):
+            ups = by_group[group]
+            w = np.array([u.weight for u in ups], dtype=np.float32)
+            scale = np.array(
+                [self.staleness_scale(u.staleness(version)) for u in ups],
+                dtype=np.float32,
+            )
+            if float((w * scale).sum()) <= 0.0:
+                raise ValueError(
+                    f"group {group} merge weights must sum to a positive value"
+                )
+            stacked = masking.stack_trees([u.subtree for u in ups])
+            averaged = aggregation.tree_mean_stacked(stacked, w * scale)
+            m = float((w * scale).sum() / w.sum())
+            if m < 1.0:
+                current = aggregation.drop_local_stats(
+                    params if group < 0
+                    else masking.select(params, self.partition, group))
+                averaged = jax.tree.map(
+                    lambda c, a: ((1.0 - m) * c.astype(jnp.float32)
+                                  + m * a.astype(jnp.float32)).astype(a.dtype),
+                    current, averaged,
+                )
+            params = masking.tree_update(params, averaged)
+
+        stalenesses = [u.staleness(version) for u in updates]
+        info = {
+            "loss": float(np.mean([u.loss for u in updates])),
+            "merged": len(updates),
+            "staleness_mean": float(np.mean(stalenesses)),
+            "staleness_max": int(max(stalenesses)),
+            "groups": {int(g): len(ups) for g, ups in by_group.items()},
+        }
+        return params, info
+
+
+@dataclasses.dataclass
+class SyncFedAvgPolicy(AggregationPolicy):
+    """Barrier per cohort: merge only once nothing deliverable is in flight."""
+
+    name = "sync"
+
+    def should_merge(self, buffered: int, pending: int, cohort_size: int) -> bool:
+        return buffered > 0 and pending == 0
+
+
+@dataclasses.dataclass
+class FedBuffPolicy(AggregationPolicy):
+    """Buffered async aggregation: merge at K updates, stragglers be damned.
+
+    The ``pending == 0`` clause is the starvation guard: when drops/stragglers
+    leave the buffer short of K with nothing in flight, merge what arrived
+    rather than deadlock."""
+
+    name = "fedbuff"
+
+    def should_merge(self, buffered: int, pending: int, cohort_size: int) -> bool:
+        if buffered <= 0:
+            return False
+        return buffered >= self.goal(cohort_size) or pending == 0
+
+
+def make_policy(
+    name: str,
+    partition: Partition,
+    *,
+    staleness_exponent: float = 0.0,
+    buffer_goal: int = 0,
+) -> AggregationPolicy:
+    """Build an aggregation policy by name (``"sync"`` | ``"fedbuff"``)."""
+    if name == "sync":
+        return SyncFedAvgPolicy(partition=partition,
+                                staleness_exponent=staleness_exponent,
+                                buffer_goal=buffer_goal)
+    if name == "fedbuff":
+        return FedBuffPolicy(partition=partition,
+                             staleness_exponent=staleness_exponent,
+                             buffer_goal=buffer_goal)
+    raise ValueError(f"unknown policy {name!r}; expected one of {POLICIES}")

@@ -20,6 +20,17 @@ Client execution is delegated to a pluggable engine (``repro.fl.batched``):
 
 All three are equivalent to <=1e-5 (``tests/test_engine_equivalence.py``);
 docs/ENGINES.md is the quick reference for picking one.
+
+Orthogonally to the engine, ``FLRunConfig(runtime=...)`` picks the *runtime*
+— how rounds relate to time:
+
+* ``runtime="sync"``  — this module's loop: one barrier per schedule entry;
+* ``runtime="async"`` — the event-driven simulator (``repro.fl.runtime``):
+  client availability/latency/dropout on a virtual clock, buffered
+  staleness-weighted aggregation (FedBuff), partial participation, and
+  time-to-accuracy as first-class output.  In the degenerate config (perfect
+  fleet, full buffer, exponent 0) it reproduces this loop to <=1e-5
+  (docs/ASYNC.md).
 """
 
 from __future__ import annotations
@@ -30,17 +41,20 @@ from typing import Any, Sequence
 import jax
 import numpy as np
 
-from repro.core.costs import comm_cost, comp_cost
+from repro.core.costs import VirtualTimeModel, comm_cost, comp_cost
 from repro.core.partition import Partition, group_param_counts
 from repro.core.schedule import RoundSpec
-from repro.core.telemetry import StepSizeTracker
+from repro.core.telemetry import StepSizeTracker, Timeline
 from repro.fl.algorithms import AlgoConfig
 from repro.fl.batched import make_engine
 from repro.fl.client import LocalTrainer
+from repro.fl.runtime.clients import AvailabilityConfig
 from repro.fl.tasks import TaskAdapter
 from repro.optim.adam import AdamConfig
 
 PyTree = Any
+
+RUNTIMES = ("sync", "async")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,13 +64,21 @@ class FLRunConfig:
     lr: float = 1e-3
     adam_eps: float = 1e-8
     algo: AlgoConfig = AlgoConfig()
-    sample_fraction: float = 1.0
+    sample_fraction: float = 1.0    # participation fraction per dispatch/round
     seed: int = 0
     eval_every: int = 1
     eval_batch: int = 256
     track_stepsizes: bool = False
     engine: str = "sequential"      # "sequential" | "vmap" | "shard_map"
     sim_devices: int = 0            # shard_map mesh size (0 = all devices)
+    donate_buffers: bool = True     # donate params into the agg jit + MOON prev stack (batched engines)
+    # -- runtime (sync barrier loop vs event-driven async simulator) --------
+    runtime: str = "sync"           # "sync" | "async" (repro.fl.runtime)
+    async_policy: str = "fedbuff"   # "fedbuff" | "sync" (barrier oracle)
+    buffer_k: int = 0               # FedBuff goal K (0 = cohort size)
+    staleness_exponent: float = 0.0  # poly staleness discount (1+s)^-a
+    availability: AvailabilityConfig = AvailabilityConfig()
+    vtime: VirtualTimeModel = VirtualTimeModel()
 
 
 @dataclasses.dataclass
@@ -69,6 +91,7 @@ class FLResult:
     comp_total_flops: float
     comm_fnu_bytes: int
     comp_fnu_flops: float
+    timeline: Timeline | None = None   # async runtime: virtual-clock event log
 
     @property
     def best_acc(self) -> float:
@@ -91,6 +114,13 @@ def run_federated(
     init_key=None,
     verbose: bool = False,
 ) -> FLResult:
+    if run_cfg.runtime == "async":
+        from repro.fl.runtime.engine import run_federated_async
+        return run_federated_async(adapter, clients_data, eval_set, rounds,
+                                   run_cfg, init_key=init_key, verbose=verbose)
+    if run_cfg.runtime != "sync":
+        raise ValueError(
+            f"unknown runtime {run_cfg.runtime!r}; expected one of {RUNTIMES}")
     if run_cfg.track_stepsizes and run_cfg.engine != "sequential":
         raise ValueError("track_stepsizes requires engine='sequential'")
     key = init_key if init_key is not None else jax.random.key(run_cfg.seed)
@@ -105,6 +135,7 @@ def run_federated(
     engine = make_engine(
         run_cfg.engine, trainer=trainer, partition=partition,
         algo=run_cfg.algo, sim_devices=run_cfg.sim_devices,
+        donate=run_cfg.donate_buffers,
     )
     rng = np.random.default_rng(run_cfg.seed)
     eval_x, eval_y = eval_set

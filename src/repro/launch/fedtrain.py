@@ -27,6 +27,17 @@ docs/ENGINES.md):
     python -m repro.launch.fedtrain --sim-clients 8 --rounds 12 --engine vmap
     python -m repro.launch.fedtrain --sim-clients 8 --rounds 12 \
         --engine shard_map --sim-devices 4
+
+``--runtime async`` swaps the barrier-per-round loop for the event-driven
+simulator (``repro.fl.runtime``, docs/ASYNC.md): partial participation
+(``--participation``), buffered staleness-weighted aggregation
+(``--buffer-k``, ``--staleness-exp``) and a seeded client
+availability/latency model (``--speed-spread``, ``--latency-jitter``,
+``--dropout``), with time-to-accuracy booked on a virtual clock:
+
+    python -m repro.launch.fedtrain --sim-clients 8 --rounds 12 \
+        --engine vmap --runtime async --participation 0.5 --buffer-k 2 \
+        --staleness-exp 0.5 --speed-spread 3.0
 """
 
 from __future__ import annotations
@@ -115,7 +126,8 @@ def run_simulation(args) -> int:
     from repro.core.schedule import FedPartSchedule
     from repro.data import (VisionDatasetSpec, balanced_eval_set, build_clients,
                             iid_partition, make_vision_dataset)
-    from repro.fl import FLRunConfig, resnet_task, run_federated
+    from repro.fl import (AvailabilityConfig, FLRunConfig, resnet_task,
+                          run_federated)
 
     spec = VisionDatasetSpec(num_classes=8, image_size=16)
     X, y = make_vision_dataset(spec, 160 * args.sim_clients, seed=0)
@@ -127,14 +139,28 @@ def run_simulation(args) -> int:
     sched = FedPartSchedule(num_groups=10, warmup_rounds=args.warmup,
                             rounds_per_layer=args.rl, cycles=cycles)
     cfg = FLRunConfig(local_epochs=1, batch_size=args.batch, lr=args.lr,
-                      engine=args.engine, sim_devices=args.sim_devices)
+                      engine=args.engine, sim_devices=args.sim_devices,
+                      runtime=args.runtime, async_policy=args.async_policy,
+                      buffer_k=args.buffer_k,
+                      staleness_exponent=args.staleness_exp,
+                      sample_fraction=args.participation,
+                      availability=AvailabilityConfig(
+                          speed_spread=args.speed_spread,
+                          latency_jitter=args.latency_jitter,
+                          dropout_prob=args.dropout))
     t0 = time.time()
     res = run_federated(adapter, clients, eval_set,
                         sched.rounds()[: args.rounds], cfg, verbose=True)
-    print(f"[fedtrain.sim] engine={args.engine} clients={args.sim_clients} "
-          f"rounds={args.rounds} in {time.time()-t0:.1f}s | "
-          f"best_acc={res.best_acc:.4f} "
-          f"comm={res.comm_total_bytes/max(res.comm_fnu_bytes,1):.2%} of FNU")
+    extra = ""
+    if res.timeline is not None:
+        stale = [h["staleness_max"] for h in res.history]
+        extra = (f" vtime={res.timeline.total_seconds:.3f}s "
+                 f"max_staleness={max(stale) if stale else 0}")
+    print(f"[fedtrain.sim] engine={args.engine} runtime={args.runtime} "
+          f"clients={args.sim_clients} rounds={args.rounds} "
+          f"in {time.time()-t0:.1f}s | best_acc={res.best_acc:.4f} "
+          f"comm={res.comm_total_bytes/max(res.comm_fnu_bytes,1):.2%} of FNU"
+          f"{extra}")
     return 0
 
 
@@ -162,6 +188,28 @@ def main(argv=None) -> int:
                     help="shard_map mesh size over the 'clients' axis "
                          "(0 = all visible devices; on CPU, N>1 also forces "
                          "N simulated host devices)")
+    ap.add_argument("--runtime", choices=["sync", "async"], default="sync",
+                    help="round execution model for --sim-clients: barrier "
+                         "per round, or the event-driven async simulator "
+                         "(docs/ASYNC.md)")
+    ap.add_argument("--async-policy", choices=["fedbuff", "sync"],
+                    default="fedbuff",
+                    help="async aggregation policy: FedBuff goal-K buffer or "
+                         "the per-cohort barrier oracle")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of clients sampled per dispatch/round")
+    ap.add_argument("--buffer-k", type=int, default=0,
+                    help="FedBuff merge goal K (0 = cohort size)")
+    ap.add_argument("--staleness-exp", type=float, default=0.0,
+                    help="polynomial staleness discount exponent a in "
+                         "(1+staleness)^-a")
+    ap.add_argument("--speed-spread", type=float, default=0.0,
+                    help="per-client compute-speed heterogeneity (log-uniform "
+                         "spread; 0 = homogeneous fleet)")
+    ap.add_argument("--latency-jitter", type=float, default=0.0,
+                    help="per-dispatch multiplicative latency noise")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="per-dispatch probability a client update is lost")
     args = ap.parse_args(argv)
 
     if args.sim_clients > 0:

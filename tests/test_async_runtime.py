@@ -1,0 +1,376 @@
+"""The async runtime must collapse to the synchronous path in the degenerate
+config, and behave deterministically + sanely outside it.
+
+Degenerate config = full participation default-K barrier (buffer goal =
+cohort size), staleness exponent 0, perfect fleet (default
+``AvailabilityConfig``): the acceptance bar is params / per-round losses /
+cost books equal to the synchronous ``run_federated`` to <=1e-5 for FedAvg
+and FedProx, on full AND partial rounds, under both batched execution
+backends (vmap, shard_map) and the sequential oracle.  Same setup, seeds,
+and adam_eps rationale as tests/test_engine_equivalence.py.
+
+Beyond the degenerate corner: policy unit semantics (per-group splice into
+the *current* frozen context, polynomial staleness mixing), the
+schedule-by-server-version lookup, availability-model determinism, and
+event-loop invariants (staleness actually occurs under heterogeneity + K=1;
+dropped updates burn compute but never merge; identical seeds => identical
+histories).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partition import build_partition
+from repro.core.schedule import FedPartSchedule, FNUSchedule, ScheduleIndex
+from repro.core.telemetry import Timeline
+from repro.data import (VisionDatasetSpec, balanced_eval_set, build_clients,
+                        make_vision_dataset)
+from repro.fl import (AlgoConfig, AvailabilityConfig, FLRunConfig,
+                      resnet_task, run_federated)
+from repro.fl.runtime.clients import ClientAvailability
+from repro.fl.runtime.policy import (ClientUpdate, FedBuffPolicy,
+                                     SyncFedAvgPolicy, make_policy)
+
+BATCH = 16
+
+
+def _make_setup(client_sizes):
+    spec = VisionDatasetSpec(num_classes=4, image_size=8)
+    X, y = make_vision_dataset(spec, sum(client_sizes), seed=0)
+    Xe, ye = make_vision_dataset(spec, 64, seed=9)
+    eval_set = balanced_eval_set(Xe, ye, per_class=8)
+    bounds = np.cumsum((0,) + tuple(client_sizes))
+    parts = [np.arange(bounds[i], bounds[i + 1]) for i in range(len(client_sizes))]
+    return resnet_task("resnet4", num_classes=4), build_clients(X, y, parts), eval_set
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # Same ragged sizes as test_engine_equivalence => warm XLA cache reuse.
+    return _make_setup((36, 56, 40))
+
+
+# 1 FNU warmup + 1 partial round: both phases per config.
+MIXED = FedPartSchedule(num_groups=6, warmup_rounds=1, rounds_per_layer=1,
+                        cycles=1).rounds()[:2]
+
+
+def _run(setup, algo, engine, runtime, rounds=MIXED, **kw):
+    adapter, clients, eval_set = setup
+    cfg = FLRunConfig(local_epochs=1, batch_size=BATCH, lr=2e-3, adam_eps=1e-3,
+                      algo=AlgoConfig(name=algo), engine=engine,
+                      runtime=runtime, **kw)
+    return run_federated(adapter, clients, eval_set, rounds, cfg)
+
+
+def _assert_equivalent(a, b):
+    for (path, la), lb in zip(
+        jax.tree_util.tree_flatten_with_path(a.params)[0],
+        jax.tree.leaves(b.params),
+    ):
+        np.testing.assert_allclose(
+            np.asarray(la), np.asarray(lb), rtol=1e-5, atol=1e-5,
+            err_msg=f"param {jax.tree_util.keystr(path)} diverged",
+        )
+    la = np.array([h["loss"] for h in a.history])
+    lb = np.array([h["loss"] for h in b.history])
+    np.testing.assert_allclose(la, lb, rtol=1e-5, atol=1e-5)
+    assert a.comm_total_bytes == b.comm_total_bytes
+    assert a.comm_fnu_bytes == b.comm_fnu_bytes
+    assert a.comp_total_flops == b.comp_total_flops
+    assert a.comp_fnu_flops == b.comp_fnu_flops
+
+
+# -- degenerate-config equivalence (the acceptance bar) ---------------------
+
+
+@pytest.mark.parametrize("algo", ["fedavg", "fedprox"])
+@pytest.mark.parametrize("engine", ["vmap", "shard_map"])
+def test_async_degenerate_matches_sync(setup, algo, engine):
+    """Full participation, perfect fleet, goal = cohort, exponent 0: the
+    event-driven path must reproduce the synchronous barrier loop on both
+    batched backends, full + partial rounds."""
+    sync = _run(setup, algo, engine, "sync")
+    asy = _run(setup, algo, engine, "async")
+    _assert_equivalent(sync, asy)
+    assert asy.timeline is not None
+    # one barrier merge per schedule entry, nothing stale, nothing dropped
+    assert len(asy.timeline.of_kind("merge")) == len(MIXED)
+    assert all(h["staleness_max"] == 0 for h in asy.history)
+    assert not asy.timeline.of_kind("drop")
+
+
+def test_async_degenerate_matches_sync_sequential_engine(setup):
+    sync = _run(setup, "fedavg", "sequential", "sync")
+    asy = _run(setup, "fedavg", "sequential", "async")
+    _assert_equivalent(sync, asy)
+
+
+def test_async_degenerate_matches_sync_partial_participation(setup):
+    """sample_fraction < 1: with a perfect fleet the async cohort sampler
+    consumes the selection RNG exactly like the sync server, so partial
+    participation is degenerate-equivalent too."""
+    rounds = FNUSchedule(2).rounds()
+    sync = _run(setup, "fedavg", "vmap", "sync", rounds=rounds,
+                sample_fraction=0.67)
+    asy = _run(setup, "fedavg", "vmap", "async", rounds=rounds,
+               sample_fraction=0.67)
+    _assert_equivalent(sync, asy)
+
+
+def test_async_sync_policy_is_barrier_oracle(setup):
+    """The explicit 'sync' policy (barrier per cohort) is degenerate-
+    equivalent as well — FedBuff with goal=cohort and the barrier oracle
+    coincide on a perfect fleet."""
+    asy_buff = _run(setup, "fedavg", "vmap", "async")
+    asy_sync = _run(setup, "fedavg", "vmap", "async", async_policy="sync")
+    _assert_equivalent(asy_buff, asy_sync)
+
+
+# -- non-degenerate behavior ------------------------------------------------
+
+
+# seed picked so stragglers actually overlap merges within the 5-round
+# horizon below (staleness > 0 occurs; deterministic given the seed)
+HETERO = AvailabilityConfig(speed_spread=3.0, latency_jitter=0.3, seed=5)
+
+
+def test_async_heterogeneous_staleness_and_determinism(setup):
+    """K=1 on a heterogeneous fleet: the schedule advances while stragglers
+    are in flight, so staleness must actually occur; and the whole event
+    simulation is seed-deterministic."""
+    rounds = FedPartSchedule(num_groups=6, warmup_rounds=1, rounds_per_layer=1,
+                             cycles=1).rounds()[:5]
+    kw = dict(rounds=rounds, availability=HETERO, buffer_k=1,
+              staleness_exponent=0.5, sample_fraction=0.67)
+    a = _run(setup, "fedavg", "vmap", "async", **kw)
+    assert max(h["staleness_max"] for h in a.history) >= 1
+    assert a.timeline.total_seconds > 0.0
+    # merges advance the virtual clock monotonically
+    ts = [e["t"] for e in a.timeline.of_kind("merge")]
+    assert ts == sorted(ts)
+    b = _run(setup, "fedavg", "vmap", "async", **kw)
+    assert [h["loss"] for h in a.history] == [h["loss"] for h in b.history]
+    assert [h["t"] for h in a.history] == [h["t"] for h in b.history]
+
+
+def test_async_dropout_burns_compute_but_never_merges(setup):
+    rounds = FNUSchedule(3).rounds()
+    a = _run(setup, "fedavg", "vmap", "async", rounds=rounds,
+             availability=AvailabilityConfig(dropout_prob=0.5, seed=11))
+    drops = a.timeline.of_kind("drop")
+    assert drops, "dropout_prob=0.5 over 3 cohorts should drop something"
+    assert all(e["comp_flops"] > 0 for e in drops)
+    merged = sum(h["merged"] for h in a.history)
+    completes = len(a.timeline.of_kind("complete"))
+    assert merged == completes  # every delivered update merged, no drop did
+    assert len(a.history) == len(rounds)
+
+
+def test_async_rejects_stepsize_tracking(setup):
+    adapter, clients, eval_set = setup
+    cfg = FLRunConfig(runtime="async", track_stepsizes=True)
+    with pytest.raises(ValueError, match="sync"):
+        run_federated(adapter, clients, eval_set, FNUSchedule(1).rounds(), cfg)
+
+
+def test_unknown_runtime_and_policy_rejected(setup):
+    adapter, clients, eval_set = setup
+    with pytest.raises(ValueError, match="unknown runtime"):
+        run_federated(adapter, clients, eval_set, FNUSchedule(1).rounds(),
+                      FLRunConfig(runtime="threads"))
+    with pytest.raises(ValueError, match="unknown policy"):
+        run_federated(adapter, clients, eval_set, FNUSchedule(1).rounds(),
+                      FLRunConfig(runtime="async", async_policy="fifo"))
+
+
+# -- policy unit semantics --------------------------------------------------
+
+
+def _tiny_partitioned():
+    params = {
+        "layer1": {"w": jnp.full((2,), 1.0)},
+        "layer2": {"w": jnp.full((2,), 2.0)},
+        "head": {"w": jnp.full((2,), 3.0)},
+    }
+    return params, build_partition(params)
+
+
+def _upd(part, params, group, value, *, version, weight=1.0):
+    from repro.core import masking
+    base = params if group < 0 else masking.select(params, part, group)
+    sub = jax.tree.map(lambda x: jnp.full_like(x, value), base)
+    return ClientUpdate(client_id=0, version=version, group=group,
+                        subtree=sub, weight=weight, loss=0.0, dispatched_t=0.0)
+
+
+def test_merge_mixed_groups_splice_current_context():
+    """A buffer holding updates for different layer groups (the FedPart-
+    specific case): each averaged subtree splices into the current model;
+    untouched groups keep the current — not any historical — values."""
+    params, part = _tiny_partitioned()
+    pol = FedBuffPolicy(partition=part)
+    ups = [_upd(part, params, 0, 10.0, version=0),
+           _upd(part, params, 1, 20.0, version=1)]
+    new, info = pol.merge(params, ups, version=2)
+    np.testing.assert_allclose(np.asarray(new["layer1"]["w"]), 10.0)
+    np.testing.assert_allclose(np.asarray(new["layer2"]["w"]), 20.0)
+    np.testing.assert_allclose(np.asarray(new["head"]["w"]), 3.0)  # untouched
+    assert info["merged"] == 2 and info["staleness_max"] == 2
+    assert info["groups"] == {0: 1, 1: 1}
+
+
+def test_merge_full_and_partial_order_independent():
+    """A FULL_NETWORK update sharing the buffer with a partial-group update
+    (a straggling warmup/bridge round under FedBuff): the full tree merges
+    first and the targeted subtree splices on top, whichever arrived first —
+    the partial update is never wiped by a later full splice."""
+    params, part = _tiny_partitioned()
+    pol = FedBuffPolicy(partition=part)
+    g0 = _upd(part, params, 0, 10.0, version=1)
+    full = _upd(part, params, -1, 7.0, version=0)
+    for ups in ([g0, full], [full, g0]):
+        new, _ = pol.merge(params, ups, version=1)
+        np.testing.assert_allclose(np.asarray(new["layer1"]["w"]), 10.0)
+        np.testing.assert_allclose(np.asarray(new["layer2"]["w"]), 7.0)
+        np.testing.assert_allclose(np.asarray(new["head"]["w"]), 7.0)
+    # Stale full + fresh partial with discounting: the partial group's mixing
+    # context is the progressively-merged model (post full merge), and the
+    # fresh partial replaces it outright.
+    pol1 = FedBuffPolicy(partition=part, staleness_exponent=1.0)
+    new, _ = pol1.merge(params, [g0, full], version=1)  # full stale 1 => m=1/2
+    np.testing.assert_allclose(np.asarray(new["layer1"]["w"]), 10.0)
+    np.testing.assert_allclose(np.asarray(new["layer2"]["w"]), 4.5)  # (2+7)/2
+
+
+def test_merge_staleness_mixing_polynomial():
+    """Exponent a: a single update of staleness s merges with coefficient
+    m=(1+s)^-a against the current value — exponent 0 is pure replacement."""
+    params, part = _tiny_partitioned()
+    # fresh (exponent irrelevant): replacement
+    pol0 = FedBuffPolicy(partition=part, staleness_exponent=1.0)
+    new, _ = pol0.merge(params, [_upd(part, params, 0, 9.0, version=4)],
+                        version=4)
+    np.testing.assert_allclose(np.asarray(new["layer1"]["w"]), 9.0)
+    # staleness 1, a=1 => m=0.5: halfway between current (1.0) and update (9.0)
+    new, info = pol0.merge(params, [_upd(part, params, 0, 9.0, version=3)],
+                           version=4)
+    np.testing.assert_allclose(np.asarray(new["layer1"]["w"]), 5.0)
+    assert info["staleness_mean"] == 1.0
+    # exponent 0: stale or not, replacement (degenerate-config arithmetic)
+    pol_a0 = FedBuffPolicy(partition=part, staleness_exponent=0.0)
+    new, _ = pol_a0.merge(params, [_upd(part, params, 0, 9.0, version=0)],
+                          version=4)
+    np.testing.assert_allclose(np.asarray(new["layer1"]["w"]), 9.0)
+
+
+def test_merge_intra_buffer_staleness_weighting():
+    """Two same-group updates, one stale: the stale one's relative weight is
+    discounted by (1+s)^-a inside the average."""
+    params, part = _tiny_partitioned()
+    pol = FedBuffPolicy(partition=part, staleness_exponent=1.0)
+    ups = [_upd(part, params, 0, 0.0, version=2),    # fresh, scale 1
+           _upd(part, params, 0, 8.0, version=0)]    # stale 2, scale 1/3
+    new, _ = pol.merge(params, ups, version=2)
+    # avg = (1*0 + 1/3*8)/(4/3) = 2; m = (4/3)/2 = 2/3 => 1/3*1 + 2/3*2
+    np.testing.assert_allclose(np.asarray(new["layer1"]["w"]), 1 / 3 + 4 / 3,
+                               rtol=1e-6)
+
+
+def test_policy_goal_and_should_merge():
+    _, part = _tiny_partitioned()
+    fb = FedBuffPolicy(partition=part, buffer_goal=3)
+    assert fb.goal(cohort_size=8) == 3
+    assert not fb.should_merge(2, pending=5, cohort_size=8)
+    assert fb.should_merge(3, pending=5, cohort_size=8)
+    assert fb.should_merge(1, pending=0, cohort_size=8)  # starvation guard
+    fb0 = FedBuffPolicy(partition=part)                  # K=0 => cohort size
+    assert fb0.goal(cohort_size=5) == 5
+    sy = SyncFedAvgPolicy(partition=part)
+    assert not sy.should_merge(4, pending=1, cohort_size=5)
+    assert sy.should_merge(4, pending=0, cohort_size=5)
+    assert not sy.should_merge(0, pending=0, cohort_size=5)
+    with pytest.raises(ValueError, match="unknown policy"):
+        make_policy("fifo", part)
+
+
+def test_staleness_scale_formula():
+    _, part = _tiny_partitioned()
+    pol = FedBuffPolicy(partition=part, staleness_exponent=0.5)
+    assert pol.staleness_scale(0) == 1.0
+    np.testing.assert_allclose(pol.staleness_scale(3), 0.5)
+    pol0 = FedBuffPolicy(partition=part, staleness_exponent=0.0)
+    assert pol0.staleness_scale(10_000) == 1.0
+    with pytest.raises(ValueError):
+        pol.staleness_scale(-1)
+
+
+# -- schedule-by-version lookup --------------------------------------------
+
+
+def test_schedule_index_clamps_and_stales():
+    rounds = FedPartSchedule(num_groups=3, warmup_rounds=1, rounds_per_layer=1,
+                             cycles=1).rounds()
+    idx = ScheduleIndex.from_rounds(rounds)
+    assert len(idx) == len(rounds)
+    assert idx.for_version(0).phase == "warmup"
+    assert idx.for_version(1).group == 0
+    # past-the-end versions clamp to the final spec (late dispatch drain)
+    assert idx.for_version(10_000) == rounds[-1]
+    assert ScheduleIndex.staleness(5, 2) == 3
+    assert ScheduleIndex.staleness(2, 5) == 0
+    with pytest.raises(ValueError):
+        idx.for_version(-1)
+    with pytest.raises(ValueError):
+        ScheduleIndex.from_rounds([])
+
+
+# -- availability model -----------------------------------------------------
+
+
+def test_availability_degenerate_consumes_no_randomness():
+    av = ClientAvailability(AvailabilityConfig(), 8)
+    state = av._rng.bit_generator.state
+    assert av.available(list(range(8))) == list(range(8))
+    assert av.jitter() == 1.0 and not av.drops()
+    assert av._rng.bit_generator.state == state  # untouched stream
+    np.testing.assert_array_equal(av.speeds, np.ones(8))
+
+
+def test_availability_seeded_and_bounded():
+    cfg = AvailabilityConfig(speed_spread=3.0, latency_jitter=0.5,
+                             dropout_prob=0.3, unavailable_prob=0.4, seed=5)
+    a, b = ClientAvailability(cfg, 16), ClientAvailability(cfg, 16)
+    np.testing.assert_array_equal(a.speeds, b.speeds)
+    assert ((a.speeds >= 1 / 4.0) & (a.speeds <= 4.0)).all()
+    assert [a.jitter() for _ in range(5)] == [b.jitter() for _ in range(5)]
+    assert [a.drops() for _ in range(20)] == [b.drops() for _ in range(20)]
+    assert a.available(list(range(16))) == b.available(list(range(16)))
+    for j in (a.jitter() for _ in range(10)):
+        assert 1.0 <= j <= 1.5
+
+
+def test_availability_config_validation():
+    with pytest.raises(ValueError):
+        AvailabilityConfig(dropout_prob=1.0)
+    with pytest.raises(ValueError):
+        AvailabilityConfig(speed_spread=-0.1)
+    assert AvailabilityConfig().is_degenerate
+    assert not AvailabilityConfig(latency_jitter=0.1).is_degenerate
+
+
+# -- timeline ---------------------------------------------------------------
+
+
+def test_timeline_time_to_accuracy():
+    tl = Timeline()
+    tl.record(1.0, "eval", version=0, acc=0.2)
+    tl.record(3.0, "eval", version=1, acc=0.5)
+    tl.record(2.0, "eval", version=2, acc=0.4)   # out-of-order insert
+    assert tl.time_to_accuracy(0.1) == 1.0
+    assert tl.time_to_accuracy(0.45) == 3.0
+    assert tl.time_to_accuracy(0.9) == float("inf")
+    assert tl.accuracy_curve() == [(1.0, 0.2), (2.0, 0.4), (3.0, 0.5)]
+    assert tl.total_seconds == 3.0

@@ -210,10 +210,11 @@ def make_setup(client_sizes):
              for i in range(len(client_sizes))]
     return resnet_task("resnet4", num_classes=4), build_clients(X, y, parts), eval_set
 
-def run(setup, algo, engine, rounds):
+def run(setup, algo, engine, rounds, runtime="sync"):
     adapter, clients, eval_set = setup
     cfg = FLRunConfig(local_epochs=1, batch_size=16, lr=2e-3, adam_eps=1e-3,
-                      algo=AlgoConfig(name=algo), engine=engine, sim_devices=2)
+                      algo=AlgoConfig(name=algo), engine=engine, sim_devices=2,
+                      runtime=runtime)
     return run_federated(adapter, clients, eval_set, rounds, cfg)
 
 def diffs(a, b):
@@ -237,6 +238,10 @@ for algo in ("fedavg", "fedprox", "moon"):
     if algo == "fedavg":
         results["fedavg_vmap_vs_shard"] = diffs(
             run(ragged, algo, "vmap", MIXED), shard)
+        # degenerate async runtime on a real 2-device mesh: the event-driven
+        # path must reproduce the sync barrier through the sharded backend
+        results["fedavg_async_shard"] = diffs(
+            run(ragged, algo, "shard_map", MIXED, runtime="async"), shard)
 buckets = make_setup((12, 36, 20))        # two buckets, each padded to 2
 results["fedavg_buckets"] = diffs(
     run(buckets, "fedavg", "sequential", MIXED[1:]),
