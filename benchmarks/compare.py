@@ -1,0 +1,117 @@
+"""Bench-regression gate: compare a fresh ``--json`` bench run against a
+committed ``BENCH_*.json`` baseline.
+
+The CI bench lane (``.github/workflows/bench.yml``) runs
+``benchmarks/engine_bench.py`` and ``benchmarks/async_bench.py`` on a pinned
+small config and feeds both through this script.  Rows are matched by
+``name``; a row regresses when a gated metric moves past the tolerance band
+(default 25%), and a baseline row missing from the current run fails outright
+(coverage must not silently shrink).  Extra current rows are reported but
+never fail — they are tomorrow's baseline.
+
+Two classes of metric:
+
+* **scale-free** (compared by default): ``speedup`` (engine vs sequential,
+  inflight=N vs inflight=1) and ``clients_per_sec_per_device``-style
+  throughput ratios... these measure the *code*, so they transfer between a
+  laptop and a CI runner.  ``clients_per_sec_per_device`` is absolute-rate
+  but still gated by default because the lane's warm-cache double-run keeps
+  it stable on one runner class; loosen ``--tolerance`` if your fleet is
+  heterogeneous.
+* **absolute** (``--absolute`` only): ``us_per_call`` / ``wall_seconds``
+  wall-clock.  Off by default — different machines legitimately differ by
+  far more than any tolerance band.
+
+    python benchmarks/compare.py --baseline BENCH_engine.json \
+        --current engine.json --tolerance 0.25
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+# metric -> direction: +1 = higher is better, -1 = lower is better
+SCALE_FREE = {"speedup": +1, "clients_per_sec_per_device": +1}
+ABSOLUTE = {"us_per_call": -1, "wall_seconds": -1}
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    rows = payload["rows"] if isinstance(payload, dict) else payload
+    return {r["name"]: r for r in rows}
+
+
+def compare(baseline: dict[str, dict], current: dict[str, dict],
+            tolerance: float, absolute: bool) -> list[dict]:
+    """One record per (row, gated metric) plus missing-row records."""
+    metrics = dict(SCALE_FREE)
+    if absolute:
+        metrics.update(ABSOLUTE)
+    records = []
+    for name, base_row in baseline.items():
+        cur_row = current.get(name)
+        if cur_row is None:
+            records.append({"name": name, "metric": "-", "status": "MISSING",
+                            "base": None, "cur": None, "delta": None})
+            continue
+        for metric, direction in metrics.items():
+            base = base_row.get(metric)
+            cur = cur_row.get(metric)
+            if base is None or cur is None:
+                continue
+            base, cur = float(base), float(cur)
+            if base <= 0:
+                continue        # degenerate baseline: nothing to gate on
+            delta = cur / base - 1.0
+            worse = -delta if direction > 0 else delta
+            status = "FAIL" if worse > tolerance else "ok"
+            records.append({"name": name, "metric": metric, "status": status,
+                            "base": base, "cur": cur, "delta": delta})
+    for name in current:
+        if name not in baseline:
+            records.append({"name": name, "metric": "-", "status": "NEW",
+                            "base": None, "cur": None, "delta": None})
+    return records
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_*.json baseline")
+    ap.add_argument("--current", required=True,
+                    help="fresh --json output to gate")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="also gate absolute wall-clock metrics "
+                         "(same-machine comparisons only)")
+    args = ap.parse_args(argv)
+
+    records = compare(load_rows(args.baseline), load_rows(args.current),
+                      args.tolerance, args.absolute)
+    width = max((len(r["name"]) for r in records), default=4)
+    failures = 0
+    for r in records:
+        if r["status"] in ("FAIL", "MISSING"):
+            failures += 1
+        if r["base"] is None:
+            print(f"{r['name']:{width}s}  {r['status']}")
+        else:
+            print(f"{r['name']:{width}s}  {r['metric']:28s} "
+                  f"base={r['base']:10.4f}  cur={r['cur']:10.4f}  "
+                  f"{r['delta']:+7.1%}  {r['status']}")
+    gated = sum(r["base"] is not None for r in records)
+    print(f"\n[compare] {gated} gated metrics, "
+          f"{sum(r['status'] == 'NEW' for r in records)} new rows, "
+          f"{failures} failure(s) at tolerance {args.tolerance:.0%}")
+    if gated == 0 and not failures:
+        print("[compare] WARNING: no overlapping gated metrics — "
+              "check the bench flags match the baseline's")
+        return 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -145,17 +145,21 @@ def bench(task="nlp", clients=8, samples_per_client=32, epochs=1, reps=5,
             times[name], traces[name] = sec, tr
             derived = f"traces={tr}"
             extra = ""
+            row = {
+                "name": f"engine_{task}_{phase}_{name}_c{clients}",
+                "us_per_call": sec * 1e6,
+                "traces": tr,
+            }
             if name == "shard_map":
                 # per-device client throughput: the scaling quantity this
                 # engine exists for (clients processed per second per device)
                 thr = clients / (sec * ndev)
                 derived += f" devices={ndev} {thr:.1f} clients/s/dev"
                 extra = f" [{ndev} dev, {thr:.1f} clients/s/dev]"
-            rows.append({
-                "name": f"engine_{task}_{phase}_{name}_c{clients}",
-                "us_per_call": sec * 1e6,
-                "derived": derived,
-            })
+                row["devices"] = ndev
+                row["clients_per_sec_per_device"] = thr
+            row["derived"] = derived
+            rows.append(row)
             if verbose:
                 print(f"[{task}:{phase:7s}] clients={clients:3d} "
                       f"{name}={sec*1e3:8.1f} ms/round "
@@ -174,6 +178,8 @@ def bench(task="nlp", clients=8, samples_per_client=32, epochs=1, reps=5,
                     "us_per_call": (sec_nd - sec) * 1e6,
                     "derived": (f"donate {thr_delta:+.1f}% throughput "
                                 f"{mem_delta:+.2f}MB live saved"),
+                    "throughput_delta_pct": thr_delta,
+                    "live_mb_delta": mem_delta,
                 })
                 if verbose:
                     print(f"[{task}:{phase:7s}] clients={clients:3d} "
@@ -188,6 +194,7 @@ def bench(task="nlp", clients=8, samples_per_client=32, epochs=1, reps=5,
                     "name": f"engine_{task}_{phase}_{name}_speedup_c{clients}",
                     "us_per_call": 0.0,
                     "derived": f"{speedup:.2f}x",
+                    "speedup": speedup,
                 })
                 if verbose:
                     print(f"[{task}:{phase:7s}] clients={clients:3d} "
@@ -222,6 +229,8 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default="",
                     help="also write rows as machine-readable JSON to PATH")
     args = ap.parse_args(argv)
+    from benchmarks.common import enable_compile_cache
+    enable_compile_cache()
     if args.engine == "all":
         engines = ("sequential", "vmap")
     elif args.engine == "sequential":

@@ -10,7 +10,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.flash_attention import ops as fa
 from repro.optim.adam import AdamConfig, adam_init, adam_update

@@ -9,7 +9,6 @@ ledger is analytic — it does not need the run)."""
 import time
 
 import jax
-import numpy as np
 
 from repro.core.costs import comm_cost, comp_cost
 from repro.core.partition import group_param_counts

@@ -25,7 +25,6 @@ if __name__ == "__main__":
     from repro.launch._simdev import force_sim_devices
     force_sim_devices()
 
-import numpy as np
 
 from repro.core.schedule import FedPartSchedule, matched_fnu
 from repro.data import (VisionDatasetSpec, balanced_eval_set, build_clients,

@@ -2,16 +2,21 @@
 # Canonical tier-1 verify: the fast correctness subset (everything not marked
 # `slow`; see pytest.ini).  Usage:
 #
-#   scripts/tier1.sh            # tier-1 subset, fail-fast
-#   scripts/tier1.sh --slow     # the full suite, slow lane included
-#   scripts/tier1.sh -k engine  # extra pytest args pass through
+#   scripts/tier1.sh                      # tier-1 subset, fail-fast
+#   scripts/tier1.sh --slow               # the full suite, slow lane included
+#   scripts/tier1.sh -k engine            # extra pytest args pass through
+#   scripts/tier1.sh -k engine --slow     # flags are position-independent
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 ARGS=(-x -q)
-if [[ "${1:-}" == "--slow" ]]; then
-  shift
-  ARGS+=(-m "")          # clear the default "not slow" filter from pytest.ini
-fi
+REST=()
+for arg in "$@"; do
+  if [[ "$arg" == "--slow" ]]; then
+    ARGS+=(-m "")        # clear the default "not slow" filter from pytest.ini
+  else
+    REST+=("$arg")
+  fi
+done
 
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest "${ARGS[@]}" "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest "${ARGS[@]}" ${REST[@]+"${REST[@]}"}

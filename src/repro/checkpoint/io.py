@@ -7,7 +7,6 @@ import json
 import os
 from typing import Any
 
-import jax
 import numpy as np
 
 from repro.core.partition import tree_paths

@@ -10,7 +10,7 @@ reduced variant (<=2 layers, d_model<=512, <=4 experts) that runs on CPU.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Literal, Optional
+from typing import Callable, Literal
 
 Family = Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm"]
 MlpKind = Literal["swiglu", "geglu", "gelu"]

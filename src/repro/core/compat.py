@@ -24,3 +24,26 @@ SHARD_MAP_NO_CHECK_KW = {
     ("check_vma" if "check_vma" in _inspect.signature(shard_map).parameters
      else "check_rep"): False
 }
+
+
+def abstract_client_mesh(width: int, axis: str = "clients"):
+    """``jax.sharding.AbstractMesh`` with one ``width``-sized axis, or ``None``
+    when this jax cannot build one.
+
+    An abstract mesh lets one traced ``shard_map`` program serve every
+    concrete mesh of the same shape — the submesh bindings in ``fl/batched.py``
+    use it to share a single trace across equal-width submeshes (the concrete
+    devices come in through the inputs' ``NamedSharding``).  The constructor
+    signature has moved across jax releases, so resolve it by trying, not by
+    version guesswork; callers fall back to per-submesh concrete-mesh traces
+    on ``None``.
+    """
+    am = getattr(jax.sharding, "AbstractMesh", None)
+    if am is None:  # pragma: no cover - depends on installed jax
+        return None
+    for args in (((axis, int(width)),),), ((int(width),), (axis,)):
+        try:
+            return am(*args)
+        except TypeError:  # pragma: no cover - depends on installed jax
+            continue
+    return None  # pragma: no cover - depends on installed jax

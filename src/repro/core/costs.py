@@ -24,8 +24,8 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.partition import Partition, group_param_bytes, total_param_bytes
-from repro.core.schedule import FULL_NETWORK, RoundSpec
+from repro.core.partition import Partition, group_param_bytes
+from repro.core.schedule import RoundSpec
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +174,102 @@ class VirtualTimeModel:
             + self.base_latency_s
         )
         return base * jitter
+
+    def occupancy(self) -> "SubmeshOccupancy":
+        """Fresh submesh-occupancy book for one run: the async runtime books
+        every cohort's virtual span (dispatch → last completion) against the
+        submesh that hosted it, so the timeline can report how much of the
+        run actually overlapped (``SubmeshOccupancy``)."""
+        return SubmeshOccupancy()
+
+
+def overlap_of_spans(spans: Sequence[tuple[float, float]]) -> float:
+    """Total time during which >= 2 of the ``(start, end)`` spans are active
+    simultaneously (closes sort before opens at ties, so back-to-back spans
+    don't count).  Shared by ``SubmeshOccupancy`` and
+    ``telemetry.Timeline.overlap_seconds``."""
+    edges: list[tuple[float, int]] = []
+    for s, e in spans:
+        edges += [(s, 1), (e, -1)]
+    edges.sort()
+    total, depth, last = 0.0, 0, 0.0
+    for t, d in edges:
+        if depth >= 2:
+            total += t - last
+        depth += d
+        last = t
+    return total
+
+
+def max_concurrency_of_spans(spans: Sequence[tuple[float, float]]) -> int:
+    """Peak number of simultaneously active ``(start, end)`` spans."""
+    edges: list[tuple[float, int]] = []
+    for s, e in spans:
+        edges += [(s, 1), (e, -1)]
+    edges.sort()                      # ties: close (-1) before open (+1)
+    depth = peak = 0
+    for _, d in edges:
+        depth += d
+        peak = max(peak, depth)
+    return peak
+
+
+@dataclasses.dataclass
+class SubmeshOccupancy:
+    """Virtual-time occupancy ledger for host-parallel async dispatch.
+
+    The event-driven runtime (``repro.fl.runtime``) trains up to
+    ``max_inflight_cohorts`` cohorts concurrently on disjoint submeshes; this
+    book records, per submesh, the virtual-time span each hosted cohort
+    occupied (dispatch → last member completion).  From it fall out the
+    quantities ``async_bench.py`` sweeps: per-submesh busy time, how much of
+    the run ≥2 cohorts genuinely overlapped, and peak concurrency — the
+    evidence that inflight > 1 changed the *timeline* (the aggregation math
+    is unchanged; docs/ASYNC.md).  ``submesh = -1`` marks cohorts that ran
+    unbound (no pool / queued past exhaustion).
+    """
+
+    spans: list[tuple[int, float, float]] = dataclasses.field(
+        default_factory=list)
+
+    def book(self, submesh: int, start: float, end: float) -> None:
+        if end < start:
+            raise ValueError(f"occupancy span ends before it starts: "
+                             f"[{start}, {end}]")
+        self.spans.append((int(submesh), float(start), float(end)))
+
+    def _merged(self, spans) -> list[tuple[float, float]]:
+        out: list[list[float]] = []
+        for s, e in sorted((s, e) for _, s, e in spans):
+            if out and s <= out[-1][1]:
+                out[-1][1] = max(out[-1][1], e)
+            else:
+                out.append([s, e])
+        return [(s, e) for s, e in out]
+
+    def busy_seconds(self, submesh: int | None = None) -> float:
+        """Union length of the (optionally per-submesh) occupied spans."""
+        spans = (self.spans if submesh is None
+                 else [sp for sp in self.spans if sp[0] == submesh])
+        return sum(e - s for s, e in self._merged(spans))
+
+    def overlap_seconds(self) -> float:
+        """Virtual time during which at least two cohorts were in flight."""
+        return overlap_of_spans([(s, e) for _, s, e in self.spans])
+
+    def max_concurrency(self) -> int:
+        return max_concurrency_of_spans([(s, e) for _, s, e in self.spans])
+
+    def summary(self) -> dict:
+        """The occupancy roll-up the runtime logs into the Timeline."""
+        meshes = sorted({s for s, _, _ in self.spans})
+        return {
+            "cohorts": len(self.spans),
+            "submeshes": len(meshes),
+            "busy_seconds": {int(m): self.busy_seconds(m) for m in meshes},
+            "overlap_seconds": self.overlap_seconds(),
+            "max_concurrency": self.max_concurrency(),
+        }
 
 
 def paper_asymptotic_comp_ratio(bwd_fwd_ratio: float = 2.0) -> float:

@@ -15,12 +15,12 @@ updates.
 
 from __future__ import annotations
 
-from typing import Any, Iterable, Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.partition import Partition, Path, path_str, tree_paths
+from repro.core.partition import Partition, Path, path_str
 
 PyTree = Any
 

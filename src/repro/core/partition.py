@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Callable, Iterable, Mapping, Sequence
+from typing import Any, Callable, Mapping
 
 import jax
 import numpy as np
@@ -165,8 +165,8 @@ def group_param_bytes(params: PyTree, partition: Partition) -> np.ndarray:
 
 
 def total_param_count(params: PyTree) -> int:
-    return int(sum(leaf_count(l) for _, l in tree_paths(params)))
+    return int(sum(leaf_count(leaf) for _, leaf in tree_paths(params)))
 
 
 def total_param_bytes(params: PyTree) -> int:
-    return int(sum(leaf_bytes(l) for _, l in tree_paths(params)))
+    return int(sum(leaf_bytes(leaf) for _, leaf in tree_paths(params)))

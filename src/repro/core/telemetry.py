@@ -113,6 +113,20 @@ class Timeline:
         return float(sum(e.get("comp_flops", 0.0)
                          for e in self.of_kind("complete") + self.of_kind("drop")))
 
+    def cohort_spans(self) -> list[tuple[int, float, float]]:
+        """``(submesh, dispatch_t, last_completion_t)`` per dispatched cohort
+        (host-parallel runtime: dispatch events carry their submesh binding
+        and booked span; ``-1`` = unbound)."""
+        return [(int(e.get("submesh", -1)), e["t"], e["t_end"])
+                for e in self.of_kind("dispatch") if "t_end" in e]
+
+    def overlap_seconds(self) -> float:
+        """Virtual time with >=2 cohorts concurrently in flight — the
+        quantity ``max_inflight_cohorts > 1`` exists to create."""
+        from repro.core.costs import overlap_of_spans
+
+        return overlap_of_spans([(s, e) for _, s, e in self.cohort_spans()])
+
     def accuracy_curve(self) -> list[tuple[float, float]]:
         """``(virtual_seconds, accuracy)`` per evaluation, time-ordered."""
         return [(e["t"], e["acc"]) for e in sorted(self.of_kind("eval"),
@@ -150,7 +164,7 @@ def estimate_k(
     justification and the deployed masks, recorded in EXPERIMENTS.md.
     """
     mean_grad = jax.tree.map(
-        lambda *leaves: sum(l.astype(jnp.float32) for l in leaves) / len(leaves),
+        lambda *leaves: sum(x.astype(jnp.float32) for x in leaves) / len(leaves),
         *per_sample_grads,
     )
     centred = [

@@ -11,7 +11,7 @@ An algorithm contributes a loss *augmentation* on top of the task loss:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -31,11 +31,19 @@ All engines expose ``trace_count`` (XLA traces built so far) — the quantity
 ``benchmarks/engine_bench.py`` reports next to wall-clock.
 
 Beyond ``run_round`` (train + aggregate, the synchronous contract), every
-engine also exposes ``run_local`` — cohort training *without* aggregation,
-returning the stacked locally-trained params.  That is the async runtime's
+engine also exposes ``run_local_async`` — cohort training *without*
+aggregation, returning the still-in-flight stacked locally-trained params
+(``run_local`` is its blocking wrapper).  That is the async runtime's
 execution backend (``repro.fl.runtime``): a dispatched cohort is one stacked
 batch through the same compiled local-round core, and aggregation happens
-later in the server policy, possibly against a newer global model.
+later in the server policy, possibly against a newer global model.  For
+host-parallel dispatch (``FLRunConfig.max_inflight_cohorts`` > 1),
+``cohort_pool`` carves the engine's devices into disjoint submeshes
+(``launch.mesh.SubmeshPool``) and ``run_local_async(submesh=...)`` binds a
+cohort's program to one — width-1 device-following jit for the vmap engine,
+an AbstractMesh-traced shard_map for the sharded engine — so equal-width
+submeshes share a single trace and concurrent cohorts never contend for a
+device (docs/ENGINES.md, docs/ASYNC.md).
 
 With ``donate=True`` (default) the batched engines donate the global params
 into the aggregation jit (in-place splice — ``run_round`` then *consumes* its
@@ -162,6 +170,32 @@ class SequentialEngine:
             locals_.append(local)
             losses.append(loss)
         return masking.stack_trees(locals_), losses
+
+    def cohort_pool(self, max_inflight: int):
+        """No device binding: the oracle trains eagerly on the default
+        device (host-parallel dispatch still applies in *virtual* time)."""
+        return None
+
+    def run_local_async(
+        self,
+        params: PyTree,
+        spec: RoundSpec,
+        datasets: Sequence[ClientDataset],
+        *,
+        seeds: Sequence[int],
+        epochs: int,
+        batch_size: int,
+        prev_params: Sequence[PyTree | None] | None = None,
+        submesh=None,
+    ) -> tuple[PyTree, np.ndarray]:
+        """Common cohort contract for the async runtime; the oracle has no
+        deferred execution, so this is ``run_local`` with array losses."""
+        if submesh is not None:
+            raise ValueError("the sequential engine has no submesh binding")
+        stacked, losses = self.run_local(
+            params, spec, datasets, seeds=seeds, epochs=epochs,
+            batch_size=batch_size, prev_params=prev_params)
+        return stacked, np.asarray(losses, dtype=np.float32)
 
 
 @dataclasses.dataclass
@@ -313,17 +347,74 @@ class _BatchedEngineBase:
 
     # -- cohort execution (async runtime backend) ---------------------------
 
-    @property
-    def _cohort_pad(self) -> int:
-        """Client-axis padding multiple for cohort dispatches (mesh size for
-        the shard_map engine, 1 otherwise)."""
+    def _cohort_pad_for(self, submesh) -> int:
+        """Client-axis padding multiple for cohort dispatches (the bound
+        submesh's width for the shard_map engine, 1 otherwise)."""
         return 1
 
-    def _cohort_fn(self, group: int, stacked_prev: bool) -> Callable:
+    def _cohort_fn(self, group: int, stacked_prev: bool, submesh=None) -> Callable:
         """Local-round program *without* aggregation: returns the stacked
         locally-trained params + per-client losses.  The async runtime's
-        policies aggregate later, possibly against a newer global model."""
+        policies aggregate later, possibly against a newer global model.
+        ``submesh`` binds the program to an explicit device set (host-parallel
+        dispatch); ``None`` keeps the engine's default placement."""
         raise NotImplementedError
+
+    def _place_cohort_args(self, args: tuple, submesh, *,
+                           stacked_prev: bool) -> tuple:
+        """Commit one bucket's ``(params, inputs, labels, step_valid, prev)``
+        onto ``submesh``'s devices (no-op without a submesh)."""
+        return args
+
+    def cohort_pool(self, max_inflight: int):
+        """A ``launch.mesh.SubmeshPool`` carving this engine's devices into
+        up to ``max_inflight`` disjoint submeshes, or ``None`` when cohorts
+        should keep the engine's default placement (``max_inflight == 1`` —
+        the PR 3 regime — or an engine with no device binding)."""
+        return None
+
+    def run_local_async(
+        self,
+        params: PyTree,
+        spec: RoundSpec,
+        datasets: Sequence[ClientDataset],
+        *,
+        seeds: Sequence[int],
+        epochs: int,
+        batch_size: int,
+        prev_params: Sequence[PyTree | None] | None = None,
+        submesh=None,
+    ) -> tuple[PyTree, jax.Array]:
+        """Train one *cohort* (clients dispatched together against the same
+        global model) without syncing the host: returns
+        ``(stacked_locals, losses_dev)`` where both are still-in-flight jax
+        arrays — jax's async dispatch returns immediately, so the caller can
+        launch further cohorts on other submeshes before materialising any
+        results.  ``submesh`` (from ``cohort_pool``) commits the cohort's
+        inputs to a disjoint device set; equal-width submeshes share one
+        trace (the vmap engine's programs are device-agnostic, the shard_map
+        engine traces over an AbstractMesh when this jax supports it)."""
+        group = FULL_NETWORK if spec.is_full else spec.group
+        use_prev = self.algo.name == "moon"
+        num = len(datasets)
+
+        parts: list[tuple[tuple[int, ...], tuple[PyTree, jax.Array]]] = []
+        for bucket, prev_arg in self._buckets(
+            params, datasets, batch_size=batch_size, epochs=epochs, seeds=seeds,
+            prev_params=prev_params, use_prev=use_prev,
+            pad_clients_to=self._cohort_pad_for(submesh),
+        ):
+            fn = self._cohort_fn(group, stacked_prev=use_prev, submesh=submesh)
+            args = self._place_cohort_args(
+                (params, bucket.inputs, bucket.labels, bucket.step_valid,
+                 prev_arg), submesh, stacked_prev=use_prev)
+            locals_stacked, bucket_losses = fn(*args)
+            n = bucket.num_real
+            parts.append((bucket.members, (
+                jax.tree.map(lambda x: x[:n], locals_stacked), bucket_losses[:n],
+            )))
+
+        return self._gather_order(parts, num)
 
     def run_local(
         self,
@@ -336,36 +427,14 @@ class _BatchedEngineBase:
         batch_size: int,
         prev_params: Sequence[PyTree | None] | None = None,
     ) -> tuple[PyTree, list[float]]:
-        """Train one *cohort* (clients dispatched together against the same
-        global model) and return ``(stacked_locals, losses)`` — no
-        aggregation.  This is the async runtime's execution backend: a cohort
-        is one stacked batch through the same compiled local-round core the
-        synchronous ``run_round`` uses, so the batched engines are the
-        backend, not a parallel implementation.  ``stacked_locals`` carries a
-        leading client axis in ``datasets`` order (padding clients sliced
-        off)."""
-        group = FULL_NETWORK if spec.is_full else spec.group
-        use_prev = self.algo.name == "moon"
-        num = len(datasets)
-
-        parts: list[tuple[tuple[int, ...], tuple[PyTree, jax.Array]]] = []
-        for bucket, prev_arg in self._buckets(
-            params, datasets, batch_size=batch_size, epochs=epochs, seeds=seeds,
-            prev_params=prev_params, use_prev=use_prev,
-            pad_clients_to=self._cohort_pad,
-        ):
-            fn = self._cohort_fn(group, stacked_prev=use_prev)
-            locals_stacked, bucket_losses = fn(
-                params, bucket.inputs, bucket.labels, bucket.step_valid, prev_arg
-            )
-            n = bucket.num_real
-            parts.append((bucket.members, (
-                jax.tree.map(lambda x: x[:n], locals_stacked), bucket_losses[:n],
-            )))
-
-        stacked, losses_dev = self._gather_order(parts, num)
-        losses = [float(x) for x in np.asarray(losses_dev)]
-        return stacked, losses
+        """Blocking ``run_local_async``: same cohort contract —
+        ``stacked_locals`` carries a leading client axis in ``datasets``
+        order (padding clients sliced off) — with the losses materialised as
+        floats."""
+        stacked, losses_dev = self.run_local_async(
+            params, spec, datasets, seeds=seeds, epochs=epochs,
+            batch_size=batch_size, prev_params=prev_params)
+        return stacked, [float(x) for x in np.asarray(losses_dev)]
 
 
 @dataclasses.dataclass
@@ -397,10 +466,29 @@ class VmapEngine(_BatchedEngineBase):
             local_round, donate_argnums=self._donate_prev(stacked_prev))
         return self._local_fns[key]
 
-    def _cohort_fn(self, group: int, stacked_prev: bool) -> Callable:
+    def _cohort_fn(self, group: int, stacked_prev: bool, submesh=None) -> Callable:
         # The vmap local round already returns (stacked locals, losses) —
-        # sync and async dispatches share one compiled program per group.
+        # sync and async dispatches share one compiled program per group, and
+        # because jit follows its committed inputs, every width-1 submesh
+        # shares this single trace too (one executable per device, one trace).
         return self._local_fn(group, stacked_prev)
+
+    def _place_cohort_args(self, args: tuple, submesh, *,
+                           stacked_prev: bool) -> tuple:
+        if submesh is None:
+            return args
+        dev = submesh.devices[0]
+        return tuple(jax.device_put(a, dev) for a in args)
+
+    def cohort_pool(self, max_inflight: int):
+        """Width-1 submeshes (this engine's programs are single-device):
+        cohort ``i`` runs whole on visible device ``i``."""
+        if max_inflight <= 1:
+            return None
+        from repro.launch.mesh import SubmeshPool
+
+        num = min(max_inflight, len(jax.devices()))
+        return SubmeshPool(num, devices=num, width=1)
 
     def _agg_fn(self, group: int) -> Callable:
         if group in self._agg_fns:
@@ -489,6 +577,7 @@ class ShardMapEngine(_BatchedEngineBase):
         from repro.launch.mesh import make_client_mesh
 
         self.mesh = make_client_mesh(self.devices)
+        self._abs_meshes: dict[int, Any] = {}
 
     @property
     def num_devices(self) -> int:
@@ -538,16 +627,42 @@ class ShardMapEngine(_BatchedEngineBase):
         )
         return self._local_fns[key]
 
-    @property
-    def _cohort_pad(self) -> int:
-        return self.num_devices
+    def _cohort_pad_for(self, submesh) -> int:
+        return submesh.width if submesh is not None else self.num_devices
 
-    def _cohort_fn(self, group: int, stacked_prev: bool) -> Callable:
+    def _abstract_mesh(self, width: int):
+        """Cached AbstractMesh of ``width`` (None when this jax can't)."""
+        if width not in self._abs_meshes:
+            from repro.core.compat import abstract_client_mesh
+
+            self._abs_meshes[width] = abstract_client_mesh(width, CLIENT_AXIS)
+        return self._abs_meshes[width]
+
+    def _cohort_fn(self, group: int, stacked_prev: bool, submesh=None) -> Callable:
         """Plain (no-psum) shard_map'd local round for async cohorts: each
         device vmaps its client shard and the stacked locals leave the mesh
         sharded — aggregation happens later, in the server policy, possibly
-        against a newer global model, so it cannot be fused on-mesh here."""
-        key = (group, stacked_prev)
+        against a newer global model, so it cannot be fused on-mesh here.
+
+        Without a submesh the program binds the engine's full client mesh
+        (the synchronous / PR 3 placement).  With one, the trace is built
+        over an *AbstractMesh* of the submesh's width and cached per width —
+        the concrete devices arrive through the inputs' ``NamedSharding``
+        (``_place_cohort_args``), so every equal-width submesh replays the
+        same trace.  When this jax can't trace abstractly, fall back to one
+        concrete-mesh trace per device set (the persistent XLA cache still
+        dedups the identical HLO)."""
+        if submesh is None:
+            key, mesh = (group, stacked_prev), self.mesh
+        else:
+            am = self._abstract_mesh(submesh.width)
+            if am is not None:
+                key, mesh = (group, stacked_prev, submesh.width), am
+            else:  # pragma: no cover - depends on installed jax
+                key = (group, stacked_prev,
+                       tuple(getattr(d, "id", i)
+                             for i, d in enumerate(submesh.devices)))
+                mesh = submesh.mesh
         if key in self._cohort_fns:
             return self._cohort_fns[key]
 
@@ -564,12 +679,38 @@ class ShardMapEngine(_BatchedEngineBase):
         in_specs = (P(), c, c, c, c if stacked_prev else P())
         self._cohort_fns[key] = jax.jit(
             _shard_map(
-                device_cohort, mesh=self.mesh, in_specs=in_specs,
+                device_cohort, mesh=mesh, in_specs=in_specs,
                 out_specs=(c, c), **_SHARD_MAP_KW,
             ),
             donate_argnums=self._donate_prev(stacked_prev),
         )
         return self._cohort_fns[key]
+
+    def _place_cohort_args(self, args: tuple, submesh, *,
+                           stacked_prev: bool) -> tuple:
+        if submesh is None or self._abstract_mesh(submesh.width) is None:
+            # concrete-mesh traces shard host arrays themselves
+            return args
+        from jax.sharding import NamedSharding
+
+        rep = NamedSharding(submesh.mesh, P())
+        shd = NamedSharding(submesh.mesh, P(CLIENT_AXIS))
+        params, inputs, labels, step_valid, prev = args
+        return (jax.device_put(params, rep),
+                jax.device_put(inputs, shd),
+                jax.device_put(labels, shd),
+                jax.device_put(step_valid, shd),
+                jax.device_put(prev, shd if stacked_prev else rep))
+
+    def cohort_pool(self, max_inflight: int):
+        """Cut this engine's client mesh into equal-width disjoint submeshes,
+        one in-flight cohort per submesh."""
+        if max_inflight <= 1:
+            return None
+        from repro.launch.mesh import SubmeshPool
+
+        num = min(max_inflight, self.num_devices)
+        return SubmeshPool(num, devices=self.num_devices)
 
     def _splice_fn(self, group: int, n_buckets: int) -> Callable:
         """Sum the buckets' psum'd updates and splice into the global model

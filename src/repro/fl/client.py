@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +20,7 @@ from repro.core import masking
 from repro.core.partition import Partition
 from repro.fl.algorithms import AlgoConfig, augment_loss
 from repro.fl.tasks import TaskAdapter
-from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+from repro.optim.adam import AdamConfig, adam_init, adam_update
 
 PyTree = Any
 

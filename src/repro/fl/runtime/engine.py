@@ -1,4 +1,5 @@
-"""Event-driven asynchronous federated runtime (virtual clock).
+"""Event-driven asynchronous federated runtime (virtual clock, host-parallel
+dispatch).
 
 ``run_federated_async`` replaces the synchronous "everyone trains, then we
 average" barrier with an explicit discrete-event simulation:
@@ -9,36 +10,52 @@ average" barrier with an explicit discrete-event simulation:
    (``fl.batched.make_engine`` — the vmap / shard_map engines are the
    execution backend, not a parallel implementation).  Every client in the
    cohort trains the layer group scheduled for version ``v``
-   (``core.schedule.ScheduleIndex``) against the version-``v`` model.
+   (``core.schedule.ScheduleIndex``) against the version-``v`` model.  Up to
+   ``FLRunConfig.max_inflight_cohorts`` cohorts may be in flight at once:
+   with the default ``1`` dispatch is merge-driven (the original async
+   runtime); with more, freed capacity is topped up immediately, so several
+   cohorts train concurrently — in virtual time *and* on the host, each on
+   its own disjoint device submesh (``launch.mesh.SubmeshPool``,
+   ``engine.cohort_pool``).  jax's async dispatch makes the launch
+   non-blocking; results are only materialised when a cohort's first
+   completion event pops.  When no submesh is free the launch queues, and
+   the dispatch is still booked at its virtual time.
 2. **Flight.**  Each client's completion is booked on a virtual timeline:
    local compute scaled by its persistent speed multiplier, up/down transfer
    of the transmitted subtree, latency jitter, dropout — all from the seeded
    availability model (``runtime.clients``) and the virtual-time cost model
-   (``core.costs.VirtualTimeModel``).
+   (``core.costs.VirtualTimeModel``).  Cohort spans are booked per submesh
+   in a ``core.costs.SubmeshOccupancy`` ledger, so the timeline shows how
+   much of the run genuinely overlapped.
 3. **Merge.**  Delivered updates accumulate in the server buffer; the
    aggregation policy (``runtime.policy``) decides when to merge (barrier,
    or FedBuff's goal-K) and discounts stale updates polynomially.  A merge
    bumps the server version — which advances the FedPart schedule — and
-   triggers the next dispatch, so slow clients from old versions keep
-   training while the server moves on: that overlap is the async win.
+   tops the in-flight cohorts back up, so slow clients from old versions
+   keep training while the server moves on: that overlap is the async win.
 
 Time-to-accuracy comes out as first-class output: every dispatch, delivery,
 drop, merge, and eval is logged against the virtual clock in a
-``core.telemetry.Timeline`` attached to the returned ``FLResult``.
+``core.telemetry.Timeline`` attached to the returned ``FLResult``, with
+dispatch events carrying their submesh binding and span.
 
 **Degenerate-config equivalence** (pinned in tests/test_async_runtime.py):
 with full participation, a perfect fleet (default ``AvailabilityConfig``),
-``buffer_k = 0`` (goal = cohort size) and ``staleness_exponent = 0``, every
-cohort is a barrier round — the client-selection RNG stream, per-client
-seeds, local training programs, and aggregation arithmetic all coincide with
-the synchronous path, so params / losses / cost books match ``run_federated``
-to <=1e-5 under every engine.
+``buffer_k = 0`` (goal = cohort size), ``staleness_exponent = 0`` and
+``max_inflight_cohorts = 1``, every cohort is a barrier round — the
+client-selection RNG stream, per-client seeds, local training programs, and
+aggregation arithmetic all coincide with the synchronous path, so params /
+losses / cost books match ``run_federated`` to <=1e-5 under every engine.
+The dispatch decisions depend only on virtual events, never on host speed or
+device count, so a given config is reproducible on any machine; submeshes
+only decide *where* a cohort's compiled program runs.
 """
 
 from __future__ import annotations
 
 import heapq
 import itertools
+from collections import deque
 from typing import TYPE_CHECKING, Any, Sequence
 
 import jax
@@ -70,6 +87,34 @@ def _steps_per_round(n: int, batch_size: int, epochs: int) -> int:
     return epochs * per_epoch
 
 
+class _Cohort:
+    """One dispatched cohort: virtual bookkeeping happens at dispatch; the
+    host launch may be deferred (submesh exhaustion) and the results are
+    materialised lazily, at the cohort's first popped member event."""
+
+    __slots__ = ("picked", "datasets", "seeds", "prevs", "spec", "params",
+                 "dispatched_t", "end_t", "updates", "submesh", "stacked",
+                 "losses_dev", "launched", "resolved", "tl_event")
+
+    def __init__(self, *, picked, datasets, seeds, prevs, spec, params,
+                 dispatched_t, end_t, updates, tl_event):
+        self.picked = picked
+        self.datasets = datasets
+        self.seeds = seeds
+        self.prevs = prevs
+        self.spec = spec
+        self.params = params          # version-``v`` tree captured at dispatch
+        self.dispatched_t = dispatched_t
+        self.end_t = end_t            # last member completion (virtual)
+        self.updates = updates
+        self.tl_event = tl_event
+        self.submesh = None
+        self.stacked = None
+        self.losses_dev = None
+        self.launched = False
+        self.resolved = False
+
+
 def run_federated_async(
     adapter: TaskAdapter,
     clients_data: Sequence,
@@ -85,6 +130,9 @@ def run_federated_async(
     if run_cfg.track_stepsizes:
         raise ValueError("track_stepsizes requires runtime='sync' with "
                          "engine='sequential'")
+    if run_cfg.max_inflight_cohorts < 1:
+        raise ValueError("max_inflight_cohorts must be >= 1, got "
+                         f"{run_cfg.max_inflight_cohorts}")
     if not rounds:  # mirror the sync loop's graceful no-op
         key = init_key if init_key is not None else jax.random.key(run_cfg.seed)
         params = adapter.init(key)
@@ -139,8 +187,19 @@ def run_federated_async(
             )
         return _flops_cache[spec.group]
 
+    # -- host-parallel dispatch state ---------------------------------------
+    max_inflight = run_cfg.max_inflight_cohorts
+    pool = engine.cohort_pool(max_inflight)
+    occupancy = vtm.occupancy()
+    launch_queue: deque[_Cohort] = deque()
+    # Results land on per-submesh devices; pull them back to the default
+    # device at resolve whenever cohorts can live on >1 submesh, so the
+    # policy's merge never mixes committed devices.
+    xfer_back = pool is not None and pool.num_submeshes > 1
+    home = jax.devices()[0] if xfer_back else None
+
     # -- event-loop state ---------------------------------------------------
-    events: list[tuple[float, int, str, ClientUpdate]] = []   # min-heap
+    events: list[tuple] = []         # min-heap of (t, seq, kind, upd, cohort)
     seq = itertools.count()          # FIFO tiebreak for simultaneous events
     busy: set[int] = set()
     buffer: list[ClientUpdate] = []
@@ -148,13 +207,78 @@ def run_federated_async(
     version = 0                      # server aggregations committed so far
     vclock = 0.0
     pending = 0                      # in-flight updates that WILL deliver
+    inflight = 0                     # dispatched-but-unresolved cohorts
     last_cohort = 0
     total = len(rounds)
 
-    def dispatch(t: float) -> int:
-        """Sample a cohort at the current version, train it as one stacked
-        batch, and book each member's completion on the virtual timeline."""
-        nonlocal pending, last_cohort
+    def launch(cohort: _Cohort, submesh) -> None:
+        """Hand the cohort's stacked local-training program to jax (async
+        dispatch: returns before the results exist) and book its occupancy."""
+        cohort.submesh = submesh
+        cohort.stacked, cohort.losses_dev = engine.run_local_async(
+            cohort.params, cohort.spec, cohort.datasets, seeds=cohort.seeds,
+            epochs=run_cfg.local_epochs, batch_size=run_cfg.batch_size,
+            prev_params=cohort.prevs, submesh=submesh,
+        )
+        cohort.launched = True
+        idx = submesh.index if submesh is not None else -1
+        cohort.tl_event["submesh"] = idx
+        occupancy.book(idx, cohort.dispatched_t, cohort.end_t)
+
+    def resolve(cohort: _Cohort) -> None:
+        """Materialise the cohort's results into its member updates (blocks
+        on the in-flight arrays), free its submesh, and start the next
+        queued launch."""
+        nonlocal inflight
+        if cohort.resolved:
+            return
+        if not cohort.launched:  # queued past exhaustion: run unbound now
+            launch(cohort, None)
+        cohort.resolved = True
+        inflight -= 1
+        stacked = cohort.stacked
+        losses = [float(x) for x in np.asarray(cohort.losses_dev)]
+        if is_moon:
+            moon_stacked = (jax.device_put(stacked, home) if xfer_back
+                            else stacked)
+            for i, ci in enumerate(cohort.picked):
+                prev_store[int(ci)] = jax.tree.map(lambda x: x[i], moon_stacked)
+        spec = cohort.spec
+        sub = stacked if spec.is_full else masking.select(
+            stacked, partition, spec.group)
+        sub = aggregation.drop_local_stats(sub)
+        if xfer_back:
+            # Pull only the *transmitted* subtree back to the home device
+            # (the paper's Eq. 5 saving applied to the simulator's own
+            # traffic) so the merge never mixes committed devices.
+            sub = jax.device_put(sub, home)
+        subs = masking.unstack_tree(sub, len(cohort.picked))
+        for i, upd in enumerate(cohort.updates):
+            upd.subtree = subs[i]
+            upd.loss = losses[i]
+        # Drop the big references now, not at last-straggler pop: the params
+        # snapshot, the in-flight outputs, and (MOON) the superseded
+        # prev-model trees whose prev_store slots were just overwritten.
+        cohort.stacked = cohort.losses_dev = cohort.params = None
+        cohort.prevs = None
+        if cohort.submesh is not None:
+            pool.release(cohort.submesh)
+            while launch_queue and pool.free_count > 0:
+                nxt = launch_queue.popleft()
+                if not nxt.launched:
+                    launch(nxt, pool.acquire())
+
+    def dispatch(t: float, fragment_ok: bool) -> int:
+        """Sample a cohort at the current version, book each member's
+        completion on the virtual timeline, and launch its stacked training
+        program on a free submesh (queueing the launch when none is).
+
+        ``fragment_ok`` mirrors the merge-driven regime's behaviour: the
+        dispatch a merge (or stall) triggers takes whatever idle clients
+        exist, while capacity top-ups demand a full cohort's worth — filling
+        spare capacity with fragment cohorts would inflate total client work
+        (and retrace per cohort width) instead of overlapping it."""
+        nonlocal pending, last_cohort, inflight
         spec = sched.for_version(version)
         idle = [ci for ci in range(n_clients) if ci not in busy]
         if not idle:
@@ -165,6 +289,8 @@ def run_federated_async(
             # the virtual clock, model "the server waits for the next one".
             cand = idle
         n_pick = max(1, int(round(run_cfg.sample_fraction * n_clients)))
+        if len(cand) < n_pick and not fragment_ok:
+            return 0
         k = min(n_pick, len(cand))
         picked = [cand[i] for i in
                   np.asarray(rng.choice(len(cand), size=k, replace=False))]
@@ -173,22 +299,12 @@ def run_federated_async(
         seeds = [run_cfg.seed * 100_003 + spec.index * 1_009 + int(ci)
                  for ci in picked]
         prevs = [prev_store.get(int(ci)) for ci in picked] if is_moon else None
-        stacked, losses = engine.run_local(
-            params, spec, datasets, seeds=seeds,
-            epochs=run_cfg.local_epochs, batch_size=run_cfg.batch_size,
-            prev_params=prevs,
-        )
-        if is_moon:
-            for i, ci in enumerate(picked):
-                prev_store[int(ci)] = jax.tree.map(lambda x: x[i], stacked)
-
-        sub = stacked if spec.is_full else masking.select(
-            stacked, partition, spec.group)
-        sub = aggregation.drop_local_stats(sub)
-        subs = masking.unstack_tree(sub, len(picked))
         up_bytes = full_bytes if spec.is_full else int(group_bytes[spec.group])
         step_flops = _step_flops(spec)
 
+        # Per-member draw order (jitter, then drop) matches the pre-host-
+        # parallel runtime exactly, so seeded availability streams replay.
+        members, end_t = [], t
         for i, ci in enumerate(picked):
             flops = step_flops * _steps_per_round(
                 len(datasets[i]), run_cfg.batch_size, run_cfg.local_epochs)
@@ -196,23 +312,50 @@ def run_federated_async(
                 flops, up_bytes, speed=avail.speed(ci), jitter=avail.jitter())
             upd = ClientUpdate(
                 client_id=int(ci), version=version, group=spec.group,
-                subtree=subs[i], weight=float(len(datasets[i])),
-                loss=losses[i], dispatched_t=t, completed_t=t + dur,
+                subtree=None, weight=float(len(datasets[i])),
+                loss=float("nan"), dispatched_t=t, completed_t=t + dur,
                 comp_flops=flops,
             )
-            kind = "drop" if avail.drops() else "complete"
+            members.append((upd, "drop" if avail.drops() else "complete"))
+            end_t = max(end_t, t + dur)
+        timeline.record(t, "dispatch", version=version, group=spec.group,
+                        clients=[int(c) for c in picked], t_end=end_t)
+        cohort = _Cohort(picked=picked, datasets=datasets, seeds=seeds,
+                         prevs=prevs, spec=spec, params=params,
+                         dispatched_t=t, end_t=end_t,
+                         updates=[u for u, _ in members],
+                         tl_event=timeline.events[-1])
+        inflight += 1
+        for upd, kind in members:
             if kind == "complete":
                 pending += 1
-            heapq.heappush(events, (t + dur, next(seq), kind, upd))
-            busy.add(int(ci))
-        timeline.record(t, "dispatch", version=version, group=spec.group,
-                        clients=[int(c) for c in picked])
+            heapq.heappush(events,
+                           (upd.completed_t, next(seq), kind, upd, cohort))
+            busy.add(upd.client_id)
+        submesh = pool.acquire() if pool is not None else None
+        if pool is None or submesh is not None:
+            launch(cohort, submesh)
+        else:
+            launch_queue.append(cohort)
         last_cohort = k
         return k
 
+    def top_up(t: float, fragment_ok: bool = False) -> None:
+        """Dispatch until the in-flight target is met (or nothing is
+        dispatchable).  With ``max_inflight == 1`` this is exactly one
+        attempt — the merge-driven dispatch of the original async runtime.
+        Only the first attempt may take a fragment cohort (``fragment_ok``:
+        merge- and stall-triggered dispatches), so spare capacity is filled
+        with full cohorts or not at all."""
+        first = fragment_ok
+        while inflight < max_inflight:
+            if dispatch(t, first) == 0:
+                break
+            first = False
+
     def flush() -> None:
         """Commit one server aggregation: merge the buffer, eval on the sync
-        cadence, advance the schedule, dispatch the next cohort."""
+        cadence, advance the schedule, top the in-flight cohorts back up."""
         nonlocal params, version
         spec = rounds[version]
         params, info = policy.merge(params, buffer, version)
@@ -238,10 +381,18 @@ def run_federated_async(
                   f"max={entry['staleness_max']})")
         version += 1
         if version < total:
-            dispatch(vclock)
+            if max_inflight == 1:
+                # Merge-driven regime: every merge dispatches, full stop —
+                # even when an earlier cohort hasn't delivered its first
+                # event yet (a straggler-triggered merge right after another
+                # cohort's dispatch).  Gating that on the in-flight count
+                # would silently diverge from the original async runtime.
+                dispatch(vclock, True)
+            else:
+                top_up(vclock, fragment_ok=True)
 
     # -- main loop ----------------------------------------------------------
-    dispatch(0.0)
+    top_up(0.0, fragment_ok=True)
     while version < total:
         if not events:
             # No one in flight: either merge the stragglers' leftovers or
@@ -249,14 +400,15 @@ def run_federated_async(
             if buffer and policy.should_merge(len(buffer), 0, last_cohort):
                 flush()
                 continue
-            if dispatch(vclock) == 0:
+            if dispatch(vclock, True) == 0:
                 raise RuntimeError(
                     "async runtime stalled: no events in flight, nothing "
                     "dispatchable, and the buffer cannot merge")
             continue
-        t, _, kind, upd = heapq.heappop(events)
+        t, _, kind, upd, cohort = heapq.heappop(events)
         vclock = t
         busy.discard(upd.client_id)
+        resolve(cohort)
         if kind == "complete":
             pending -= 1
             buffer.append(upd)
@@ -270,6 +422,11 @@ def run_federated_async(
                             comp_flops=upd.comp_flops)
         if buffer and policy.should_merge(len(buffer), pending, last_cohort):
             flush()
+        elif max_inflight > 1 and version < total:
+            top_up(vclock)
+
+    if occupancy.spans:
+        timeline.record(vclock, "occupancy", **occupancy.summary())
 
     # Cost books over the committed server rounds — identical to the sync
     # ledger by construction (the schedule advanced exactly through `rounds`);

@@ -79,6 +79,12 @@ class FLRunConfig:
     staleness_exponent: float = 0.0  # poly staleness discount (1+s)^-a
     availability: AvailabilityConfig = AvailabilityConfig()
     vtime: VirtualTimeModel = VirtualTimeModel()
+    # Host-parallel dispatch: cohorts concurrently in flight.  1 = the
+    # merge-driven dispatch of the original async runtime (dispatch only at
+    # merges/stalls); >1 keeps that many cohorts training at once, each on
+    # its own disjoint device submesh when the engine has one to give
+    # (docs/ASYNC.md "Host-parallel dispatch").
+    max_inflight_cohorts: int = 1
 
 
 @dataclasses.dataclass

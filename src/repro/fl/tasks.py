@@ -12,8 +12,7 @@ uniform interface the FL engine consumes.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -92,8 +92,8 @@ def _attn_kernel(
 
     @pl.when(kb == nkb - 1)
     def _finalize():
-        l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, 0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
 def flash_attention_kernel(

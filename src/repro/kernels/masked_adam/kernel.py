@@ -82,7 +82,10 @@ def masked_adam_kernel(
     assert block_mask.shape == (nb,), (block_mask.shape, nb)
 
     kernel = functools.partial(_adam_kernel, b1=b1, b2=b2)
-    blk = lambda i: (i, 0)
+
+    def blk(i):
+        return (i, 0)
+
     return pl.pallas_call(
         kernel,
         grid=(nb,),

@@ -20,7 +20,6 @@ FLOPs / HBM bytes / collective bytes at full depth.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import numpy as np
 

@@ -29,7 +29,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -62,7 +61,7 @@ FSDP_SERVE_THRESHOLD = 60e9
 
 
 def _param_count(shapes) -> float:
-    return float(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+    return float(sum(np.prod(x.shape) for x in jax.tree.leaves(shapes)))
 
 
 def _active_param_count(cfg, shapes) -> float:

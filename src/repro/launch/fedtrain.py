@@ -33,11 +33,13 @@ simulator (``repro.fl.runtime``, docs/ASYNC.md): partial participation
 (``--participation``), buffered staleness-weighted aggregation
 (``--buffer-k``, ``--staleness-exp``) and a seeded client
 availability/latency model (``--speed-spread``, ``--latency-jitter``,
-``--dropout``), with time-to-accuracy booked on a virtual clock:
+``--dropout``), with time-to-accuracy booked on a virtual clock.
+``--max-inflight N`` keeps N cohorts training concurrently, each on its own
+disjoint device submesh (host-parallel dispatch, docs/ASYNC.md):
 
     python -m repro.launch.fedtrain --sim-clients 8 --rounds 12 \
         --engine vmap --runtime async --participation 0.5 --buffer-k 2 \
-        --staleness-exp 0.5 --speed-spread 3.0
+        --staleness-exp 0.5 --speed-spread 3.0 --max-inflight 2
 """
 
 from __future__ import annotations
@@ -53,7 +55,6 @@ if __name__ == "__main__":
     force_sim_devices()
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -144,6 +145,7 @@ def run_simulation(args) -> int:
                       buffer_k=args.buffer_k,
                       staleness_exponent=args.staleness_exp,
                       sample_fraction=args.participation,
+                      max_inflight_cohorts=args.max_inflight,
                       availability=AvailabilityConfig(
                           speed_spread=args.speed_spread,
                           latency_jitter=args.latency_jitter,
@@ -203,6 +205,11 @@ def main(argv=None) -> int:
     ap.add_argument("--staleness-exp", type=float, default=0.0,
                     help="polynomial staleness discount exponent a in "
                          "(1+staleness)^-a")
+    ap.add_argument("--max-inflight", type=int, default=1,
+                    help="cohorts concurrently in flight under --runtime "
+                         "async: 1 = merge-driven dispatch, >1 trains that "
+                         "many cohorts at once on disjoint device submeshes "
+                         "(docs/ASYNC.md)")
     ap.add_argument("--speed-spread", type=float, default=0.0,
                     help="per-client compute-speed heterogeneity (log-uniform "
                          "spread; 0 = homogeneous fleet)")

@@ -8,6 +8,9 @@ jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
 
 from __future__ import annotations
 
+import dataclasses
+import threading
+
 import jax
 import numpy as np
 
@@ -42,6 +45,105 @@ def make_client_mesh(devices: int = 0) -> jax.sharding.Mesh:
             "device_count=N before the first jax import"
         )
     return jax.sharding.Mesh(np.asarray(avail[:n]), ("clients",))
+
+
+@dataclasses.dataclass(frozen=True)
+class Submesh:
+    """One disjoint slice of the client mesh, as handed out by ``SubmeshPool``.
+
+    Carries both the raw device tuple and a ready 1-D ``"clients"`` mesh over
+    them, so an engine binding can either commit single-device inputs
+    (``devices[0]``; the vmap engine) or shard the stacked client axis
+    (``mesh``; the shard_map engine)."""
+
+    index: int
+    devices: tuple
+    mesh: jax.sharding.Mesh = dataclasses.field(compare=False, hash=False)
+
+    @property
+    def width(self) -> int:
+        return len(self.devices)
+
+
+class SubmeshPool:
+    """Disjoint-submesh allocator over ``make_client_mesh``.
+
+    The host-parallel async runtime (``repro.fl.runtime``) trains up to
+    ``max_inflight_cohorts`` cohorts concurrently; each one runs on its own
+    *submesh* — a contiguous slice of the client mesh's devices — so the
+    cohorts' compiled programs never contend for the same device.  The pool
+    hands submeshes out (``acquire``) and takes them back (``release``) with
+    three invariants:
+
+    * **no overlap** — submeshes partition a prefix of the device list; a
+      device belongs to at most one submesh (asserted at construction);
+    * **exclusive lease** — an acquired submesh cannot be acquired again
+      until released; releasing a free or foreign submesh raises;
+    * **bounded** — ``acquire`` on an exhausted pool returns ``None`` (the
+      caller queues; it never blocks or over-subscribes).
+
+    All submeshes share one width (``total // num_submeshes`` by default), so
+    equal-shape cohort programs can share a single trace across them (the
+    engines' AbstractMesh binding — docs/ENGINES.md).  Leftover devices that
+    don't fill a full-width submesh stay unused.  Thread-safe: ``acquire`` /
+    ``release`` may be called from dispatch callbacks.
+    """
+
+    def __init__(self, num_submeshes: int, devices: int = 0,
+                 width: int | None = None):
+        base = make_client_mesh(devices)
+        devs = tuple(base.devices.flat)
+        if num_submeshes < 1:
+            raise ValueError(f"num_submeshes must be >= 1, got {num_submeshes}")
+        num = min(num_submeshes, len(devs))
+        w = (len(devs) // num) if width is None else int(width)
+        if w < 1 or num * w > len(devs):
+            raise ValueError(
+                f"cannot cut {num} submeshes of width {w} from {len(devs)} "
+                "devices")
+        self.submeshes: tuple[Submesh, ...] = tuple(
+            Submesh(index=i, devices=devs[i * w: (i + 1) * w],
+                    mesh=jax.sharding.Mesh(
+                        np.asarray(devs[i * w: (i + 1) * w]), ("clients",)))
+            for i in range(num)
+        )
+        seen: set = set()
+        for sm in self.submeshes:
+            for d in sm.devices:
+                assert d not in seen, f"device {d} in two submeshes"
+                seen.add(d)
+        self._free: list[int] = list(range(num - 1, -1, -1))  # pop -> index 0 first
+        self._lock = threading.Lock()
+
+    @property
+    def num_submeshes(self) -> int:
+        return len(self.submeshes)
+
+    @property
+    def width(self) -> int:
+        return self.submeshes[0].width
+
+    @property
+    def free_count(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    def acquire(self) -> Submesh | None:
+        """Lowest-index free submesh, or ``None`` when exhausted."""
+        with self._lock:
+            if not self._free:
+                return None
+            return self.submeshes[self._free.pop()]
+
+    def release(self, sub: Submesh) -> None:
+        with self._lock:
+            if not (0 <= sub.index < len(self.submeshes)
+                    and self.submeshes[sub.index].devices == sub.devices):
+                raise ValueError(f"submesh {sub.index} is not from this pool")
+            if sub.index in self._free:
+                raise ValueError(f"submesh {sub.index} released twice")
+            self._free.append(sub.index)
+            self._free.sort(reverse=True)   # keep index-0-first acquire order
 
 
 def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

@@ -24,7 +24,6 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig
 from repro.core.partition import tree_paths, path_str
 from repro.launch.mesh import axis_size, dp_axes
 

@@ -13,7 +13,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Literal
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -56,8 +56,8 @@ def make_train_step(cfg: ModelConfig, adam: AdamConfig = AdamConfig(), *,
 
             def acc_body(carry, mb):
                 g_acc, l_acc = carry
-                l, g = jax.value_and_grad(loss_fn)(params, mb)
-                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+                lv, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + lv), None
 
             zeros = jax.tree.map(
                 lambda x: jnp.zeros(x.shape, jnp.float32), params

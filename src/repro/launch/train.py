@@ -19,7 +19,6 @@ import os
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.core.schedule import FedPartSchedule, FNUSchedule

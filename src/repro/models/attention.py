@@ -16,7 +16,7 @@ where supported (TPU; interpret mode in tests).
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,6 @@ from repro.models.layers import (
     embed,
     embedding_init,
     linear,
-    linear_init,
     mlp_apply,
     mlp_init,
     norm_apply,

@@ -26,7 +26,7 @@ The only per-layer collectives are that psum (+ FSDP weight all-gathers):
 from __future__ import annotations
 
 from contextlib import contextmanager
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +38,6 @@ from repro.core.compat import SHARD_MAP_NO_CHECK_KW as _SHARD_MAP_KW
 from repro.core.compat import shard_map as _shard_map
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import mlp_flops
 
 PyTree = Any
 

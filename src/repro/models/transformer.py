@@ -15,8 +15,7 @@ transformer) use the *unstacked* builders in ``repro.models.nlp_small`` and
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ import pytest
 from repro.core import aggregation, masking
 from repro.core.partition import build_partition
 from repro.models import resnet
-from tests.conftest import small_params
 
 
 def test_mean_of_identical_models_is_identity(params):

@@ -186,6 +186,86 @@ def test_unknown_runtime_and_policy_rejected(setup):
                       FLRunConfig(runtime="async", async_policy="fifo"))
 
 
+# -- host-parallel dispatch (max_inflight_cohorts) --------------------------
+
+
+def test_inflight_default_is_single_and_validated(setup):
+    """The knob defaults to the merge-driven regime, and nonsense rejects."""
+    assert FLRunConfig().max_inflight_cohorts == 1
+    adapter, clients, eval_set = setup
+    cfg = FLRunConfig(runtime="async", max_inflight_cohorts=0)
+    with pytest.raises(ValueError, match="max_inflight_cohorts"):
+        run_federated(adapter, clients, eval_set, FNUSchedule(1).rounds(), cfg)
+
+
+def test_merge_driven_dispatches_at_every_merge(setup):
+    """max_inflight=1 is the merge-driven regime: every merge dispatches the
+    next cohort, even when an earlier cohort hasn't delivered its first
+    update yet (a straggler-triggered merge right after a dispatch).  Gating
+    that dispatch on the in-flight count skips merges — this config then
+    dispatches only 3 cohorts for 5 rounds."""
+    rounds = FedPartSchedule(num_groups=6, warmup_rounds=1, rounds_per_layer=1,
+                             cycles=1).rounds()[:5]
+    a = _run(setup, "fedavg", "vmap", "async", rounds=rounds,
+             availability=HETERO, buffer_k=1, staleness_exponent=0.5,
+             sample_fraction=0.67)
+    assert len(a.timeline.of_kind("dispatch")) == len(rounds)
+
+
+def test_inflight2_degenerate_full_participation_matches_sync(setup):
+    """Full participation leaves no idle clients to feed a second cohort, so
+    inflight=2 degenerates to the merge-driven path — and therefore to the
+    synchronous loop (the dispatch semantics depend only on virtual events,
+    never on the host's device count)."""
+    sync = _run(setup, "fedavg", "vmap", "sync")
+    asy2 = _run(setup, "fedavg", "vmap", "async", max_inflight_cohorts=2)
+    _assert_equivalent(sync, asy2)
+
+
+def test_inflight2_heterogeneous_engine_equivalent_and_deterministic(setup):
+    """With idle capacity, inflight=2 genuinely overlaps cohorts in virtual
+    time; the event sequence is engine-independent (the engines only decide
+    *where* a cohort's compiled program runs) and seed-deterministic."""
+    rounds = FedPartSchedule(num_groups=6, warmup_rounds=1, rounds_per_layer=1,
+                             cycles=1).rounds()[:4]
+    kw = dict(rounds=rounds, availability=HETERO, buffer_k=1,
+              staleness_exponent=0.5, sample_fraction=0.34,
+              max_inflight_cohorts=2)
+    vm = _run(setup, "fedavg", "vmap", "async", **kw)
+    sq = _run(setup, "fedavg", "sequential", "async", **kw)
+    _assert_equivalent(vm, sq)
+    again = _run(setup, "fedavg", "vmap", "async", **kw)
+    assert [h["loss"] for h in vm.history] == [h["loss"] for h in again.history]
+    assert [h["t"] for h in vm.history] == [h["t"] for h in again.history]
+    assert len(vm.history) == len(rounds)
+
+
+def test_inflight2_books_overlap_and_occupancy(setup):
+    """The timeline must show the overlap inflight>1 exists to create:
+    cohort spans carry submesh bindings, the occupancy roll-up is recorded,
+    and concurrent spans actually occur."""
+    rounds = FedPartSchedule(num_groups=6, warmup_rounds=1, rounds_per_layer=1,
+                             cycles=1).rounds()[:4]
+    one = _run(setup, "fedavg", "vmap", "async", rounds=rounds,
+               availability=HETERO, buffer_k=1, sample_fraction=0.34)
+    two = _run(setup, "fedavg", "vmap", "async", rounds=rounds,
+               availability=HETERO, buffer_k=1, sample_fraction=0.34,
+               max_inflight_cohorts=2)
+    assert two.timeline.overlap_seconds() > one.timeline.overlap_seconds()
+    assert two.timeline.total_seconds < one.timeline.total_seconds
+    spans = two.timeline.cohort_spans()
+    assert spans and all(e >= s for _, s, e in spans)
+    occ = two.timeline.of_kind("occupancy")
+    assert len(occ) == 1
+    # every *launched* cohort is booked (a cohort still queued when the run
+    # ends is dispatched in the timeline but never launched)
+    assert 0 < occ[0]["cohorts"] <= len(spans)
+    assert occ[0]["max_concurrency"] >= 2
+    assert occ[0]["overlap_seconds"] > 0.0
+    # more cohorts were dispatched than the merge-driven run needed
+    assert len(spans) >= len(one.timeline.cohort_spans())
+
+
 # -- policy unit semantics --------------------------------------------------
 
 

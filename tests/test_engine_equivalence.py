@@ -210,11 +210,11 @@ def make_setup(client_sizes):
              for i in range(len(client_sizes))]
     return resnet_task("resnet4", num_classes=4), build_clients(X, y, parts), eval_set
 
-def run(setup, algo, engine, rounds, runtime="sync"):
+def run(setup, algo, engine, rounds, runtime="sync", inflight=1):
     adapter, clients, eval_set = setup
     cfg = FLRunConfig(local_epochs=1, batch_size=16, lr=2e-3, adam_eps=1e-3,
                       algo=AlgoConfig(name=algo), engine=engine, sim_devices=2,
-                      runtime=runtime)
+                      runtime=runtime, max_inflight_cohorts=inflight)
     return run_federated(adapter, clients, eval_set, rounds, cfg)
 
 def diffs(a, b):
@@ -239,9 +239,18 @@ for algo in ("fedavg", "fedprox", "moon"):
         results["fedavg_vmap_vs_shard"] = diffs(
             run(ragged, algo, "vmap", MIXED), shard)
         # degenerate async runtime on a real 2-device mesh: the event-driven
-        # path must reproduce the sync barrier through the sharded backend
+        # path (explicitly pinned at max_inflight_cohorts=1, the merge-driven
+        # regime) must reproduce the sync barrier through the sharded backend
         results["fedavg_async_shard"] = diffs(
-            run(ragged, algo, "shard_map", MIXED, runtime="async"), shard)
+            run(ragged, algo, "shard_map", MIXED, runtime="async",
+                inflight=1), shard)
+        # host-parallel dispatch on the same mesh: full participation leaves
+        # no idle clients for a second cohort, so inflight=2 must collapse to
+        # the same barrier arithmetic -- now with the cohort programs bound
+        # to width-1 submeshes of the 2-device mesh
+        results["fedavg_async_shard_inflight2"] = diffs(
+            run(ragged, algo, "shard_map", MIXED, runtime="async",
+                inflight=2), shard)
 buckets = make_setup((12, 36, 20))        # two buckets, each padded to 2
 results["fedavg_buckets"] = diffs(
     run(buckets, "fedavg", "sequential", MIXED[1:]),

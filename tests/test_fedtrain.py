@@ -2,7 +2,6 @@
 matches the schedule."""
 
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import get_config

@@ -13,7 +13,7 @@ import pytest
 from repro.core.schedule import FedPartSchedule, FNUSchedule
 from repro.data import (VisionDatasetSpec, balanced_eval_set, build_clients,
                         dirichlet_partition, iid_partition, make_vision_dataset)
-from repro.fl import AlgoConfig, FLRunConfig, nlp_task, resnet_task, run_federated
+from repro.fl import AlgoConfig, FLRunConfig, resnet_task, run_federated
 
 
 @pytest.fixture(scope="module")

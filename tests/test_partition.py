@@ -1,5 +1,4 @@
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -82,7 +81,7 @@ def test_group_bytes_accounting(params):
     p = build_partition(params)
     gb = group_param_bytes(params, p)
     total = sum(
-        np.prod(np.shape(l)) * np.dtype(l.dtype).itemsize
-        for l in jax.tree.leaves(params)
+        np.prod(np.shape(leaf)) * np.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves(params)
     )
     assert gb.sum() == total

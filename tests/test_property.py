@@ -9,7 +9,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis (requir
 from hypothesis import given, settings, strategies as st
 
 from repro.core import aggregation, masking
-from repro.core.partition import build_partition, group_param_counts, total_param_count
+from repro.core.partition import build_partition, total_param_count
 from repro.core.schedule import FedPartSchedule
 from repro.data.partitioner import dirichlet_partition, iid_partition
 from tests.conftest import small_params

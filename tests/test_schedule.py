@@ -1,8 +1,5 @@
-import numpy as np
-import pytest
 
-from repro.core.schedule import (FULL_NETWORK, FedPartSchedule, FNUSchedule,
-                                 matched_fnu)
+from repro.core.schedule import FedPartSchedule, matched_fnu
 
 
 def test_round_counts():
@@ -77,9 +74,10 @@ def test_random_order_deterministic_and_per_cycle():
     identical round lists, and each cycle draws a *fresh* permutation from the
     one generator (so cycles differ from each other with overwhelming
     probability at 8! arrangements)."""
-    mk = lambda: FedPartSchedule(num_groups=8, warmup_rounds=1,
-                                 rounds_per_layer=1, cycles=3,
-                                 bridge_rounds=2, order="random", seed=7)
+    def mk():
+        return FedPartSchedule(num_groups=8, warmup_rounds=1,
+                               rounds_per_layer=1, cycles=3,
+                               bridge_rounds=2, order="random", seed=7)
     a, b = mk().rounds(), mk().rounds()
     assert [(r.phase, r.group) for r in a] == [(r.phase, r.group) for r in b]
     per_cycle = [[r.group for r in a if r.phase == "partial" and r.cycle == c]

@@ -1,7 +1,6 @@
 """Sharding rules: named tensor-parallel specs, greedy fallback, divisibility
 edge cases (whisper's 51865 vocab, zamba2's 112 heads)."""
 
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.sharding import _greedy_spec, param_spec

@@ -2,7 +2,6 @@
 exactly one layer group; optimizer state is subtree-sized."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
