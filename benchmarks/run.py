@@ -27,6 +27,7 @@ BENCHES = [
     "fig1_stepsizes",
     "engine_bench",
     "async_bench",
+    "hetero_bench",
     "kernels_bench",
     "roofline",
 ]

@@ -62,6 +62,15 @@ def main(argv=None):
                     help="accuracy threshold for time-to-accuracy")
     ap.add_argument("--max-inflight", type=int, default=2,
                     help="in-flight cohorts for the host-parallel variant")
+    ap.add_argument("--plan", choices=["homogeneous", "nested", "random"],
+                    default="homogeneous",
+                    help="per-client layer plan for every variant "
+                         "(docs/HETEROGENEITY.md); pair with "
+                         "--capacity-tiers to give the straggling fleet "
+                         "capacity-matched group subsets")
+    ap.add_argument("--capacity-tiers", type=float, nargs="*", default=[],
+                    help="tier capacity fractions in (0, 1], clients "
+                         "round-robin (e.g. 0.5 1.0)")
     args = ap.parse_args(argv)
 
     adapter, data, eval_set = setup(args.clients)
@@ -71,7 +80,8 @@ def main(argv=None):
     fleet = AvailabilityConfig(speed_spread=args.speed_spread,
                                latency_jitter=0.2, seed=7)
     base = dict(local_epochs=1, batch_size=16, lr=3e-3, engine="vmap",
-                sample_fraction=0.5, availability=fleet)
+                sample_fraction=0.5, availability=fleet, plan=args.plan,
+                capacity_tiers=tuple(args.capacity_tiers))
 
     variants = [
         ("sync barrier", FLRunConfig(**base, runtime="async",

@@ -39,6 +39,14 @@ def main(argv=None):
                     help="client-simulation engine (see module docstring)")
     ap.add_argument("--sim-devices", type=int, default=0,
                     help="shard_map mesh size (0 = all visible devices)")
+    ap.add_argument("--plan", choices=["homogeneous", "nested", "random"],
+                    default="homogeneous",
+                    help="per-client layer plan (docs/HETEROGENEITY.md): "
+                         "capacity-tiered clients train different group "
+                         "subsets in the same round")
+    ap.add_argument("--capacity-tiers", type=float, nargs="*", default=[],
+                    help="tier capacity fractions in (0, 1], clients "
+                         "round-robin (e.g. 0.3 0.6 1.0)")
     args = ap.parse_args(argv)
 
     spec = VisionDatasetSpec(num_classes=8, image_size=16, noise=1.0)
@@ -51,9 +59,13 @@ def main(argv=None):
     schedule = FedPartSchedule(num_groups=10, warmup_rounds=2,
                                rounds_per_layer=1, cycles=1)
     run_cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=1e-3,
-                          engine=args.engine, sim_devices=args.sim_devices)
+                          engine=args.engine, sim_devices=args.sim_devices,
+                          plan=args.plan,
+                          capacity_tiers=tuple(args.capacity_tiers))
 
-    print(f"=== FedPart (partial network updates) [engine={args.engine}] ===")
+    print(f"=== FedPart (partial network updates) [engine={args.engine}"
+          + (f", plan={args.plan}" if args.plan != "homogeneous" else "")
+          + "] ===")
     fp = run_federated(adapter, clients, eval_set, schedule.rounds(), run_cfg,
                        verbose=True)
     print("\n=== FedAvg-FNU (full network updates, matched rounds) ===")

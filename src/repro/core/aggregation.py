@@ -13,6 +13,13 @@ Two layouts are supported:
 * a single *stacked* pytree with a leading client axis
   (``*_stacked`` variants) — the batched vmap engine's on-device path, one
   weighted reduction per leaf instead of a Python accumulation loop.
+
+Heterogeneous cohorts (per-client layer plans, docs/HETEROGENEITY.md) use the
+``aggregate_plan*`` pair: each layer group is averaged over *only the clients
+whose plan bit for it is set*, with its own weight denominator
+(``plan_group_denominators``); a group nobody trained keeps the frozen global
+verbatim.  A homogeneous plan reproduces the single-group paths bit-for-bit
+(tests/test_plans.py).
 """
 
 from __future__ import annotations
@@ -21,6 +28,7 @@ from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import masking
 from repro.core.partition import Partition
@@ -167,6 +175,102 @@ def aggregate_partial_stacked(
     sub = masking.select(stacked_params, partition, group)
     averaged = drop_local_stats(tree_mean_stacked(sub, weights))
     return masking.tree_update(global_params, averaged)
+
+
+# ---------------------------------------------------------------------------
+# Per-client layer plans (heterogeneous cohorts — docs/HETEROGENEITY.md)
+# ---------------------------------------------------------------------------
+
+def plan_group_denominators(
+    plan: Any, weights: Sequence[float] | Any
+) -> np.ndarray:
+    """Per-group aggregation denominators under a per-client layer plan.
+
+    ``plan`` is the ``(clients, M)`` bool bitmask (``PlanAssigner.assign``),
+    ``weights`` the raw per-client sample weights.  Group ``g``'s denominator
+    is the sum of the weights of exactly the clients that trained ``g`` —
+    the quantity every plan-aware aggregation path divides by.  A group
+    nobody trained has denominator 0 (and keeps the frozen global verbatim).
+    """
+    p = np.asarray(plan, dtype=np.float32)
+    w = np.asarray(weights, dtype=np.float32)
+    if p.ndim != 2 or w.shape != (p.shape[0],):
+        raise ValueError(f"plan {p.shape} / weights {w.shape} mismatch")
+    return w @ p
+
+
+def aggregate_plan(
+    global_params: PyTree,
+    client_subtrees: Sequence[PyTree],
+    partition: Partition,
+    plan: Any,
+    weights: Sequence[float],
+) -> PyTree:
+    """Per-group participant-weighted aggregation (host list-of-pytrees path).
+
+    ``client_subtrees[i]`` must contain (at least) client ``i``'s trained
+    groups per ``plan``.  Each layer group is averaged over **only the
+    clients whose plan row sets its bit**, with its own weight denominator;
+    a group nobody trained keeps the frozen global verbatim.  BN running
+    moments never travel, exactly as in the homogeneous paths.
+    """
+    p = np.asarray(plan, dtype=bool)
+    if len(client_subtrees) != p.shape[0]:
+        raise ValueError(
+            f"{len(client_subtrees)} client trees for plan of {p.shape[0]}")
+    new_params = global_params
+    for g in range(p.shape[1]):
+        members = np.flatnonzero(p[:, g])
+        if members.size == 0:
+            continue                      # zero-trainer group: frozen global
+        subs = [masking.select(client_subtrees[i], partition, g)
+                for i in members]
+        averaged = drop_local_stats(
+            tree_mean(subs, [float(weights[i]) for i in members]))
+        new_params = masking.tree_update(new_params, averaged)
+    return new_params
+
+
+def aggregate_plan_stacked(
+    global_params: PyTree,
+    stacked_params: PyTree,
+    partition: Partition,
+    plan: Any,
+    weights: jax.Array | Sequence[float],
+) -> PyTree:
+    """``aggregate_plan`` over stacked full client params, on device.
+
+    One weighted reduction per leaf: leaf in group ``g`` is averaged with
+    the plan-masked weights ``w * plan[:, g]`` normalised by that group's
+    own denominator.  ``jnp.where`` on the (host-static-shaped, traced-value)
+    denominator keeps a zero-trainer group's leaves *bit-identical* to the
+    frozen global.  With a homogeneous plan (every row == the round mask)
+    the arithmetic collapses to ``aggregate_{full,partial}_stacked``'s
+    normalise-then-tensordot, which is what makes the legacy paths a special
+    case rather than a parallel implementation (tests/test_plans.py pins
+    both properties).
+    """
+    num = jax.tree.leaves(stacked_params)[0].shape[0]
+    plan_f = jnp.asarray(plan, dtype=jnp.float32)
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    if plan_f.shape != (num, partition.num_groups) or w.shape != (num,):
+        raise ValueError(
+            f"plan {plan_f.shape} / weights {w.shape} do not match "
+            f"{num} stacked clients x {partition.num_groups} groups")
+    eff = w[:, None] * plan_f                       # (clients, M)
+    denom = jnp.sum(eff, axis=0)                    # (M,) per-group weight sums
+
+    def _leaf(path, g_leaf, s_leaf):
+        p = "/".join(masking._entry_str(e) for e in path)
+        if is_local_stat(p):
+            return g_leaf
+        g = partition.group_of(p)
+        trained = denom[g] > 0
+        wg = eff[:, g] / jnp.where(trained, denom[g], 1.0)
+        avg = jnp.tensordot(wg, s_leaf.astype(jnp.float32), axes=1)
+        return jnp.where(trained, avg.astype(g_leaf.dtype), g_leaf)
+
+    return jax.tree_util.tree_map_with_path(_leaf, global_params, stacked_params)
 
 
 def broadcast(global_params: PyTree, num_clients: int) -> list[PyTree]:

@@ -122,6 +122,30 @@ def comp_cost(
     )
 
 
+def plan_step_flops(
+    partition: Partition,
+    groups: Sequence[int],
+    group_fwd_flops: Sequence[float] | None = None,
+    bwd_fwd_ratio: float = 2.0,
+) -> float:
+    """Per-step FLOPs for a client training an arbitrary *set* of layer
+    groups (per-client layer plans, docs/HETEROGENEITY.md), truncated
+    bookkeeping: full forward, activation-grad chain from the output down to
+    the shallowest trained group, weight grads for exactly the trained
+    groups.  A set covering every group is the FNU round cost; a singleton
+    ``{g}`` equals ``comp_cost``'s truncated partial round for ``g``."""
+    fwd = _norm_group_fwd(partition, group_fwd_flops)
+    sel = sorted({int(g) for g in groups})
+    if not sel:
+        raise ValueError("a plan step needs at least one trained group")
+    full_fwd = float(fwd.sum())
+    if len(sel) == partition.num_groups:
+        return full_fwd + bwd_fwd_ratio * full_fwd
+    act_chain = float(fwd[sel[0]:].sum())
+    weight_grads = float(fwd[sel].sum())
+    return full_fwd + act_chain + weight_grads
+
+
 # ---------------------------------------------------------------------------
 # Virtual time (async runtime)
 # ---------------------------------------------------------------------------

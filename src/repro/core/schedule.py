@@ -174,6 +174,135 @@ class ScheduleIndex:
         return iter(self.specs)
 
 
+PLAN_KINDS = ("homogeneous", "nested", "random")
+
+
+def round_base_mask(spec: RoundSpec, num_groups: int) -> np.ndarray:
+    """The homogeneous round mask for ``spec``: all groups on FNU rounds,
+    one-hot ``spec.group`` otherwise.  The single source of truth both for
+    ``PlanAssigner.base_mask`` and for the engines' homogeneous-plan
+    collapse check (``fl.batched.resolve_plan``)."""
+    mask = np.zeros(num_groups, dtype=bool)
+    if spec.is_full:
+        mask[:] = True
+    else:
+        mask[spec.group] = True
+    return mask
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanAssigner:
+    """Capacity tiers -> per-client *layer plans* (heterogeneity axis).
+
+    The base ``FedPartSchedule`` names one group per round for the whole
+    cohort.  Real fleets are capacity-heterogeneous (FedPLT, arXiv:2605.02337):
+    a phone-class client cannot train the deepest blocks a workstation can.
+    ``PlanAssigner`` lifts the round's single ``RoundSpec`` entry into a
+    **per-client group bitmask** — ``assign`` returns a ``(clients, M)`` bool
+    array saying which layer groups each client trains this round.  Clients
+    are mapped onto ``capacity_tiers`` (fractions of the model a tier can
+    hold, shallow-first) round-robin by client id, so tier membership is
+    stable across rounds and engines.
+
+    Three plan kinds:
+
+    * ``"homogeneous"`` — every client trains exactly the scheduled group
+      (all groups on FNU rounds): today's behaviour, tiers ignored.
+      ``assign`` returns ``None`` so every consumer can keep its legacy
+      (bit-identical) path.
+    * ``"nested"`` — FedPLT-style *prefixes*: a tier with capacity ``c``
+      owns the shallowest ``ceil(c * M)`` groups.  FNU rounds train the
+      whole prefix; a partial round scheduled for group ``g`` trains
+      ``min(g, prefix - 1)`` — capable clients follow the schedule, weak
+      clients keep refining the deepest group they can hold, and deep groups
+      are averaged over only the clients that actually trained them.
+    * ``"random"`` — seeded per-(round, client) subsets: each client draws
+      ``ceil(c * M)`` distinct groups from its own deterministic stream
+      (``seed``, round index, client id), modelling fleets where per-round
+      trainability is arbitrary (memory pressure, partial checkpoints).
+
+    Every client always trains at least one group, so dispatches are never
+    vacuous; a *group* nobody picked is still well-defined at aggregation
+    time (the global stays frozen verbatim — see ``core.aggregation``).
+
+    >>> pa = PlanAssigner(num_groups=4, kind="nested",
+    ...                   capacity_tiers=(0.5, 1.0))
+    >>> pa.prefix_len(0), pa.prefix_len(1)    # tier 0 -> 2 groups, tier 1 -> 4
+    (2, 4)
+    >>> plan = pa.assign(RoundSpec(0, "partial", 0, 3), [0, 1])
+    >>> plan.astype(int).tolist()             # client 0 clamps 3 -> 1
+    [[0, 1, 0, 0], [0, 0, 0, 1]]
+    >>> pa.assign(RoundSpec(0, "warmup", -1, FULL_NETWORK),
+    ...           [0, 1]).astype(int).tolist()
+    [[1, 1, 0, 0], [1, 1, 1, 1]]
+    >>> PlanAssigner(num_groups=4).assign(
+    ...     RoundSpec(0, "partial", 0, 2), [0, 1]) is None   # homogeneous
+    True
+    """
+
+    num_groups: int
+    kind: str = "homogeneous"
+    capacity_tiers: tuple[float, ...] = (1.0,)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in PLAN_KINDS:
+            raise ValueError(
+                f"unknown plan kind {self.kind!r}; expected one of {PLAN_KINDS}")
+        if self.num_groups < 1:
+            raise ValueError(f"num_groups must be >= 1, got {self.num_groups}")
+        tiers = tuple(float(c) for c in self.capacity_tiers) or (1.0,)
+        if any(not (0.0 < c <= 1.0) for c in tiers):
+            raise ValueError(
+                f"capacity tiers must lie in (0, 1], got {tiers}")
+        object.__setattr__(self, "capacity_tiers", tiers)
+
+    # -- tier bookkeeping ---------------------------------------------------
+
+    def tier_of(self, client_id: int) -> int:
+        """Stable round-robin tier assignment by client id."""
+        return int(client_id) % len(self.capacity_tiers)
+
+    def capacity_of(self, client_id: int) -> float:
+        return self.capacity_tiers[self.tier_of(client_id)]
+
+    def prefix_len(self, client_id: int) -> int:
+        """Groups a client can hold: ``ceil(capacity * M)``, at least 1."""
+        c = self.capacity_of(client_id)
+        return max(1, min(self.num_groups, int(np.ceil(c * self.num_groups))))
+
+    # -- plan construction --------------------------------------------------
+
+    def base_mask(self, spec: RoundSpec) -> np.ndarray:
+        """The homogeneous round mask: all groups on FNU, one-hot otherwise."""
+        return round_base_mask(spec, self.num_groups)
+
+    def assign(self, spec: RoundSpec,
+               client_ids: Sequence[int]) -> np.ndarray | None:
+        """Per-client plan for ``spec``: ``(len(client_ids), num_groups)``
+        bool bitmask, or ``None`` for the homogeneous kind (consumers keep
+        their legacy single-group path, bit-for-bit)."""
+        if self.kind == "homogeneous":
+            return None
+        plan = np.zeros((len(client_ids), self.num_groups), dtype=bool)
+        if self.kind == "nested":
+            for i, ci in enumerate(client_ids):
+                pre = self.prefix_len(ci)
+                if spec.is_full:
+                    plan[i, :pre] = True
+                else:
+                    plan[i, min(spec.group, pre - 1)] = True
+            return plan
+        # "random": one deterministic stream per (seed, round, client) so a
+        # client's draw is independent of cohort composition and engine.
+        for i, ci in enumerate(client_ids):
+            k = self.prefix_len(ci)
+            rng = np.random.default_rng(
+                (self.seed, int(spec.index), int(ci)))
+            plan[i, rng.choice(self.num_groups, size=k, replace=False)] = True
+        return plan
+
+
 @dataclasses.dataclass(frozen=True)
 class FNUSchedule:
     """Baseline: every round trains the full network (FedAvg et al.)."""

@@ -30,6 +30,18 @@ the engines match the sequential oracle leaf-for-leaf (see
 All engines expose ``trace_count`` (XLA traces built so far) — the quantity
 ``benchmarks/engine_bench.py`` reports next to wall-clock.
 
+Heterogeneous cohorts (per-client layer plans, ``core.schedule.PlanAssigner``,
+docs/HETEROGENEITY.md): every entry point takes ``plan=`` — a ``(clients, M)``
+group bitmask.  ``resolve_plan`` collapses homogeneous plans to ``None`` so
+the legacy single-group programs (and their numerics) are kept structurally;
+a genuinely mixed cohort runs the *masked plan program* instead: the bitmask
+becomes a stacked per-client batch input to one compiled FNU-shaped step
+(Eq. 1's literal masked form — see ``_one_client_plan_fn``), the sequential
+oracle trains each client's exact pruned group set, and aggregation averages
+each layer group over only the clients that trained it
+(``core.aggregation.aggregate_plan*``; the shard_map engine psums per-group
+participant-weighted sums on-mesh).
+
 Beyond ``run_round`` (train + aggregate, the synchronous contract), every
 engine also exposes ``run_local_async`` — cohort training *without*
 aggregation, returning the still-in-flight stacked locally-trained params
@@ -81,7 +93,7 @@ from repro.core import aggregation, masking
 from repro.core.compat import SHARD_MAP_NO_CHECK_KW as _SHARD_MAP_KW
 from repro.core.compat import shard_map as _shard_map
 from repro.core.partition import Partition
-from repro.core.schedule import FULL_NETWORK, RoundSpec
+from repro.core.schedule import FULL_NETWORK, RoundSpec, round_base_mask
 from repro.data.pipeline import ClientDataset, stack_client_batches
 from repro.fl.algorithms import AlgoConfig
 from repro.fl.client import LocalTrainer
@@ -92,6 +104,29 @@ PyTree = Any
 ENGINES = ("sequential", "vmap", "shard_map")
 
 CLIENT_AXIS = "clients"  # mesh axis name the shard_map engine reduces over
+
+
+def resolve_plan(plan, spec: RoundSpec, num_groups: int):
+    """Normalise a per-client layer plan (``core.schedule.PlanAssigner``).
+
+    Returns ``None`` — keep the legacy single-group programs — when no plan
+    was given *or* every row equals the round's homogeneous mask (all groups
+    on FNU rounds, one-hot ``spec.group`` otherwise); the
+    ``plan="homogeneous"`` == pre-plan behaviour guarantee is structural
+    (same compiled programs, same arithmetic), not a numeric coincidence.
+    Otherwise returns the validated ``(clients, M)`` bool array for the
+    engines' plan paths (docs/HETEROGENEITY.md)."""
+    if plan is None:
+        return None
+    p = np.asarray(plan, dtype=bool)
+    if p.ndim != 2 or p.shape[1] != num_groups:
+        raise ValueError(
+            f"plan shape {p.shape} does not match {num_groups} layer groups")
+    if not p.any(axis=1).all():
+        raise ValueError("every client's plan must train at least one group")
+    if (p == round_base_mask(spec, num_groups)[None, :]).all():
+        return None
+    return p
 
 
 @dataclasses.dataclass
@@ -119,10 +154,14 @@ class SequentialEngine:
         batch_size: int,
         prev_params: Sequence[PyTree | None] | None = None,
         tracker=None,
+        plan=None,
     ) -> tuple[PyTree, list[float], list[PyTree] | None]:
+        plan = resolve_plan(plan, spec, self.partition.num_groups)
         keep_locals = self.algo.name == "moon"
         uploads, losses, new_locals = [], [], ([] if keep_locals else None)
         for i, (ds, seed) in enumerate(zip(datasets, seeds)):
+            groups_i = (tuple(int(g) for g in np.flatnonzero(plan[i]))
+                        if plan is not None else None)
             local, loss = self.trainer.run_local_round(
                 params,
                 spec.group,
@@ -132,15 +171,21 @@ class SequentialEngine:
                 seed=seed,
                 prev_params=prev_params[i] if prev_params is not None else None,
                 step_tracker=tracker if i == 0 else None,
+                groups=groups_i,
             )
             losses.append(loss)
             if keep_locals:
                 new_locals.append(local)
-            if spec.is_full:
+            if plan is not None:
+                uploads.append(masking.select(local, self.partition, groups_i))
+            elif spec.is_full:
                 uploads.append(local)
             else:
                 uploads.append(masking.select(local, self.partition, spec.group))
-        if spec.is_full:
+        if plan is not None:
+            new_params = aggregation.aggregate_plan(
+                params, uploads, self.partition, plan, weights)
+        elif spec.is_full:
             new_params = aggregation.aggregate_full(params, uploads, weights)
         else:
             new_params = aggregation.aggregate_partial(params, uploads, weights)
@@ -156,16 +201,20 @@ class SequentialEngine:
         epochs: int,
         batch_size: int,
         prev_params: Sequence[PyTree | None] | None = None,
+        plan=None,
     ) -> tuple[PyTree, list[float]]:
         """Cohort training without aggregation (async runtime backend): the
         per-client oracle loop, locals stacked into the common client-axis
         layout the policies consume."""
+        plan = resolve_plan(plan, spec, self.partition.num_groups)
         locals_, losses = [], []
         for i, (ds, seed) in enumerate(zip(datasets, seeds)):
             local, loss = self.trainer.run_local_round(
                 params, spec.group, ds,
                 epochs=epochs, batch_size=batch_size, seed=seed,
                 prev_params=prev_params[i] if prev_params is not None else None,
+                groups=(tuple(int(g) for g in np.flatnonzero(plan[i]))
+                        if plan is not None else None),
             )
             locals_.append(local)
             losses.append(loss)
@@ -187,6 +236,7 @@ class SequentialEngine:
         batch_size: int,
         prev_params: Sequence[PyTree | None] | None = None,
         submesh=None,
+        plan=None,
     ) -> tuple[PyTree, np.ndarray]:
         """Common cohort contract for the async runtime; the oracle has no
         deferred execution, so this is ``run_local`` with array losses."""
@@ -194,7 +244,7 @@ class SequentialEngine:
             raise ValueError("the sequential engine has no submesh binding")
         stacked, losses = self.run_local(
             params, spec, datasets, seeds=seeds, epochs=epochs,
-            batch_size=batch_size, prev_params=prev_params)
+            batch_size=batch_size, prev_params=prev_params, plan=plan)
         return stacked, np.asarray(losses, dtype=np.float32)
 
 
@@ -250,10 +300,40 @@ class _BatchedEngineBase:
 
     # -- shared local-round core -------------------------------------------
 
+    @staticmethod
+    def _scan_local_steps(step_fn, global_params, opt0, inputs, labels,
+                          step_valid, prev, leaf_bits=None):
+        """The shared pad-and-mask scan over (possibly padded) steps: invalid
+        steps compute but their parameter/optimizer updates and losses are
+        discarded.  ``leaf_bits`` (per-client layer plans) additionally masks
+        each leaf's parameter update by its group's plan bit, every step —
+        frozen leaves stay re-pinned to the broadcast global."""
+
+        def body(carry, xs):
+            params, opt = carry
+            x, y, valid = xs
+            new_p, new_o, loss = step_fn(params, opt, x, y, global_params, prev)
+            keep = valid > 0
+            if leaf_bits is None:
+                params = jax.tree.map(
+                    lambda a, b: jnp.where(keep, a, b), new_p, params)
+            else:
+                params = jax.tree.map(
+                    lambda a, b, bit: jnp.where(
+                        jnp.logical_and(keep, bit > 0), a, b),
+                    new_p, params, leaf_bits)
+            opt = jax.tree.map(lambda a, b: jnp.where(keep, a, b), new_o, opt)
+            return (params, opt), jnp.where(keep, loss.astype(jnp.float32), 0.0)
+
+        (params, _), step_losses = jax.lax.scan(
+            body, (global_params, opt0), (inputs, labels, step_valid)
+        )
+        mean_loss = jnp.sum(step_losses) / jnp.maximum(jnp.sum(step_valid), 1.0)
+        return params, mean_loss
+
     def _one_client_fn(self, group: int) -> Callable:
-        """Single-client local round: ``lax.scan`` over (possibly padded)
-        steps; invalid steps compute but their parameter/optimizer updates and
-        losses are discarded (the pad-and-mask contract)."""
+        """Single-client local round (``_scan_local_steps`` over the pruned
+        full/partial step for ``group``)."""
         step_fn = (
             self.trainer.make_full_step()
             if group < 0
@@ -266,21 +346,41 @@ class _BatchedEngineBase:
                 opt0 = adam_init(global_params)
             else:
                 opt0 = adam_init(masking.select(global_params, partition, group))
+            return self._scan_local_steps(
+                step_fn, global_params, opt0, inputs, labels, step_valid, prev)
 
-            def body(carry, xs):
-                params, opt = carry
-                x, y, valid = xs
-                new_p, new_o, loss = step_fn(params, opt, x, y, global_params, prev)
-                keep = valid > 0
-                params = jax.tree.map(lambda a, b: jnp.where(keep, a, b), new_p, params)
-                opt = jax.tree.map(lambda a, b: jnp.where(keep, a, b), new_o, opt)
-                return (params, opt), jnp.where(keep, loss.astype(jnp.float32), 0.0)
+        return one_client
 
-            (params, _), step_losses = jax.lax.scan(
-                body, (global_params, opt0), (inputs, labels, step_valid)
-            )
-            mean_loss = jnp.sum(step_losses) / jnp.maximum(jnp.sum(step_valid), 1.0)
-            return params, mean_loss
+    def _one_client_plan_fn(self) -> Callable:
+        """Single-client local round under a per-client layer plan.
+
+        The FNU step runs every group's arithmetic and the client's ``(M,)``
+        group bitmask masks the parameter update per leaf, each step — the
+        paper's Eq. 1 literal masked form.  That is what lets ONE compiled
+        program serve every plan row in a stacked cohort: the pruned-subtree
+        form the homogeneous paths run would need one trace per distinct
+        group set, defeating vmap/shard_map.  Frozen leaves are re-pinned to
+        the broadcast global after every step, so trainable leaves see
+        exactly the frozen context the pruned form sees (equivalence to the
+        sequential oracle pinned in tests/test_engine_equivalence.py).
+        Client-local statistics (BN running moments) always update,
+        mirroring the pruned path's stats splice."""
+        step_fn = self.trainer.make_full_step()
+        partition = self.partition
+
+        def one_client(global_params, inputs, labels, step_valid, prev, gmask):
+            opt0 = adam_init(global_params)
+
+            def _bit(path, leaf):
+                p = "/".join(masking._entry_str(e) for e in path)
+                if aggregation.is_local_stat(p):
+                    return jnp.float32(1.0)      # stats ride along unmasked
+                return gmask[partition.group_of(p)]
+
+            leaf_bits = jax.tree_util.tree_map_with_path(_bit, global_params)
+            return self._scan_local_steps(
+                step_fn, global_params, opt0, inputs, labels, step_valid,
+                prev, leaf_bits=leaf_bits)
 
         return one_client
 
@@ -288,6 +388,15 @@ class _BatchedEngineBase:
         raise NotImplementedError
 
     # -- shared host-side plumbing -----------------------------------------
+
+    @staticmethod
+    def _bucket_gmask(plan: np.ndarray, bucket) -> np.ndarray:
+        """This bucket's rows of the cohort plan, as the stacked ``(clients,
+        M)`` float32 bitmask batch input (padding clients all-zero: they
+        train nothing and carry no aggregation weight)."""
+        g = np.zeros((bucket.num_clients, plan.shape[1]), dtype=np.float32)
+        g[: bucket.num_real] = plan[list(bucket.members)]
+        return g
 
     def _guard_round(self, weights: Sequence[float], tracker) -> None:
         if tracker is not None:
@@ -360,6 +469,11 @@ class _BatchedEngineBase:
         dispatch); ``None`` keeps the engine's default placement."""
         raise NotImplementedError
 
+    def _plan_cohort_fn(self, stacked_prev: bool, submesh=None) -> Callable:
+        """``_cohort_fn`` for heterogeneous cohorts: same contract with the
+        stacked per-client group bitmask as a sixth batch input."""
+        raise NotImplementedError
+
     def _place_cohort_args(self, args: tuple, submesh, *,
                            stacked_prev: bool) -> tuple:
         """Commit one bucket's ``(params, inputs, labels, step_valid, prev)``
@@ -384,6 +498,7 @@ class _BatchedEngineBase:
         batch_size: int,
         prev_params: Sequence[PyTree | None] | None = None,
         submesh=None,
+        plan=None,
     ) -> tuple[PyTree, jax.Array]:
         """Train one *cohort* (clients dispatched together against the same
         global model) without syncing the host: returns
@@ -393,8 +508,12 @@ class _BatchedEngineBase:
         results.  ``submesh`` (from ``cohort_pool``) commits the cohort's
         inputs to a disjoint device set; equal-width submeshes share one
         trace (the vmap engine's programs are device-agnostic, the shard_map
-        engine traces over an AbstractMesh when this jax supports it)."""
+        engine traces over an AbstractMesh when this jax supports it).
+        ``plan`` (a per-client group bitmask) swaps the single-group program
+        for the masked plan program; a homogeneous plan collapses to the
+        legacy path (``resolve_plan``)."""
         group = FULL_NETWORK if spec.is_full else spec.group
+        plan = resolve_plan(plan, spec, self.partition.num_groups)
         use_prev = self.algo.name == "moon"
         num = len(datasets)
 
@@ -404,10 +523,19 @@ class _BatchedEngineBase:
             prev_params=prev_params, use_prev=use_prev,
             pad_clients_to=self._cohort_pad_for(submesh),
         ):
-            fn = self._cohort_fn(group, stacked_prev=use_prev, submesh=submesh)
-            args = self._place_cohort_args(
-                (params, bucket.inputs, bucket.labels, bucket.step_valid,
-                 prev_arg), submesh, stacked_prev=use_prev)
+            if plan is None:
+                fn = self._cohort_fn(group, stacked_prev=use_prev,
+                                     submesh=submesh)
+                args = (params, bucket.inputs, bucket.labels,
+                        bucket.step_valid, prev_arg)
+            else:
+                fn = self._plan_cohort_fn(stacked_prev=use_prev,
+                                          submesh=submesh)
+                args = (params, bucket.inputs, bucket.labels,
+                        bucket.step_valid, prev_arg,
+                        self._bucket_gmask(plan, bucket))
+            args = self._place_cohort_args(args, submesh,
+                                           stacked_prev=use_prev)
             locals_stacked, bucket_losses = fn(*args)
             n = bucket.num_real
             parts.append((bucket.members, (
@@ -426,6 +554,7 @@ class _BatchedEngineBase:
         epochs: int,
         batch_size: int,
         prev_params: Sequence[PyTree | None] | None = None,
+        plan=None,
     ) -> tuple[PyTree, list[float]]:
         """Blocking ``run_local_async``: same cohort contract —
         ``stacked_locals`` carries a leading client axis in ``datasets``
@@ -433,7 +562,7 @@ class _BatchedEngineBase:
         floats."""
         stacked, losses_dev = self.run_local_async(
             params, spec, datasets, seeds=seeds, epochs=epochs,
-            batch_size=batch_size, prev_params=prev_params)
+            batch_size=batch_size, prev_params=prev_params, plan=plan)
         return stacked, [float(x) for x in np.asarray(losses_dev)]
 
 
@@ -466,12 +595,38 @@ class VmapEngine(_BatchedEngineBase):
             local_round, donate_argnums=self._donate_prev(stacked_prev))
         return self._local_fns[key]
 
+    def _plan_local_fn(self, stacked_prev: bool) -> Callable:
+        """Jitted vmap-over-clients *plan* round: one program serves every
+        per-client group bitmask — the mask is a stacked batch input, not a
+        static constant, so heterogeneous cohorts never retrace."""
+        key = ("plan", stacked_prev)
+        if key in self._local_fns:
+            return self._local_fns[key]
+
+        one_client = self._one_client_plan_fn()
+        prev_axis = 0 if stacked_prev else None
+
+        def local_round(global_params, inputs, labels, step_valid, prev, gmask):
+            self.trace_count += 1
+            return jax.vmap(one_client, in_axes=(None, 0, 0, 0, prev_axis, 0))(
+                global_params, inputs, labels, step_valid, prev, gmask
+            )
+
+        self._local_fns[key] = jax.jit(
+            local_round, donate_argnums=self._donate_prev(stacked_prev))
+        return self._local_fns[key]
+
     def _cohort_fn(self, group: int, stacked_prev: bool, submesh=None) -> Callable:
         # The vmap local round already returns (stacked locals, losses) —
         # sync and async dispatches share one compiled program per group, and
         # because jit follows its committed inputs, every width-1 submesh
         # shares this single trace too (one executable per device, one trace).
         return self._local_fn(group, stacked_prev)
+
+    def _plan_cohort_fn(self, stacked_prev: bool, submesh=None) -> Callable:
+        # Same device-following story as _cohort_fn, one program for every
+        # plan row and every width-1 submesh.
+        return self._plan_local_fn(stacked_prev)
 
     def _place_cohort_args(self, args: tuple, submesh, *,
                            stacked_prev: bool) -> tuple:
@@ -508,6 +663,22 @@ class VmapEngine(_BatchedEngineBase):
         self._agg_fns[group] = jax.jit(agg, donate_argnums=self._donate_params())
         return self._agg_fns[group]
 
+    def _plan_agg_fn(self) -> Callable:
+        """On-device per-group participant-weighted aggregation: the plan
+        bitmask and raw weights are traced inputs, so one program serves
+        every heterogeneous cohort of a given size."""
+        if "plan" in self._agg_fns:
+            return self._agg_fns["plan"]
+        partition = self.partition
+
+        def agg(global_params, stacked, plan_f, weights):
+            self.trace_count += 1
+            return aggregation.aggregate_plan_stacked(
+                global_params, stacked, partition, plan_f, weights)
+
+        self._agg_fns["plan"] = jax.jit(agg, donate_argnums=self._donate_params())
+        return self._agg_fns["plan"]
+
     # -- round execution ---------------------------------------------------
 
     def run_round(
@@ -522,8 +693,10 @@ class VmapEngine(_BatchedEngineBase):
         batch_size: int,
         prev_params: Sequence[PyTree | None] | None = None,
         tracker=None,
+        plan=None,
     ) -> tuple[PyTree, list[float], list[PyTree] | None]:
         self._guard_round(weights, tracker)
+        plan = resolve_plan(plan, spec, self.partition.num_groups)
         group = FULL_NETWORK if spec.is_full else spec.group
         use_prev = self.algo.name == "moon"
         num = len(datasets)
@@ -533,16 +706,28 @@ class VmapEngine(_BatchedEngineBase):
             params, datasets, batch_size=batch_size, epochs=epochs, seeds=seeds,
             prev_params=prev_params, use_prev=use_prev,
         ):
-            fn = self._local_fn(group, stacked_prev=use_prev)
-            locals_stacked, bucket_losses = fn(
-                params, bucket.inputs, bucket.labels, bucket.step_valid, prev_arg
-            )
+            if plan is None:
+                fn = self._local_fn(group, stacked_prev=use_prev)
+                locals_stacked, bucket_losses = fn(
+                    params, bucket.inputs, bucket.labels, bucket.step_valid,
+                    prev_arg)
+            else:
+                fn = self._plan_local_fn(stacked_prev=use_prev)
+                locals_stacked, bucket_losses = fn(
+                    params, bucket.inputs, bucket.labels, bucket.step_valid,
+                    prev_arg, self._bucket_gmask(plan, bucket))
             parts.append((bucket.members, (locals_stacked, bucket_losses)))
 
         stacked, losses_dev = self._gather_order(parts, num)
-        new_params = self._agg_fn(group)(
-            params, stacked, jnp.asarray(weights, dtype=jnp.float32)
-        )
+        if plan is None:
+            new_params = self._agg_fn(group)(
+                params, stacked, jnp.asarray(weights, dtype=jnp.float32)
+            )
+        else:
+            new_params = self._plan_agg_fn()(
+                params, stacked, jnp.asarray(plan, dtype=jnp.float32),
+                jnp.asarray(weights, dtype=jnp.float32)
+            )
         losses = [float(x) for x in np.asarray(losses_dev)]
         new_locals = masking.unstack_tree(stacked, num) if use_prev else None
         return new_params, losses, new_locals
@@ -627,6 +812,54 @@ class ShardMapEngine(_BatchedEngineBase):
         )
         return self._local_fns[key]
 
+    def _plan_local_fn(self, stacked_prev: bool) -> Callable:
+        """Jitted shard_map'd plan round: each device vmaps the masked plan
+        step over its client shard, then per-leaf plan-weighted sums are
+        ``psum``-reduced across the mesh.  ``eff_w`` arrives host-normalised
+        per group over the *whole cohort* (each group's own participant
+        denominator, zero rows for padding clients), so summing the psum'd
+        buckets yields each group's participant-weighted average directly —
+        per-group weight sums on-mesh, exactly like the homogeneous path's
+        single-group reduction."""
+        key = ("plan", stacked_prev)
+        if key in self._local_fns:
+            return self._local_fns[key]
+
+        one_client = self._one_client_plan_fn()
+        partition = self.partition
+        prev_axis = 0 if stacked_prev else None
+
+        def device_round(global_params, inputs, labels, step_valid, prev,
+                         gmask, eff_w):
+            self.trace_count += 1
+            locals_stacked, losses = jax.vmap(
+                one_client, in_axes=(None, 0, 0, 0, prev_axis, 0)
+            )(global_params, inputs, labels, step_valid, prev, gmask)
+            sub = aggregation.drop_local_stats(locals_stacked)
+
+            def _wsum(path, x):
+                g = partition.group_of(
+                    "/".join(masking._entry_str(e) for e in path))
+                return jnp.tensordot(eff_w[:, g], x.astype(jnp.float32), axes=1)
+
+            update = jax.tree_util.tree_map_with_path(_wsum, sub)
+            update = jax.lax.psum(update, CLIENT_AXIS)
+            if stacked_prev:
+                return update, losses, locals_stacked
+            return update, losses
+
+        c = P(CLIENT_AXIS)
+        in_specs = (P(), c, c, c, c if stacked_prev else P(), c, c)
+        out_specs = (P(), c, c) if stacked_prev else (P(), c)
+        self._local_fns[key] = jax.jit(
+            _shard_map(
+                device_round, mesh=self.mesh, in_specs=in_specs,
+                out_specs=out_specs, **_SHARD_MAP_KW,
+            ),
+            donate_argnums=self._donate_prev(stacked_prev),
+        )
+        return self._local_fns[key]
+
     def _cohort_pad_for(self, submesh) -> int:
         return submesh.width if submesh is not None else self.num_devices
 
@@ -686,6 +919,46 @@ class ShardMapEngine(_BatchedEngineBase):
         )
         return self._cohort_fns[key]
 
+    def _plan_cohort_fn(self, stacked_prev: bool, submesh=None) -> Callable:
+        """Plan-round cohort program: ``_cohort_fn``'s no-psum contract with
+        the per-client group bitmask riding the client axis as a sixth
+        sharded input.  Same trace-sharing story: AbstractMesh per width
+        when available, concrete mesh otherwise."""
+        if submesh is None:
+            key, mesh = ("plan", stacked_prev), self.mesh
+        else:
+            am = self._abstract_mesh(submesh.width)
+            if am is not None:
+                key, mesh = ("plan", stacked_prev, submesh.width), am
+            else:  # pragma: no cover - depends on installed jax
+                key = ("plan", stacked_prev,
+                       tuple(getattr(d, "id", i)
+                             for i, d in enumerate(submesh.devices)))
+                mesh = submesh.mesh
+        if key in self._cohort_fns:
+            return self._cohort_fns[key]
+
+        one_client = self._one_client_plan_fn()
+        prev_axis = 0 if stacked_prev else None
+
+        def device_cohort(global_params, inputs, labels, step_valid, prev,
+                          gmask):
+            self.trace_count += 1
+            return jax.vmap(one_client, in_axes=(None, 0, 0, 0, prev_axis, 0))(
+                global_params, inputs, labels, step_valid, prev, gmask
+            )
+
+        c = P(CLIENT_AXIS)
+        in_specs = (P(), c, c, c, c if stacked_prev else P(), c)
+        self._cohort_fns[key] = jax.jit(
+            _shard_map(
+                device_cohort, mesh=mesh, in_specs=in_specs,
+                out_specs=(c, c), **_SHARD_MAP_KW,
+            ),
+            donate_argnums=self._donate_prev(stacked_prev),
+        )
+        return self._cohort_fns[key]
+
     def _place_cohort_args(self, args: tuple, submesh, *,
                            stacked_prev: bool) -> tuple:
         if submesh is None or self._abstract_mesh(submesh.width) is None:
@@ -695,12 +968,15 @@ class ShardMapEngine(_BatchedEngineBase):
 
         rep = NamedSharding(submesh.mesh, P())
         shd = NamedSharding(submesh.mesh, P(CLIENT_AXIS))
-        params, inputs, labels, step_valid, prev = args
-        return (jax.device_put(params, rep),
-                jax.device_put(inputs, shd),
-                jax.device_put(labels, shd),
-                jax.device_put(step_valid, shd),
-                jax.device_put(prev, shd if stacked_prev else rep))
+        params, inputs, labels, step_valid, prev = args[:5]
+        placed = (jax.device_put(params, rep),
+                  jax.device_put(inputs, shd),
+                  jax.device_put(labels, shd),
+                  jax.device_put(step_valid, shd),
+                  jax.device_put(prev, shd if stacked_prev else rep))
+        if len(args) == 6:      # plan cohorts: the bitmask rides the client axis
+            placed += (jax.device_put(args[5], shd),)
+        return placed
 
     def cohort_pool(self, max_inflight: int):
         """Cut this engine's client mesh into equal-width disjoint submeshes,
@@ -734,6 +1010,33 @@ class ShardMapEngine(_BatchedEngineBase):
         self._agg_fns[key] = jax.jit(splice, donate_argnums=self._donate_params())
         return self._agg_fns[key]
 
+    def _plan_splice_fn(self, n_buckets: int) -> Callable:
+        """Sum the buckets' psum'd plan updates and splice: a leaf whose
+        group somebody trained takes the summed participant-weighted average
+        (cast back to its dtype); a zero-trainer group's leaves keep the
+        frozen global *bit-identical* (``trained`` is the per-group
+        had-participants bitmap, computed host-side from the plan)."""
+        key = ("plan", n_buckets)
+        if key in self._agg_fns:
+            return self._agg_fns[key]
+        partition = self.partition
+
+        def splice(global_params, updates, trained):
+            self.trace_count += 1
+            summed = jax.tree.map(lambda *xs: sum(xs), *updates)
+            ref = aggregation.drop_local_stats(global_params)
+
+            def _choose(path, s, r):
+                g = partition.group_of(
+                    "/".join(masking._entry_str(e) for e in path))
+                return jnp.where(trained[g], s.astype(r.dtype), r)
+
+            averaged = jax.tree_util.tree_map_with_path(_choose, summed, ref)
+            return masking.tree_update(global_params, averaged)
+
+        self._agg_fns[key] = jax.jit(splice, donate_argnums=self._donate_params())
+        return self._agg_fns[key]
+
     # -- round execution ---------------------------------------------------
 
     def run_round(
@@ -748,13 +1051,23 @@ class ShardMapEngine(_BatchedEngineBase):
         batch_size: int,
         prev_params: Sequence[PyTree | None] | None = None,
         tracker=None,
+        plan=None,
     ) -> tuple[PyTree, list[float], list[PyTree] | None]:
         self._guard_round(weights, tracker)
+        plan = resolve_plan(plan, spec, self.partition.num_groups)
         group = FULL_NETWORK if spec.is_full else spec.group
         use_prev = self.algo.name == "moon"
         num = len(datasets)
         w = np.asarray(weights, dtype=np.float32)
         w_norm = w / w.sum()
+        if plan is not None:
+            # Per-group participant denominators over the whole cohort:
+            # zero-trainer groups keep eff_w all-zero and are spliced from
+            # the frozen global instead.
+            denom = aggregation.plan_group_denominators(plan, w)     # (M,)
+            eff = w[:, None] * plan.astype(np.float32)               # (num, M)
+            eff_norm = eff / np.where(denom > 0, denom, 1.0)[None, :]
+            trained = jnp.asarray(denom > 0)
 
         updates: list[PyTree] = []
         loss_parts: list[tuple[tuple[int, ...], jax.Array]] = []
@@ -764,11 +1077,20 @@ class ShardMapEngine(_BatchedEngineBase):
             prev_params=prev_params, use_prev=use_prev,
             pad_clients_to=self.num_devices,
         ):
-            wb = np.zeros(bucket.num_clients, dtype=np.float32)
-            wb[: bucket.num_real] = w_norm[list(bucket.members)]
-            fn = self._local_fn(group, stacked_prev=use_prev)
-            out = fn(params, bucket.inputs, bucket.labels, bucket.step_valid,
-                     prev_arg, wb)
+            if plan is None:
+                wb = np.zeros(bucket.num_clients, dtype=np.float32)
+                wb[: bucket.num_real] = w_norm[list(bucket.members)]
+                fn = self._local_fn(group, stacked_prev=use_prev)
+                out = fn(params, bucket.inputs, bucket.labels,
+                         bucket.step_valid, prev_arg, wb)
+            else:
+                wb = np.zeros((bucket.num_clients, plan.shape[1]),
+                              dtype=np.float32)
+                wb[: bucket.num_real] = eff_norm[list(bucket.members)]
+                fn = self._plan_local_fn(stacked_prev=use_prev)
+                out = fn(params, bucket.inputs, bucket.labels,
+                         bucket.step_valid, prev_arg,
+                         self._bucket_gmask(plan, bucket), wb)
             update, bucket_losses = out[0], out[1]
             updates.append(update)
             n = bucket.num_real
@@ -779,7 +1101,11 @@ class ShardMapEngine(_BatchedEngineBase):
                     jax.tree.map(lambda x: x[:n], out[2]),
                 ))
 
-        new_params = self._splice_fn(group, len(updates))(params, updates)
+        if plan is None:
+            new_params = self._splice_fn(group, len(updates))(params, updates)
+        else:
+            new_params = self._plan_splice_fn(len(updates))(
+                params, updates, trained)
         losses_dev = self._gather_order(loss_parts, num)
         losses = [float(x) for x in np.asarray(losses_dev)]
         if use_prev:

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +36,7 @@ class LocalTrainer:
         self.trace_count = 0  # jit (re)traces across all cached step fns
         self._full_step = jax.jit(self._counted(self.make_full_step()))
         self._partial_steps: dict[int, Callable] = {}
+        self._plan_steps: dict[tuple[int, ...], Callable] = {}
 
     def _counted(self, fn: Callable) -> Callable:
         """Wrap a step fn so each XLA trace bumps ``trace_count`` (the wrapper
@@ -85,10 +86,11 @@ class LocalTrainer:
 
         return step
 
-    def make_partial_step(self, group: int):
-        """Raw (unjitted) partial step for ``group`` — reused by the batched
-        vmap engine (the group is static, so XLA prunes the dead backward
-        graph per group in both engines)."""
+    def make_partial_step(self, group):
+        """Raw (unjitted) partial step for ``group`` — an int, or a sequence
+        of group ids for per-client layer plans (docs/HETEROGENEITY.md) —
+        reused by the batched vmap engine (the group set is static, so XLA
+        prunes the dead backward graph per distinct set in both engines)."""
 
         def step(params, opt_state, inputs, labels, global_params, prev_params):
             trainable = masking.select(params, self.partition, group)
@@ -116,6 +118,16 @@ class LocalTrainer:
             )
         return self._partial_steps[group]
 
+    def plan_step(self, groups: tuple[int, ...]) -> Callable:
+        """Jitted partial step for a *set* of layer groups (one cached trace
+        per distinct set — capacity tiers, so a handful per run)."""
+        key = tuple(sorted(int(g) for g in groups))
+        if key not in self._plan_steps:
+            self._plan_steps[key] = jax.jit(
+                self._counted(self.make_partial_step(key))
+            )
+        return self._plan_steps[key]
+
     # -- local round ---------------------------------------------------------
 
     def run_local_round(
@@ -129,13 +141,26 @@ class LocalTrainer:
         seed: int,
         prev_params: PyTree | None = None,
         step_tracker=None,
+        groups: Sequence[int] | None = None,
     ) -> tuple[PyTree, float]:
-        """Train locally; returns (updated full params, mean loss)."""
+        """Train locally; returns (updated full params, mean loss).
+
+        ``groups`` (per-client layer plans) overrides ``group`` with a *set*
+        of trainable layer groups; a set covering every group is the FNU
+        step."""
         params = global_params
         prev = prev_params if prev_params is not None else global_params
-        if group < 0:
+        if groups is not None:
+            groups = tuple(sorted(int(g) for g in groups))
+            full = len(groups) == self.partition.num_groups
+        else:
+            full = group < 0
+        if full:
             opt_state = adam_init(params)
             step = self._full_step
+        elif groups is not None:
+            opt_state = adam_init(masking.select(params, self.partition, groups))
+            step = self.plan_step(groups)
         else:
             opt_state = adam_init(masking.select(params, self.partition, group))
             step = self.partial_step(group)

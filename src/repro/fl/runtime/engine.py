@@ -11,6 +11,10 @@ average" barrier with an explicit discrete-event simulation:
    execution backend, not a parallel implementation).  Every client in the
    cohort trains the layer group scheduled for version ``v``
    (``core.schedule.ScheduleIndex``) against the version-``v`` model.  Up to
+   Under a per-client layer plan (``FLRunConfig.plan``, ``PlanAssigner``)
+   each cohort member instead trains its *own* group subset for version
+   ``v``, and its virtual duration/books use exactly its trained groups'
+   bytes and FLOPs (docs/HETEROGENEITY.md).  Up to
    ``FLRunConfig.max_inflight_cohorts`` cohorts may be in flight at once:
    with the default ``1`` dispatch is merge-driven (the original async
    runtime); with more, freed capacity is topped up immediately, so several
@@ -62,12 +66,12 @@ import jax
 import numpy as np
 
 from repro.core import aggregation, masking
-from repro.core.costs import comm_cost, comp_cost
+from repro.core.costs import comm_cost, comp_cost, plan_step_flops
 from repro.core.partition import (group_param_bytes, group_param_counts,
                                   total_param_bytes)
-from repro.core.schedule import RoundSpec, ScheduleIndex
+from repro.core.schedule import PlanAssigner, RoundSpec, ScheduleIndex
 from repro.core.telemetry import Timeline
-from repro.fl.batched import make_engine
+from repro.fl.batched import make_engine, resolve_plan
 from repro.fl.client import LocalTrainer
 from repro.fl.runtime.clients import ClientAvailability
 from repro.fl.runtime.policy import ClientUpdate, make_policy
@@ -92,17 +96,18 @@ class _Cohort:
     host launch may be deferred (submesh exhaustion) and the results are
     materialised lazily, at the cohort's first popped member event."""
 
-    __slots__ = ("picked", "datasets", "seeds", "prevs", "spec", "params",
-                 "dispatched_t", "end_t", "updates", "submesh", "stacked",
-                 "losses_dev", "launched", "resolved", "tl_event")
+    __slots__ = ("picked", "datasets", "seeds", "prevs", "spec", "plan",
+                 "params", "dispatched_t", "end_t", "updates", "submesh",
+                 "stacked", "losses_dev", "launched", "resolved", "tl_event")
 
-    def __init__(self, *, picked, datasets, seeds, prevs, spec, params,
+    def __init__(self, *, picked, datasets, seeds, prevs, spec, plan, params,
                  dispatched_t, end_t, updates, tl_event):
         self.picked = picked
         self.datasets = datasets
         self.seeds = seeds
         self.prevs = prevs
         self.spec = spec
+        self.plan = plan              # per-client group bitmask (None = homogeneous)
         self.params = params          # version-``v`` tree captured at dispatch
         self.dispatched_t = dispatched_t
         self.end_t = end_t            # last member completion (virtual)
@@ -161,6 +166,9 @@ def run_federated_async(
         buffer_goal=run_cfg.buffer_k,
     )
     sched = ScheduleIndex.from_rounds(rounds)
+    assigner = PlanAssigner(
+        num_groups=partition.num_groups, kind=run_cfg.plan,
+        capacity_tiers=tuple(run_cfg.capacity_tiers), seed=run_cfg.seed)
     n_clients = len(clients_data)
     avail = ClientAvailability(run_cfg.availability, n_clients)
     vtm = run_cfg.vtime
@@ -186,6 +194,14 @@ def run_federated_async(
                 .per_round_flops[0]
             )
         return _flops_cache[spec.group]
+
+    _plan_flops_cache: dict[tuple[int, ...], float] = {}
+
+    def _plan_flops(groups: tuple[int, ...]) -> float:
+        if groups not in _plan_flops_cache:
+            _plan_flops_cache[groups] = plan_step_flops(
+                partition, groups, group_fwd_flops=group_counts)
+        return _plan_flops_cache[groups]
 
     # -- host-parallel dispatch state ---------------------------------------
     max_inflight = run_cfg.max_inflight_cohorts
@@ -218,7 +234,7 @@ def run_federated_async(
         cohort.stacked, cohort.losses_dev = engine.run_local_async(
             cohort.params, cohort.spec, cohort.datasets, seeds=cohort.seeds,
             epochs=run_cfg.local_epochs, batch_size=run_cfg.batch_size,
-            prev_params=cohort.prevs, submesh=submesh,
+            prev_params=cohort.prevs, submesh=submesh, plan=cohort.plan,
         )
         cohort.launched = True
         idx = submesh.index if submesh is not None else -1
@@ -244,8 +260,17 @@ def run_federated_async(
             for i, ci in enumerate(cohort.picked):
                 prev_store[int(ci)] = jax.tree.map(lambda x: x[i], moon_stacked)
         spec = cohort.spec
-        sub = stacked if spec.is_full else masking.select(
-            stacked, partition, spec.group)
+        if cohort.plan is None:
+            sub = stacked if spec.is_full else masking.select(
+                stacked, partition, spec.group)
+        else:
+            # Heterogeneous cohort: pull the cohort's *union* of trained
+            # groups off the mesh, then slice each member down to exactly
+            # the groups its plan row trained.
+            union = tuple(int(g)
+                          for g in np.flatnonzero(cohort.plan.any(axis=0)))
+            sub = (stacked if len(union) == partition.num_groups
+                   else masking.select(stacked, partition, union))
         sub = aggregation.drop_local_stats(sub)
         if xfer_back:
             # Pull only the *transmitted* subtree back to the home device
@@ -254,7 +279,8 @@ def run_federated_async(
             sub = jax.device_put(sub, home)
         subs = masking.unstack_tree(sub, len(cohort.picked))
         for i, upd in enumerate(cohort.updates):
-            upd.subtree = subs[i]
+            upd.subtree = (subs[i] if upd.groups is None else
+                           masking.select(subs[i], partition, upd.groups))
             upd.loss = losses[i]
         # Drop the big references now, not at last-straggler pop: the params
         # snapshot, the in-flight outputs, and (MOON) the superseded
@@ -299,6 +325,16 @@ def run_federated_async(
         seeds = [run_cfg.seed * 100_003 + spec.index * 1_009 + int(ci)
                  for ci in picked]
         prevs = [prev_store.get(int(ci)) for ci in picked] if is_moon else None
+        # Per-client layer plan for this dispatch.  The raw plan (None only
+        # under the homogeneous *kind*) decides the updates' trained group
+        # sets, so the policy merge unbundles per (client, group) for every
+        # plan-kind dispatch — even a cohort whose rows happen to equal the
+        # round mask, which `resolve_plan` collapses to the legacy compiled
+        # programs for *execution* only.  Otherwise a collapsed cohort's
+        # whole-tree update sharing a buffer with plan updates would dodge
+        # the per-group denominators (docs/HETEROGENEITY.md).
+        plan_raw = assigner.assign(spec, picked)
+        plan = resolve_plan(plan_raw, spec, partition.num_groups)
         up_bytes = full_bytes if spec.is_full else int(group_bytes[spec.group])
         step_flops = _step_flops(spec)
 
@@ -306,22 +342,32 @@ def run_federated_async(
         # parallel runtime exactly, so seeded availability streams replay.
         members, end_t = [], t
         for i, ci in enumerate(picked):
-            flops = step_flops * _steps_per_round(
+            if plan_raw is None:
+                groups_i, ub, sf = None, up_bytes, step_flops
+            else:
+                # Capacity-aware books: a client moves and computes exactly
+                # its own trained groups' bytes/FLOPs.  (For a collapsed
+                # cohort these equal the legacy per-round numbers exactly.)
+                groups_i = tuple(int(g) for g in np.flatnonzero(plan_raw[i]))
+                ub = (full_bytes if len(groups_i) == partition.num_groups
+                      else int(group_bytes[list(groups_i)].sum()))
+                sf = _plan_flops(groups_i)
+            flops = sf * _steps_per_round(
                 len(datasets[i]), run_cfg.batch_size, run_cfg.local_epochs)
             dur = vtm.round_seconds(
-                flops, up_bytes, speed=avail.speed(ci), jitter=avail.jitter())
+                flops, ub, speed=avail.speed(ci), jitter=avail.jitter())
             upd = ClientUpdate(
                 client_id=int(ci), version=version, group=spec.group,
                 subtree=None, weight=float(len(datasets[i])),
                 loss=float("nan"), dispatched_t=t, completed_t=t + dur,
-                comp_flops=flops,
+                comp_flops=flops, comm_bytes=ub, groups=groups_i,
             )
             members.append((upd, "drop" if avail.drops() else "complete"))
             end_t = max(end_t, t + dur)
         timeline.record(t, "dispatch", version=version, group=spec.group,
                         clients=[int(c) for c in picked], t_end=end_t)
         cohort = _Cohort(picked=picked, datasets=datasets, seeds=seeds,
-                         prevs=prevs, spec=spec, params=params,
+                         prevs=prevs, spec=spec, plan=plan, params=params,
                          dispatched_t=t, end_t=end_t,
                          updates=[u for u, _ in members],
                          tl_event=timeline.events[-1])
@@ -414,8 +460,7 @@ def run_federated_async(
             buffer.append(upd)
             timeline.record(t, "complete", client=upd.client_id,
                             staleness=upd.staleness(version),
-                            comm_bytes=(full_bytes if upd.group < 0
-                                        else int(group_bytes[upd.group])),
+                            comm_bytes=upd.comm_bytes,
                             comp_flops=upd.comp_flops)
         else:
             timeline.record(t, "drop", client=upd.client_id,

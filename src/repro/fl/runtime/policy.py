@@ -56,6 +56,12 @@ class ClientUpdate:
     dispatched_t: float     # virtual dispatch time
     completed_t: float = float("nan")
     comp_flops: float = 0.0  # local-training FLOPs this dispatch burned
+    comm_bytes: int = 0      # upstream bytes of the transmitted subtree
+    # Per-client layer plans: the exact group set this client trained (None
+    # = the homogeneous path, where ``group`` alone describes the subtree).
+    # The subtree then holds the *union* of the trained groups and the merge
+    # splices per (client, group).
+    groups: tuple[int, ...] | None = None
 
     def staleness(self, current_version: int) -> int:
         return max(current_version - self.version, 0)
@@ -116,31 +122,45 @@ class AggregationPolicy:
         targeted subtrees splice on top, so a partial update is never wiped
         by a later full splice and the result is independent of arrival
         order; each group's mixing context is the progressively-merged
-        model, not a pre-merge snapshot.  Returns ``(new_params, info)``
-        with the merge telemetry (mean loss, staleness stats, per-group
-        counts)."""
+        model, not a pre-merge snapshot.
+
+        Updates carrying a per-client layer plan (``u.groups`` set,
+        docs/HETEROGENEITY.md) are unbundled into one contribution per
+        **(client, group)**: each trained group's slice of the update's
+        subtree joins that group's average with the *update's own* staleness
+        scale, so a buffer can mix plan and homogeneous updates for the same
+        group and every group's denominator sums exactly the weights of the
+        clients that trained it.  Returns ``(new_params, info)`` with the
+        merge telemetry (mean loss, staleness stats, per-group counts)."""
         if not updates:
             raise ValueError("merge called with an empty buffer")
-        by_group: dict[int, list[ClientUpdate]] = {}
+        # Contributions per group: FULL_NETWORK (whole-tree) updates first,
+        # then partial groups ascending — order-independent, and targeted
+        # subtrees win where they overlap the full splice.  (Partial groups
+        # are disjoint by construction.)
+        by_group: dict[int, list[tuple[ClientUpdate, PyTree]]] = {}
         for u in updates:
-            by_group.setdefault(u.group, []).append(u)
+            if u.groups is None:
+                by_group.setdefault(u.group, []).append((u, u.subtree))
+            else:
+                for g in u.groups:
+                    by_group.setdefault(int(g), []).append(
+                        (u, masking.select(u.subtree, self.partition, int(g))))
 
         params = global_params
-        # FULL_NETWORK (group < 0) first, then partial groups: order-
-        # independent, and targeted subtrees win where they overlap the full
-        # splice.  (Partial groups are disjoint by construction.)
         for group in sorted(by_group, key=lambda g: (g >= 0, g)):
-            ups = by_group[group]
-            w = np.array([u.weight for u in ups], dtype=np.float32)
+            contribs = by_group[group]
+            w = np.array([u.weight for u, _ in contribs], dtype=np.float32)
             scale = np.array(
-                [self.staleness_scale(u.staleness(version)) for u in ups],
+                [self.staleness_scale(u.staleness(version))
+                 for u, _ in contribs],
                 dtype=np.float32,
             )
             if float((w * scale).sum()) <= 0.0:
                 raise ValueError(
                     f"group {group} merge weights must sum to a positive value"
                 )
-            stacked = masking.stack_trees([u.subtree for u in ups])
+            stacked = masking.stack_trees([sub for _, sub in contribs])
             averaged = aggregation.tree_mean_stacked(stacked, w * scale)
             m = float((w * scale).sum() / w.sum())
             if m < 1.0:

@@ -31,6 +31,13 @@ Orthogonally to the engine, ``FLRunConfig(runtime=...)`` picks the *runtime*
   time-to-accuracy as first-class output.  In the degenerate config (perfect
   fleet, full buffer, exponent 0) it reproduces this loop to <=1e-5
   (docs/ASYNC.md).
+
+Orthogonally to both, ``FLRunConfig(plan=..., capacity_tiers=...)`` picks the
+*per-client layer plan* (``core.schedule.PlanAssigner``): with
+``plan="homogeneous"`` (default) every client trains the round's scheduled
+group exactly as before; ``"nested"`` / ``"random"`` give capacity-tiered
+clients different group subsets in the same round, and aggregation averages
+each group over only the clients that trained it (docs/HETEROGENEITY.md).
 """
 
 from __future__ import annotations
@@ -43,7 +50,7 @@ import numpy as np
 
 from repro.core.costs import VirtualTimeModel, comm_cost, comp_cost
 from repro.core.partition import Partition, group_param_counts
-from repro.core.schedule import RoundSpec
+from repro.core.schedule import PlanAssigner, RoundSpec
 from repro.core.telemetry import StepSizeTracker, Timeline
 from repro.fl.algorithms import AlgoConfig
 from repro.fl.batched import make_engine
@@ -72,6 +79,9 @@ class FLRunConfig:
     engine: str = "sequential"      # "sequential" | "vmap" | "shard_map"
     sim_devices: int = 0            # shard_map mesh size (0 = all devices)
     donate_buffers: bool = True     # donate params into the agg jit + MOON prev stack (batched engines)
+    # -- per-client layer plans (heterogeneous fleets, docs/HETEROGENEITY.md)
+    plan: str = "homogeneous"       # "homogeneous" | "nested" | "random"
+    capacity_tiers: tuple[float, ...] = ()  # tier capacities in (0,1]; () = one full-capacity tier
     # -- runtime (sync barrier loop vs event-driven async simulator) --------
     runtime: str = "sync"           # "sync" | "async" (repro.fl.runtime)
     async_policy: str = "fedbuff"   # "fedbuff" | "sync" (barrier oracle)
@@ -143,6 +153,9 @@ def run_federated(
         algo=run_cfg.algo, sim_devices=run_cfg.sim_devices,
         donate=run_cfg.donate_buffers,
     )
+    assigner = PlanAssigner(
+        num_groups=partition.num_groups, kind=run_cfg.plan,
+        capacity_tiers=tuple(run_cfg.capacity_tiers), seed=run_cfg.seed)
     rng = np.random.default_rng(run_cfg.seed)
     eval_x, eval_y = eval_set
     eval_fn = jax.jit(adapter.evaluate)
@@ -174,6 +187,7 @@ def run_federated(
             batch_size=run_cfg.batch_size,
             prev_params=prevs,
             tracker=tracker,
+            plan=assigner.assign(spec, [int(ci) for ci in picked]),
         )
         if new_locals is not None:
             for ci, local in zip(picked, new_locals):

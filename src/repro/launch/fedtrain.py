@@ -40,6 +40,14 @@ disjoint device submesh (host-parallel dispatch, docs/ASYNC.md):
     python -m repro.launch.fedtrain --sim-clients 8 --rounds 12 \
         --engine vmap --runtime async --participation 0.5 --buffer-k 2 \
         --staleness-exp 0.5 --speed-spread 3.0 --max-inflight 2
+
+``--plan nested --capacity-tiers 0.3 0.6 1.0`` gives capacity-tiered clients
+*different layer subsets in the same round* (per-client layer plans,
+docs/HETEROGENEITY.md); each group is aggregated over only the clients that
+trained it:
+
+    python -m repro.launch.fedtrain --sim-clients 8 --rounds 12 \
+        --engine vmap --plan nested --capacity-tiers 0.3 0.6 1.0
 """
 
 from __future__ import annotations
@@ -146,6 +154,8 @@ def run_simulation(args) -> int:
                       staleness_exponent=args.staleness_exp,
                       sample_fraction=args.participation,
                       max_inflight_cohorts=args.max_inflight,
+                      plan=args.plan,
+                      capacity_tiers=tuple(args.capacity_tiers),
                       availability=AvailabilityConfig(
                           speed_spread=args.speed_spread,
                           latency_jitter=args.latency_jitter,
@@ -210,6 +220,16 @@ def main(argv=None) -> int:
                          "async: 1 = merge-driven dispatch, >1 trains that "
                          "many cohorts at once on disjoint device submeshes "
                          "(docs/ASYNC.md)")
+    ap.add_argument("--plan", choices=["homogeneous", "nested", "random"],
+                    default="homogeneous",
+                    help="per-client layer plan for --sim-clients "
+                         "(docs/HETEROGENEITY.md): every client trains the "
+                         "scheduled group (default), FedPLT-style capacity "
+                         "prefixes, or seeded random per-client group subsets")
+    ap.add_argument("--capacity-tiers", type=float, nargs="*", default=[],
+                    help="capacity fractions in (0, 1], one per tier, clients "
+                         "assigned round-robin (e.g. 0.3 0.6 1.0); empty = "
+                         "one full-capacity tier")
     ap.add_argument("--speed-spread", type=float, default=0.0,
                     help="per-client compute-speed heterogeneity (log-uniform "
                          "spread; 0 = homogeneous fleet)")

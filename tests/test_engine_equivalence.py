@@ -6,6 +6,14 @@ for FNU and partial rounds, across FedAvg / FedProx / MOON, including ragged
 client sizes (different step counts, and — in the bucket test — a client
 smaller than the batch size, which lands in its own batch-width bucket).
 
+The same bar holds under heterogeneous *per-client layer plans*
+(``FLRunConfig(plan=..., capacity_tiers=...)``, docs/HETEROGENEITY.md): the
+sequential oracle trains each client's exact pruned group set while the
+batched engines run one masked plan program over the stacked cohort — the
+``test_hetero_plan_*`` block pins sequential == vmap == shard_map for nested
+and random plans, ragged buckets, the degenerate async runtime, and (slow
+lane) a forced-2-device mesh at inflight 1 and 2.
+
 The shard_map engine is additionally pinned against the oracle on a
 *multi-device* mesh: a subprocess forces 2 simulated host devices
 (``XLA_FLAGS=--xla_force_host_platform_device_count=2``, which must precede
@@ -52,10 +60,11 @@ def setup():
     return _make_setup((36, 56, 40))
 
 
-def _run(setup, algo: str, engine: str, rounds):
+def _run(setup, algo: str, engine: str, rounds, **kw):
     adapter, clients, eval_set = setup
-    cfg = FLRunConfig(local_epochs=1, batch_size=BATCH, lr=2e-3, adam_eps=1e-3,
-                      algo=AlgoConfig(name=algo), engine=engine)
+    kw.setdefault("adam_eps", 1e-3)
+    cfg = FLRunConfig(local_epochs=1, batch_size=BATCH, lr=2e-3,
+                      algo=AlgoConfig(name=algo), engine=engine, **kw)
     return run_federated(adapter, clients, eval_set, rounds, cfg)
 
 
@@ -154,6 +163,128 @@ def test_unknown_engine_rejected(setup):
     cfg = FLRunConfig(engine="pmap")
     with pytest.raises(ValueError, match="unknown engine"):
         run_federated(adapter, clients, eval_set, FNUSchedule(1).rounds(), cfg)
+
+
+# -- heterogeneous per-client layer plans (docs/HETEROGENEITY.md) -----------
+#
+# Capacity tiers chosen so all three tiers differ on resnet4's 6 groups
+# (nested prefixes ceil(c*6) = 3 / 5 / 6).  MIXED's partial round trains
+# group 0 — inside every prefix, so a nested plan for it is homogeneous and
+# resolve_plan would collapse it to the legacy path; HETERO_MIXED swaps in a
+# *group-4* partial round instead, which tier 0 clamps to its deepest group
+# (2) while the other tiers follow the schedule (4) — both rounds get
+# genuinely mixed cohorts, exercising the masked plan step, the per-group
+# participant-weighted aggregation, and the zero-trainer frozen fallback
+# (group 5 is trained by the full-capacity tier alone on the FNU round;
+# groups 0, 1, 3, 5 have no trainer on the partial round).
+#
+# adam_eps: unlike the homogeneous tests (the same pruned program, vmapped vs
+# looped), these compare two genuinely *different* float programs — the
+# oracle's pruned group-set step vs the batched engines' masked FNU-shaped
+# plan step — so reassociation noise on near-zero gradients is larger and
+# eps=1e-3 no longer keeps every Adam step in the linear regime on plan FNU
+# rounds (fedprox drifts to ~4e-5).  eps=1e-2 restores <=1e-5 headroom; the
+# configs stay identical across engines, so equivalence is still the claim.
+
+TIERS = (0.34, 0.67, 1.0)
+HETERO_EPS = 1e-2
+HETERO_MIXED = [MIXED[0],
+                type(MIXED[1])(index=1, phase="partial", cycle=0, group=4)]
+
+
+@pytest.mark.parametrize("algo", ["fedavg", "fedprox"])
+def test_hetero_plan_vmap_matches_sequential(setup, algo):
+    """Nested per-client plans: the vmapped masked-plan program must match
+    the oracle's per-client pruned group sets, FNU + partial."""
+    seq = _run(setup, algo, "sequential", HETERO_MIXED,
+               plan="nested", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    vm = _run(setup, algo, "vmap", HETERO_MIXED,
+              plan="nested", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    _assert_equivalent(seq, vm)
+
+
+def test_hetero_plan_shard_map_matches_sequential(setup):
+    """Per-group psum'd weight sums on the (degenerate 1-device) mesh must
+    agree with the oracle; the multi-device sharpening lives in the slow
+    2-device subprocess test."""
+    seq = _run(setup, "fedavg", "sequential", HETERO_MIXED,
+               plan="nested", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    sm = _run(setup, "fedavg", "shard_map", HETERO_MIXED,
+              plan="nested", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    _assert_equivalent(seq, sm)
+
+
+@pytest.mark.slow
+def test_hetero_plan_random_kind_engines_agree(setup):
+    """Seeded random plans (arbitrary per-client group subsets) through the
+    same masked program: vmap == sequential.  Slow lane: the nested tests
+    above pin the same masked program in tier-1; random only changes which
+    bits are set (nightly hetero-equivalence job)."""
+    seq = _run(setup, "fedavg", "sequential", HETERO_MIXED,
+               plan="random", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    vm = _run(setup, "fedavg", "vmap", HETERO_MIXED,
+              plan="random", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    _assert_equivalent(seq, vm)
+
+
+@pytest.mark.slow
+def test_hetero_plan_ragged_buckets(setup):
+    """A client below the batch size routes through its own bucket while the
+    per-client bitmask rides along (heterogeneous version of the
+    small-client bucket test).  Slow lane: bucket routing is plan-agnostic
+    (`_bucket_gmask` just permutes rows) and the homogeneous bucket test
+    stays tier-1; the 2-device subprocess also re-covers hetero buckets
+    (nightly hetero-equivalence job)."""
+    small = _make_setup((12, 36, 20))
+    seq = _run(small, "fedavg", "sequential", HETERO_MIXED[1:],
+               plan="nested", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    vm = _run(small, "fedavg", "vmap", HETERO_MIXED[1:],
+              plan="nested", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    _assert_equivalent(seq, vm)
+
+
+def test_hetero_plan_async_degenerate_matches_sync(setup):
+    """Degenerate async runtime under a heterogeneous plan: the per-(client,
+    group) buffered merge must reproduce the sync per-group aggregation."""
+    sync = _run(setup, "fedavg", "vmap", HETERO_MIXED,
+                plan="nested", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    asy = _run(setup, "fedavg", "vmap", HETERO_MIXED,
+               plan="nested", capacity_tiers=TIERS, runtime="async",
+               adam_eps=HETERO_EPS)
+    _assert_equivalent(sync, asy)
+
+
+def test_homogeneous_plan_is_identical_to_default(setup):
+    """plan="homogeneous" (with tiers set, which it ignores) must be the
+    pre-plan path exactly — same programs, same numbers, every engine
+    (shard_map on the degenerate 1-device mesh; the acceptance bar is all
+    three engines)."""
+    for engine in ("sequential", "vmap", "shard_map"):
+        base = _run(setup, "fedavg", engine, MIXED)
+        homog = _run(setup, "fedavg", engine, MIXED,
+                     plan="homogeneous", capacity_tiers=TIERS)
+        for a, b in zip(jax.tree.leaves(base.params),
+                        jax.tree.leaves(homog.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_hetero_plan_deeper_schedule_all_engines(setup):
+    """Slow lane (nightly): longer horizon + FedProx across all three
+    engines under nested plans — drift stays bounded as rounds accumulate.
+    The partial rounds walk the *deep* groups (3, 4, 5), so every one is
+    clamped differently per tier (3/4/5 vs tier-0's deepest group 2) and no
+    round collapses to the homogeneous path."""
+    spec_t = type(MIXED[1])
+    rounds = [MIXED[0]] + [spec_t(index=i + 1, phase="partial", cycle=0,
+                                  group=g) for i, g in enumerate((3, 4, 5))]
+    for algo in ("fedavg", "fedprox"):
+        seq = _run(setup, algo, "sequential", rounds,
+                   plan="nested", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+        for engine in ("vmap", "shard_map"):
+            other = _run(setup, algo, engine, rounds,
+                         plan="nested", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+            _assert_equivalent(seq, other)
 
 
 # -- shard_map engine -------------------------------------------------------
@@ -259,18 +390,115 @@ print(json.dumps(results))
 """
 
 
-def test_shard_map_matches_sequential_multidevice():
+def _run_subprocess_script(script):
     import json
     import os
     import subprocess
     import sys
 
     res = subprocess.run(
-        [sys.executable, "-c", _SHARD_SCRIPT], capture_output=True, text=True,
+        [sys.executable, "-c", script], capture_output=True, text=True,
         cwd=os.path.dirname(os.path.dirname(__file__)), timeout=900,
     )
     assert res.returncode == 0, res.stderr[-3000:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def test_shard_map_matches_sequential_multidevice():
+    out = _run_subprocess_script(_SHARD_SCRIPT)
+    for case, r in out.items():
+        assert r["param_maxdiff"] <= 1e-5, (case, r)
+        assert r["loss_maxdiff"] <= 1e-5, (case, r)
+        assert r["books_equal"], (case, r)
+
+
+# Heterogeneous plans on a genuinely sharded 2-device mesh: the per-client
+# bitmask crosses device boundaries with its clients (3 clients pad to 4, two
+# per device — the padding client's all-zero mask and zero weights must stay
+# inert), per-group weight sums psum across the mesh, and the async runtime
+# dispatches plan cohorts through the same submesh-bound programs at
+# inflight 1 AND 2.  Slow lane: the nightly job runs it via tier1.sh --slow.
+_HETERO_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys, json
+sys.path.insert(0, "src")
+import jax
+import numpy as np
+jax.config.update("jax_compilation_cache_dir", os.path.abspath(".jax_cache"))
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.2)
+
+from repro.core.schedule import FedPartSchedule
+from repro.data import (VisionDatasetSpec, balanced_eval_set, build_clients,
+                        make_vision_dataset)
+from repro.fl import AlgoConfig, FLRunConfig, resnet_task, run_federated
+
+assert len(jax.devices()) == 2, jax.devices()
+
+def make_setup(client_sizes):
+    spec = VisionDatasetSpec(num_classes=4, image_size=8)
+    X, y = make_vision_dataset(spec, sum(client_sizes), seed=0)
+    Xe, ye = make_vision_dataset(spec, 64, seed=9)
+    eval_set = balanced_eval_set(Xe, ye, per_class=8)
+    bounds = np.cumsum((0,) + tuple(client_sizes))
+    parts = [np.arange(bounds[i], bounds[i + 1])
+             for i in range(len(client_sizes))]
+    return resnet_task("resnet4", num_classes=4), build_clients(X, y, parts), eval_set
+
+TIERS = (0.34, 0.67, 1.0)
+
+def run(setup, algo, engine, rounds, runtime="sync", inflight=1):
+    adapter, clients, eval_set = setup
+    cfg = FLRunConfig(local_epochs=1, batch_size=16, lr=2e-3, adam_eps=1e-2,
+                      algo=AlgoConfig(name=algo), engine=engine, sim_devices=2,
+                      runtime=runtime, max_inflight_cohorts=inflight,
+                      plan="nested", capacity_tiers=TIERS)
+    return run_federated(adapter, clients, eval_set, rounds, cfg)
+
+def diffs(a, b):
+    pd = max(float(np.max(np.abs(np.asarray(x) - np.asarray(z))))
+             for x, z in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)))
+    ld = max(abs(x["loss"] - z["loss"]) for x, z in zip(a.history, b.history))
+    books = (a.comm_total_bytes == b.comm_total_bytes
+             and a.comp_total_flops == b.comp_total_flops)
+    return {"param_maxdiff": pd, "loss_maxdiff": ld, "books_equal": books}
+
+# warm-up FNU + a *group-4* partial round: group 4 sits outside tier 0's
+# nested prefix (3), so both rounds are genuinely heterogeneous (the group-0
+# partial of the fast lane's MIXED would collapse to the legacy path)
+from repro.core.schedule import RoundSpec
+MIXED = [FedPartSchedule(num_groups=6, warmup_rounds=1).rounds()[0],
+         RoundSpec(index=1, phase="partial", cycle=0, group=4)]
+results = {}
+ragged = make_setup((36, 56, 40))         # one bucket, padded 3 -> 4 clients
+for algo in ("fedavg", "fedprox"):
+    seq = run(ragged, algo, "sequential", MIXED)
+    shard = run(ragged, algo, "shard_map", MIXED)
+    results[f"{algo}_hetero"] = diffs(seq, shard)
+    if algo == "fedavg":
+        results["fedavg_hetero_vmap_vs_shard"] = diffs(
+            run(ragged, algo, "vmap", MIXED), shard)
+        # degenerate async with hetero plans through the sharded backend,
+        # merge-driven (inflight=1) and host-parallel (inflight=2: full
+        # participation leaves no second cohort, so it must collapse to the
+        # same barrier arithmetic on width-1 submesh-bound plan programs)
+        results["fedavg_hetero_async_shard"] = diffs(
+            run(ragged, algo, "shard_map", MIXED, runtime="async",
+                inflight=1), shard)
+        results["fedavg_hetero_async_shard_inflight2"] = diffs(
+            run(ragged, algo, "shard_map", MIXED, runtime="async",
+                inflight=2), shard)
+buckets = make_setup((12, 36, 20))        # two buckets, each padded to 2
+results["fedavg_hetero_buckets"] = diffs(
+    run(buckets, "fedavg", "sequential", MIXED[1:]),
+    run(buckets, "fedavg", "shard_map", MIXED[1:]))
+print(json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_hetero_plan_shard_map_multidevice():
+    out = _run_subprocess_script(_HETERO_SHARD_SCRIPT)
     for case, r in out.items():
         assert r["param_maxdiff"] <= 1e-5, (case, r)
         assert r["loss_maxdiff"] <= 1e-5, (case, r)

@@ -39,6 +39,63 @@ def test_pack_unpack_roundtrip():
         np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b), atol=0)
 
 
+def test_mixed_group_boundary_within_one_packed_tensor():
+    """Two *adjacent* blocks of one packed tensor carrying different mask
+    bits — the mixed-group tensor boundary the kernel docstring promises
+    (per-client layer plans make such boundaries routine): the trained block
+    must equal plain Adam, its frozen neighbour must copy through bit-exact,
+    with no bleed across the block edge.  Interpret mode, kernel == ref."""
+    br = 8
+    ks = jax.random.split(jax.random.key(42), 4)
+    # one logical tensor spanning 4 blocks; blocks 1 and 2 are adjacent with
+    # different bits (0|1), as are 2 and 3 (1|0)
+    rows = 4 * br
+    p = jax.random.normal(ks[0], (rows, 128), jnp.float32)
+    g = jax.random.normal(ks[1], (rows, 128), jnp.float32)
+    m = jax.random.normal(ks[2], (rows, 128), jnp.float32) * 0.1
+    v = jnp.abs(jax.random.normal(ks[3], (rows, 128))) * 0.01
+    mask = jnp.asarray([0, 1, 0, 1], jnp.int32)
+    sc = jnp.array([1e-3, 1 - 0.9**3, 1 - 0.999**3, 1e-8], jnp.float32)
+
+    out_k = masked_adam_kernel(p, g, m, v, mask, sc, block_rows=br,
+                               interpret=True)
+    out_r = masked_adam_ref(p, g, m, v, mask, sc, block_rows=br)
+    for a, b, name in zip(out_k, out_r, "pmv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6,
+                                   err_msg=name)
+    # frozen blocks copy through bit-exact; trained blocks move
+    newp = np.asarray(out_k[0])
+    orig = np.asarray(p)
+    for b_idx, bit in enumerate(mask.tolist()):
+        blk = slice(b_idx * br, (b_idx + 1) * br)
+        if bit:
+            assert np.abs(newp[blk] - orig[blk]).max() > 0
+        else:
+            np.testing.assert_array_equal(newp[blk], orig[blk])
+
+
+def test_fused_mixed_group_blocks_in_one_leaf_pin_wrapper_vs_ref():
+    """ops-level pin of the same boundary: a hand-built block mask that
+    flips mid-leaf must behave exactly like running unfused Adam on the
+    masked rows only — the wrapper's pack/unpack cannot smear the boundary."""
+    leaf = jax.random.normal(jax.random.key(7), (16, 128), jnp.float32)
+    params = {"w": leaf}
+    grads = {"w": jnp.full_like(leaf, 0.02)}
+    zeros = {"w": jnp.zeros_like(leaf)}
+    # (16, 128) rows with block_rows=8 -> 2 blocks of one tensor: train the
+    # first, freeze the second
+    bm = np.asarray([1, 0], np.int32)
+    newp, _, _ = ops.fused_masked_adam(
+        params, grads, zeros, {"w": jnp.zeros_like(leaf)}, jnp.int32(1), bm,
+        lr=1e-3, block_rows=8)
+    ref_p, _ = adam_update(grads, adam_init(params), params,
+                           AdamConfig(lr=1e-3))
+    np.testing.assert_allclose(np.asarray(newp["w"][:8]),
+                               np.asarray(ref_p["w"][:8]), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(newp["w"][8:]),
+                                  np.asarray(leaf[8:]))
+
+
 def test_fused_matches_unfused_adam_on_selected_group():
     """On the trainable group the fused kernel must equal plain Adam; frozen
     groups must be untouched."""

@@ -1,0 +1,386 @@
+"""Per-client layer plans: PlanAssigner + per-group participant-weighted
+aggregation (docs/HETEROGENEITY.md).
+
+Property tests (hypothesis when available, seeded deterministic cases always)
+pin the three aggregation invariants the heterogeneity refactor rests on:
+
+* per-group denominators sum **exactly** the weights of the clients whose
+  plan bit is set (integer-valued weights, so float summation order cannot
+  blur "exactly");
+* a group nobody trained is **bit-identical** to the frozen global;
+* a homogeneous plan reproduces today's single-group aggregation
+  **bit-for-bit** (the legacy paths are a special case of the plan path,
+  not a parallel implementation).
+
+The async policy's per-(client, group) merge is pinned against the same
+arithmetic.  Engine-level equivalence under heterogeneous plans lives in
+tests/test_engine_equivalence.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, masking
+from repro.core.partition import build_partition
+from repro.core.schedule import (FULL_NETWORK, PlanAssigner, RoundSpec)
+from tests.conftest import small_params
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAS_HYPOTHESIS = False
+
+PARAMS = small_params()
+PART = build_partition(PARAMS)
+M = PART.num_groups
+
+PARTIAL = RoundSpec(3, "partial", 0, 2)
+FNU = RoundSpec(0, "warmup", -1, FULL_NETWORK)
+
+
+def _client_trees(n, seed):
+    rng = np.random.default_rng(seed)
+    return [jax.tree.map(
+        lambda x: x + jnp.asarray(rng.normal(0, 0.1, x.shape), x.dtype),
+        PARAMS) for _ in range(n)]
+
+
+def _random_plan(n, rng):
+    """Random (n, M) bool plan, every row non-empty."""
+    plan = rng.random((n, M)) < 0.4
+    for i in range(n):
+        if not plan[i].any():
+            plan[i, rng.integers(0, M)] = True
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# PlanAssigner
+# ---------------------------------------------------------------------------
+
+
+def test_homogeneous_assigns_none():
+    pa = PlanAssigner(num_groups=M)          # default kind, default tier
+    assert pa.assign(PARTIAL, [0, 1, 2]) is None
+    assert pa.assign(FNU, [0, 1]) is None
+
+
+def test_full_capacity_tiers_reproduce_round_mask():
+    """nested with every tier at 1.0 == the homogeneous round mask."""
+    pa = PlanAssigner(num_groups=M, kind="nested", capacity_tiers=(1.0, 1.0))
+    plan = pa.assign(PARTIAL, [0, 1, 2])
+    assert (plan == pa.base_mask(PARTIAL)[None, :]).all()
+    assert pa.assign(FNU, [0, 1]).all()
+
+
+def test_nested_prefixes_and_clamping():
+    pa = PlanAssigner(num_groups=M, kind="nested", capacity_tiers=(0.4, 1.0))
+    # tier 0 holds ceil(0.4*5)=2 groups, tier 1 all 5
+    assert pa.prefix_len(0) == 2 and pa.prefix_len(1) == M
+    fnu = pa.assign(FNU, [0, 1])
+    assert fnu[0].astype(int).tolist() == [1, 1, 0, 0, 0]
+    assert fnu[1].all()
+    # partial round for a group beyond tier 0's prefix clamps to its deepest
+    part = pa.assign(RoundSpec(1, "partial", 0, 4), [0, 1])
+    assert part[0].astype(int).tolist() == [0, 1, 0, 0, 0]
+    assert part[1].astype(int).tolist() == [0, 0, 0, 0, 1]
+    # within the prefix the schedule is followed verbatim
+    part = pa.assign(RoundSpec(1, "partial", 0, 1), [0, 1])
+    assert (part == pa.base_mask(RoundSpec(1, "partial", 0, 1))[None, :]).all()
+
+
+def test_random_plans_deterministic_and_cohort_independent():
+    pa = PlanAssigner(num_groups=M, kind="random",
+                      capacity_tiers=(0.4, 0.8), seed=7)
+    a = pa.assign(PARTIAL, [0, 1, 2, 3])
+    b = pa.assign(PARTIAL, [0, 1, 2, 3])
+    np.testing.assert_array_equal(a, b)
+    # a client's draw is a function of (seed, round, client) only — not of
+    # who else is in the cohort (engines may dispatch different cohorts)
+    solo = pa.assign(PARTIAL, [2])
+    np.testing.assert_array_equal(a[2], solo[0])
+    # rows are never empty and respect the tier budget
+    assert a.any(axis=1).all()
+    for i, ci in enumerate([0, 1, 2, 3]):
+        assert a[i].sum() == pa.prefix_len(ci)
+    # a different round redraws
+    c = pa.assign(RoundSpec(4, "partial", 0, 2), [0, 1, 2, 3])
+    assert not (a == c).all()
+
+
+def test_assigner_validation():
+    with pytest.raises(ValueError, match="plan kind"):
+        PlanAssigner(num_groups=M, kind="prefix")
+    with pytest.raises(ValueError, match="capacity tiers"):
+        PlanAssigner(num_groups=M, kind="nested", capacity_tiers=(0.0, 1.0))
+    with pytest.raises(ValueError, match="capacity tiers"):
+        PlanAssigner(num_groups=M, kind="nested", capacity_tiers=(1.5,))
+    # empty tier tuple falls back to the single full-capacity tier
+    assert PlanAssigner(num_groups=M, kind="nested").capacity_tiers == (1.0,)
+
+
+def test_resolve_plan_collapses_homogeneous_and_validates():
+    from repro.fl.batched import resolve_plan
+
+    base = np.zeros((3, M), dtype=bool)
+    base[:, PARTIAL.group] = True
+    assert resolve_plan(base, PARTIAL, M) is None
+    assert resolve_plan(np.ones((3, M), bool), FNU, M) is None
+    assert resolve_plan(None, PARTIAL, M) is None
+    hetero = base.copy()
+    hetero[0, PARTIAL.group] = False
+    hetero[0, 0] = True
+    assert resolve_plan(hetero, PARTIAL, M) is not None
+    with pytest.raises(ValueError, match="at least one group"):
+        resolve_plan(np.zeros((2, M), bool), PARTIAL, M)
+    with pytest.raises(ValueError, match="does not match"):
+        resolve_plan(np.ones((2, M + 1), bool), PARTIAL, M)
+
+
+# ---------------------------------------------------------------------------
+# Aggregation properties (the helpers; hypothesis + seeded deterministic)
+# ---------------------------------------------------------------------------
+
+
+def _check_denominators_exact(plan, int_weights):
+    """Group denominators == the exact sum of participant weights."""
+    denom = aggregation.plan_group_denominators(plan, int_weights)
+    for g in range(plan.shape[1]):
+        assert denom[g] == sum(int(w) for w, bit in zip(int_weights, plan[:, g])
+                               if bit), g
+
+
+def _check_zero_participant_frozen(plan, weights, clients):
+    """Leaves of a zero-trainer group survive bit-identical."""
+    stacked = masking.stack_trees(clients)
+    out = aggregation.aggregate_plan_stacked(PARAMS, stacked, PART, plan, weights)
+    denom = aggregation.plan_group_denominators(plan, weights)
+    checked = 0
+    for (path, leaf), orig in zip(
+            jax.tree_util.tree_flatten_with_path(out)[0],
+            jax.tree.leaves(PARAMS)):
+        ps = "/".join(str(getattr(k, "key", k)) for k in path)
+        if denom[PART.group_of(ps)] == 0 or aggregation.is_local_stat(ps):
+            assert np.asarray(leaf).tobytes() == np.asarray(orig).tobytes(), ps
+            checked += 1
+    return checked
+
+
+def _check_host_stacked_agree(plan, weights, clients):
+    host = aggregation.aggregate_plan(PARAMS, clients, PART, plan, weights)
+    dev = aggregation.aggregate_plan_stacked(
+        PARAMS, masking.stack_trees(clients), PART, plan, weights)
+    for a, b in zip(jax.tree.leaves(host), jax.tree.leaves(dev)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_plan_aggregation_properties_seeded(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 6))
+    plan = _random_plan(n, rng)
+    weights = rng.integers(1, 200, n).astype(np.float32)
+    clients = _client_trees(n, seed)
+    _check_denominators_exact(plan, weights)
+    _check_zero_participant_frozen(plan, weights, clients)
+    _check_host_stacked_agree(plan, weights, clients)
+
+
+def test_zero_participant_group_explicitly():
+    """A plan column that is all-zero keeps that whole group frozen."""
+    n = 3
+    plan = np.ones((n, M), dtype=bool)
+    plan[:, 1] = False
+    clients = _client_trees(n, 123)
+    checked = _check_zero_participant_frozen(
+        plan, np.asarray([3.0, 1.0, 2.0], np.float32), clients)
+    assert checked >= len(PART.paths_in(1))
+
+
+def test_homogeneous_plan_bitwise_equals_legacy_aggregation():
+    """One-hot plans == aggregate_partial_stacked, all-ones ==
+    aggregate_full_stacked, bit-for-bit (same normalise-then-tensordot)."""
+    n = 4
+    clients = _client_trees(n, 11)
+    stacked = masking.stack_trees(clients)
+    w = np.asarray([36, 56, 40, 8], np.float32)
+    for g in range(M):
+        plan = np.zeros((n, M), dtype=bool)
+        plan[:, g] = True
+        a = aggregation.aggregate_plan_stacked(PARAMS, stacked, PART, plan, w)
+        b = aggregation.aggregate_partial_stacked(PARAMS, stacked, PART, g, w)
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+    a = aggregation.aggregate_plan_stacked(
+        PARAMS, stacked, PART, np.ones((n, M), bool), w)
+    b = aggregation.aggregate_full_stacked(PARAMS, stacked, w)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+
+
+def test_plan_aggregation_shape_guards():
+    stacked = masking.stack_trees(_client_trees(2, 0))
+    with pytest.raises(ValueError, match="do not match"):
+        aggregation.aggregate_plan_stacked(
+            PARAMS, stacked, PART, np.ones((3, M), bool), [1.0, 1.0])
+    with pytest.raises(ValueError, match="client trees"):
+        aggregation.aggregate_plan(
+            PARAMS, _client_trees(2, 0), PART, np.ones((3, M), bool),
+            [1.0, 1.0, 1.0])
+    with pytest.raises(ValueError, match="mismatch"):
+        aggregation.plan_group_denominators(np.ones((2, M), bool), [1.0])
+
+
+if HAS_HYPOTHESIS:
+
+    @given(data=st.data())
+    @settings(max_examples=25, deadline=None)
+    def test_plan_denominators_exact_property(data):
+        n = data.draw(st.integers(1, 6))
+        rows = data.draw(st.lists(
+            st.lists(st.booleans(), min_size=M, max_size=M),
+            min_size=n, max_size=n))
+        plan = np.asarray(rows, dtype=bool)
+        for i in range(n):              # plans never have empty rows
+            if not plan[i].any():
+                plan[i, 0] = True
+        weights = np.asarray(
+            data.draw(st.lists(st.integers(1, 10_000), min_size=n,
+                               max_size=n)), np.float32)
+        _check_denominators_exact(plan, weights)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_plan_zero_participant_and_host_device_property(seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 5))
+        plan = _random_plan(n, rng)
+        weights = rng.integers(1, 100, n).astype(np.float32)
+        clients = _client_trees(n, seed % 1000)
+        _check_zero_participant_frozen(plan, weights, clients)
+        _check_host_stacked_agree(plan, weights, clients)
+
+    @given(g=st.integers(0, M - 1), seed=st.integers(0, 2**20))
+    @settings(max_examples=15, deadline=None)
+    def test_homogeneous_bitwise_property(g, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 5))
+        clients = _client_trees(n, seed % 997)
+        stacked = masking.stack_trees(clients)
+        w = rng.integers(1, 100, n).astype(np.float32)
+        plan = np.zeros((n, M), dtype=bool)
+        plan[:, g] = True
+        a = aggregation.aggregate_plan_stacked(PARAMS, stacked, PART, plan, w)
+        b = aggregation.aggregate_partial_stacked(PARAMS, stacked, PART, g, w)
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# Async policy: per-(client, group) merge
+# ---------------------------------------------------------------------------
+
+
+def _plan_update(client_id, groups, tree, weight, version=0):
+    from repro.fl.runtime.policy import ClientUpdate
+
+    groups = tuple(int(g) for g in groups)
+    return ClientUpdate(
+        client_id=client_id, version=version, group=FULL_NETWORK,
+        subtree=aggregation.drop_local_stats(
+            masking.select(tree, PART, groups)),
+        weight=weight, loss=0.5, dispatched_t=0.0, groups=groups)
+
+
+def test_policy_merge_plan_updates_matches_aggregate_plan():
+    """Exponent 0: the buffered per-(client, group) merge must equal the
+    synchronous per-group participant-weighted aggregation."""
+    from repro.fl.runtime.policy import make_policy
+
+    clients = _client_trees(3, 42)
+    plan = np.zeros((3, M), dtype=bool)
+    plan[0, [0, 1]] = True
+    plan[1, [1, 2]] = True
+    plan[2, 4] = True
+    w = [36.0, 56.0, 40.0]
+    ups = [_plan_update(i, np.flatnonzero(plan[i]), clients[i], w[i])
+           for i in range(3)]
+    policy = make_policy("fedbuff", PART)
+    merged, info = policy.merge(PARAMS, ups, version=0)
+    want = aggregation.aggregate_plan(PARAMS, clients, PART, plan, w)
+    for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+    # group 3 had no trainer: frozen verbatim; per-group counts unbundled
+    assert info["groups"] == {0: 1, 1: 2, 2: 1, 4: 1}
+
+
+def test_policy_merge_full_capacity_plan_update_joins_group_denominators():
+    """A full-capacity client under a plan kind carries groups=(0..M-1) —
+    never the legacy FULL_NETWORK sentinel — so its contribution joins each
+    group's participant-weighted average instead of dodging the denominators
+    via a whole-tree splice (the async dispatch records trained group sets
+    from the *raw* plan even when resolve_plan collapses the cohort's
+    execution path)."""
+    from repro.fl.runtime.policy import make_policy
+
+    clients = _client_trees(2, 99)
+    plan = np.zeros((2, M), dtype=bool)
+    plan[0, :] = True                    # full-capacity tier: every group
+    plan[1, 1] = True                    # weak tier: group 1 only
+    w = [30.0, 70.0]
+    ups = [_plan_update(i, np.flatnonzero(plan[i]), clients[i], w[i])
+           for i in range(2)]
+    merged, info = make_policy("fedbuff", PART).merge(PARAMS, ups, version=0)
+    want = aggregation.aggregate_plan(PARAMS, clients, PART, plan, w)
+    for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+    # group 1 counted BOTH clients; every other group only the full one
+    assert info["groups"][1] == 2
+    assert all(info["groups"][g] == 1 for g in range(M) if g != 1)
+
+
+def test_policy_merge_plan_staleness_is_per_client_group():
+    """A stale client's *every* group contribution carries its staleness
+    scale; a fresh client sharing one group dilutes it there only."""
+    from repro.fl.runtime.policy import make_policy
+
+    clients = _client_trees(2, 7)
+    # client 0 (stale, version 0) trained groups {1, 2}; client 1 (fresh,
+    # version 2) trained group {1}
+    ups = [_plan_update(0, (1, 2), clients[0], 10.0, version=0),
+           _plan_update(1, (1,), clients[1], 10.0, version=2)]
+    policy = make_policy("fedbuff", PART, staleness_exponent=1.0)
+    merged, _ = policy.merge(PARAMS, ups, version=2)
+    s0 = policy.staleness_scale(2)                   # stale discount 1/3
+    for path, leaf in jax.tree_util.tree_flatten_with_path(merged)[0]:
+        ps = "/".join(str(getattr(k, "key", k)) for k in path)
+        if aggregation.is_local_stat(ps):
+            continue
+        g = PART.group_of(ps)
+        l0, l1, gl = (np.asarray(x).astype(np.float64) for x in (
+            _leaf_at(clients[0], ps), _leaf_at(clients[1], ps),
+            _leaf_at(PARAMS, ps)))
+        if g == 1:     # both trained: staleness-weighted avg, then m-mixing
+            wa, wb = 10.0 * s0, 10.0
+            avg = (wa * l0 + wb * l1) / (wa + wb)
+            m = (wa + wb) / 20.0
+            want = (1 - m) * gl + m * avg
+        elif g == 2:   # stale client alone: avg == its tree, mixed by s0
+            want = (1 - s0) * gl + s0 * l0
+        else:          # untouched groups stay at the current global
+            want = gl
+        np.testing.assert_allclose(np.asarray(leaf).astype(np.float64), want,
+                                   rtol=1e-5, atol=1e-5, err_msg=ps)
+
+
+def _leaf_at(tree, path_str):
+    node = tree
+    for k in path_str.split("/"):
+        node = node[k]
+    return node
