@@ -94,7 +94,8 @@ def _live_bytes() -> int:
 
 
 def _time_engine(engine_name, adapter, data, params, partition, spec,
-                 *, epochs, batch_size, reps, sim_devices=0, donate=True):
+                 *, epochs, batch_size, reps, sim_devices=0, donate=True,
+                 fused=False):
     """Fresh trainer+engine; one warmup round (compile), then ``reps`` timed
     rounds.  Returns (seconds_per_round, traces, mesh_devices, live_bytes).
 
@@ -105,7 +106,8 @@ def _time_engine(engine_name, adapter, data, params, partition, spec,
     trainer = LocalTrainer(adapter=adapter, partition=partition, algo=algo,
                            adam=AdamConfig(lr=1e-3))
     engine = make_engine(engine_name, trainer=trainer, partition=partition,
-                         algo=algo, sim_devices=sim_devices, donate=donate)
+                         algo=algo, sim_devices=sim_devices, donate=donate,
+                         fused_adam=fused)
     seeds = list(range(len(data)))
     weights = [len(d) for d in data]
     import jax.numpy as jnp
@@ -129,9 +131,17 @@ def _time_engine(engine_name, adapter, data, params, partition, spec,
 
 
 def bench(task="nlp", clients=8, samples_per_client=32, epochs=1, reps=5,
-          engines=("sequential", "vmap"), sim_devices=0, verbose=True):
+          engines=("sequential", "vmap"), sim_devices=0, fused=False,
+          verbose=True):
     adapter, data, params, partition, batch_size = _setup(
         task, clients, samples_per_client)
+    # Opt-in fused masked-Adam local steps (docs/KERNELS.md).  Row names get
+    # a `_fused` tag so a fused run never collides with the pinned unfused
+    # rows the CI baseline gates — the fused lane is exploratory, not gated
+    # (on CPU the kernel runs in interpret mode, so its absolute numbers
+    # measure the emulator, not the TPU path).
+    tag = "_fused" if fused else ""
+    task_tag = f"{task}{tag}"
     rows = []
     for phase, spec in [
         ("partial", RoundSpec(0, "partial", 0, PARTIAL_GROUP)),
@@ -141,12 +151,13 @@ def bench(task="nlp", clients=8, samples_per_client=32, epochs=1, reps=5,
         for name in engines:
             sec, tr, ndev, live = _time_engine(
                 name, adapter, data, params, partition, spec, epochs=epochs,
-                batch_size=batch_size, reps=reps, sim_devices=sim_devices)
+                batch_size=batch_size, reps=reps, sim_devices=sim_devices,
+                fused=fused)
             times[name], traces[name] = sec, tr
             derived = f"traces={tr}"
             extra = ""
             row = {
-                "name": f"engine_{task}_{phase}_{name}_c{clients}",
+                "name": f"engine_{task_tag}_{phase}_{name}_c{clients}",
                 "us_per_call": sec * 1e6,
                 "traces": tr,
             }
@@ -170,11 +181,11 @@ def bench(task="nlp", clients=8, samples_per_client=32, epochs=1, reps=5,
                 sec_nd, _, _, live_nd = _time_engine(
                     name, adapter, data, params, partition, spec,
                     epochs=epochs, batch_size=batch_size, reps=reps,
-                    sim_devices=sim_devices, donate=False)
+                    sim_devices=sim_devices, donate=False, fused=fused)
                 thr_delta = (sec_nd / sec - 1.0) * 100.0
                 mem_delta = (live_nd - live) / 1e6
                 rows.append({
-                    "name": f"engine_{task}_{phase}_{name}_donate_delta_c{clients}",
+                    "name": f"engine_{task_tag}_{phase}_{name}_donate_delta_c{clients}",
                     "us_per_call": (sec_nd - sec) * 1e6,
                     "derived": (f"donate {thr_delta:+.1f}% throughput "
                                 f"{mem_delta:+.2f}MB live saved"),
@@ -191,7 +202,7 @@ def bench(task="nlp", clients=8, samples_per_client=32, epochs=1, reps=5,
                     continue
                 speedup = times["sequential"] / times[name]
                 rows.append({
-                    "name": f"engine_{task}_{phase}_{name}_speedup_c{clients}",
+                    "name": f"engine_{task_tag}_{phase}_{name}_speedup_c{clients}",
                     "us_per_call": 0.0,
                     "derived": f"{speedup:.2f}x",
                     "speedup": speedup,
@@ -226,6 +237,11 @@ def main(argv=None) -> int:
     ap.add_argument("--sim-devices", type=int, default=0,
                     help="shard_map mesh size; on CPU, N>1 forces N "
                          "simulated host devices (must be first jax use)")
+    ap.add_argument("--fused", action="store_true",
+                    help="opt-in: fused Pallas masked-Adam local steps "
+                         "(docs/KERNELS.md); rows are tagged `_fused` and "
+                         "are NOT part of the pinned CI baseline — on CPU "
+                         "the kernel runs in interpret mode")
     ap.add_argument("--json", default="",
                     help="also write rows as machine-readable JSON to PATH")
     args = ap.parse_args(argv)
@@ -240,13 +256,13 @@ def main(argv=None) -> int:
     rows = bench(task=args.task, clients=args.clients,
                  samples_per_client=args.samples_per_client,
                  epochs=args.epochs, reps=args.reps, engines=engines,
-                 sim_devices=args.sim_devices)
+                 sim_devices=args.sim_devices, fused=args.fused)
     if args.json:
         from benchmarks.common import write_json_rows
         write_json_rows(args.json, rows, bench="engine_bench",
                         task=args.task, clients=args.clients,
                         reps=args.reps, engines=list(engines),
-                        sim_devices=args.sim_devices)
+                        sim_devices=args.sim_devices, fused=args.fused)
     return 0
 
 

@@ -2,29 +2,68 @@
 themselves are TPU-targeted and validated in interpret mode by the tests).
 
 - attention: jnp oracle timing across the dry-run-relevant tile shapes.
-- fused masked Adam (ops wrapper, interpret) vs unfused jnp Adam: correctness
-  already tested; here we record the unfused baseline's CPU time and the
-  fused kernel's HBM-traffic model (bytes moved per parameter)."""
+- masked Adam (docs/KERNELS.md): the fused-path update — one elementwise op
+  over the packed ``(rows, 128)`` buffer (``masked_adam_ref``, the kernel's
+  XLA-lowerable oracle) — against the per-leaf tree ``adam_update`` the
+  unfused engines run.  The speedup row is scale-free (it measures op-count
+  amortisation across the leaf axis, not the machine) and is gated in the
+  bench CI lane against ``BENCH_kernels.json``; the end-to-end step row
+  (pack + update + unpack) and the interpret-mode Pallas row are absolute
+  wall-clock, reported but never gated.  The ``derived`` columns carry the
+  ``core.costs`` traffic book (7 vs 14 f32 passes) for roofline context.
 
+    PYTHONPATH=src python benchmarks/kernels_bench.py --json kernels.json
+
+Also exposes ``run(quick=True)`` for ``python -m benchmarks.run``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
 import time
+
+sys.path.insert(0, "src")
+# repo root, so `benchmarks.common` resolves when run as a script too
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import costs
 from repro.kernels.flash_attention import ops as fa
+from repro.kernels.masked_adam import ops as madam_ops
+from repro.kernels.masked_adam.kernel import masked_adam_kernel
+from repro.kernels.masked_adam.ref import masked_adam_ref
 from repro.optim.adam import AdamConfig, adam_init, adam_update
+
+# Pinned masked-Adam workload: a model-like tree of many small leaves — the
+# regime the packed layout exists for (one fused elementwise op instead of
+# one op chain per leaf).  128 leaves x 1024 f32 = 131k params, leaf sizes
+# exact block multiples (no padding skew); at this leaf size the per-leaf op
+# dispatch dominates and the speedup row sits well clear of noise (~6x on
+# the 2-core CI class vs ~1.1x for 16k-element leaves).
+ADAM_LEAVES = 128
+ADAM_LEAF_SIZE = 1024
 
 
 def _time(f, *args, n=5):
+    """Median of ``n`` per-call timings (scheduler spikes on the shared
+    2-core CI runners land in the tail, and the gated row is a *ratio* of
+    two of these — the median keeps it a property of the op graph)."""
     f(*args)  # warmup/compile
-    t0 = time.time()
+    samples = []
     for _ in range(n):
+        t0 = time.perf_counter()
         out = f(*args)
-    jax.block_until_ready(out)
-    return 1e6 * (time.time() - t0) / n
+        jax.block_until_ready(out)
+        samples.append(time.perf_counter() - t0)
+    return 1e6 * float(np.median(samples))
 
 
-def run(quick: bool = True):
+def _attention_rows(quick: bool, reps: int):
     rows = []
     shapes = [(1, 512, 8, 64)] if quick else [(1, 512, 8, 64), (2, 1024, 8, 128)]
     for b, s, h, d in shapes:
@@ -33,27 +72,131 @@ def run(quick: bool = True):
         k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
         v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
         ref = jax.jit(lambda q, k, v: fa.attention_reference(q, k, v))
-        us = _time(ref, q, k, v)
+        us = _time(ref, q, k, v, n=reps)
         flops = 4 * b * h * s * s * d
         rows.append({
             "name": f"kernels/attention_ref_b{b}s{s}h{h}d{d}",
             "us_per_call": us,
             "derived": f"cpu_gflops={flops / us / 1e3:.2f}",
         })
+    return rows
 
-    # unfused Adam CPU baseline
-    n = 1 << 20
-    p = {"w": jax.random.normal(jax.random.key(1), (n,))}
-    g = {"w": jax.random.normal(jax.random.key(2), (n,))}
-    st = adam_init(p)
+
+def _adam_tree(n_leaves=ADAM_LEAVES, leaf_size=ADAM_LEAF_SIZE):
+    keys = jax.random.split(jax.random.key(1), 2 * n_leaves)
+    params = {f"l{i:03d}": jax.random.normal(keys[i], (leaf_size,), jnp.float32)
+              for i in range(n_leaves)}
+    grads = {f"l{i:03d}": jax.random.normal(keys[n_leaves + i], (leaf_size,),
+                                            jnp.float32)
+             for i in range(n_leaves)}
+    return params, grads
+
+
+def _masked_adam_rows(reps: int):
+    rows = []
+    params, grads = _adam_tree()
+    n = ADAM_LEAVES * ADAM_LEAF_SIZE
     cfg = AdamConfig()
-    upd = jax.jit(lambda g, s, p: adam_update(g, s, p, cfg))
-    us = _time(upd, g, st, p)
-    # fused kernel bytes model: reads p,g,m,v + writes p,m,v = 7 passes
-    # (f32) = 28 B/param; unfused XLA CPU measured below for contrast.
+    state = adam_init(params)
+
+    # unfused: the per-leaf tree update every non-fused engine path runs
+    unfused = jax.jit(lambda g, s, p: adam_update(g, s, p, cfg))
+    us_unfused = _time(unfused, grads, state, params, n=reps)
     rows.append({
-        "name": "kernels/adam_unfused_1M",
-        "us_per_call": us,
-        "derived": f"GBps={(n * 28) / us / 1e3:.2f} fused_model=28B/param",
+        "name": f"kernels/adam_unfused_tree_{ADAM_LEAVES}leaves",
+        "us_per_call": us_unfused,
+        "derived": (f"leaves={ADAM_LEAVES} "
+                    f"model={costs.adam_step_bytes(n, fused=False)}B"),
+    })
+
+    # fused-path update op: the kernel's math on the packed (rows, 128)
+    # buffer (masked_adam_ref is the XLA-lowerable oracle of the Pallas
+    # kernel — same op graph the fused engines scan on CPU backends)
+    pp, meta = madam_ops.pack(params)
+    pg, _ = madam_ops.pack(grads)
+    m = jnp.zeros_like(pp)
+    v = jnp.zeros_like(pp)
+    mask = jnp.ones((pp.shape[0] // 8,), jnp.int32)
+    sc = jnp.array([1e-3, 1 - 0.9, 1 - 0.999, 1e-8], jnp.float32)
+    fused = jax.jit(lambda p, g, m, v: masked_adam_ref(p, g, m, v, mask, sc))
+    us_fused = _time(fused, pp, pg, m, v, n=reps)
+    rows.append({
+        "name": "kernels/masked_adam_packed_update",
+        "us_per_call": us_fused,
+        "derived": (f"rows={pp.shape[0]} "
+                    f"model={costs.adam_step_bytes(n, fused=True)}B"),
+    })
+
+    # the gated scale-free row: op-count amortisation of the packed layout
+    speedup = us_unfused / us_fused
+    rows.append({
+        "name": "kernels/masked_adam_fused_vs_unfused_speedup",
+        "us_per_call": 0.0,
+        "speedup": speedup,
+        "derived": (f"{speedup:.2f}x "
+                    f"traffic_bound={costs.fused_adam_traffic_ratio():.2f}x"),
+    })
+
+    # end-to-end fused step as the engines run it (pack + update + unpack):
+    # absolute wall-clock, reported but never gated
+    def step(p_tree, g_tree, m, v):
+        pp, meta = madam_ops.pack(p_tree)
+        pg, _ = madam_ops.pack(g_tree)
+        np_, nm, nv = masked_adam_ref(pp, pg, m, v, mask, sc)
+        return madam_ops.unpack(np_, meta), nm, nv
+
+    e2e = jax.jit(step)
+    us_e2e = _time(e2e, params, grads, m, v, n=reps)
+    rows.append({
+        "name": "kernels/masked_adam_step_pack_update_unpack",
+        "us_per_call": us_e2e,
+        "derived": f"pack_overhead={us_e2e / us_fused:.2f}x",
+    })
+
+    # interpret-mode Pallas kernel (tiny: interpret is an emulator, the row
+    # exists to keep the real kernel path timed at all on CPU CI)
+    rows_small = 256
+    ks = jax.random.split(jax.random.key(2), 4)
+    args = [jax.random.normal(k, (rows_small, 128), jnp.float32) for k in ks]
+    args[3] = jnp.abs(args[3])
+    small_mask = jnp.ones((rows_small // 8,), jnp.int32)
+    kern = lambda p, g, m, v: masked_adam_kernel(
+        p, g, m, v, small_mask, sc, interpret=True)
+    us_interp = _time(kern, *args, n=max(2, reps // 2))
+    rows.append({
+        "name": "kernels/masked_adam_pallas_interpret_32k",
+        "us_per_call": us_interp,
+        "derived": "interpret-mode emulator, absolute only",
     })
     return rows
+
+
+def run(quick: bool = True, reps: int = 5):
+    return _attention_rows(quick, reps) + _masked_adam_rows(reps)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also time the larger attention shapes")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--json", default="",
+                    help="also write rows as machine-readable JSON to PATH")
+    args = ap.parse_args(argv)
+    from benchmarks.common import enable_compile_cache
+    enable_compile_cache()
+    rows = run(quick=not args.full, reps=args.reps)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r.get('derived', '')}")
+    if args.json:
+        from benchmarks.common import write_json_rows
+        write_json_rows(args.json, rows, bench="kernels_bench",
+                        reps=args.reps, full=bool(args.full),
+                        adam_leaves=ADAM_LEAVES,
+                        adam_leaf_size=ADAM_LEAF_SIZE)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -147,6 +147,56 @@ def plan_step_flops(
 
 
 # ---------------------------------------------------------------------------
+# Optimizer-step kernel book (fused masked Adam, docs/KERNELS.md)
+# ---------------------------------------------------------------------------
+#
+# The local Adam step is memory-bound: ~12 flops/param against 4 B/param per
+# array pass.  The book below models the HBM traffic of the two realisations
+# the engines can take — it feeds ``benchmarks/kernels_bench.py``'s derived
+# columns and the roofline notes in docs/KERNELS.md, and is deliberately
+# *separate* from the paper-metric books above (``comm_cost``/``comp_cost``
+# stay byte-for-byte what tests/test_engine_equivalence.py pins).
+
+F32_BYTES = 4
+#: fused Pallas kernel: p,g,m,v read + p,m,v written, one pass each.
+FUSED_ADAM_PASSES = 7
+#: unfused element-wise XLA lowering of the same update: m, v, m-hat, v-hat
+#: and p each materialise as a separate read-modify-write (3+3+2+2+4 passes).
+UNFUSED_ADAM_PASSES = 14
+#: per trained param: 2 EMA updates (4), bias corrections (2), sqrt+eps+div
+#: (3), lr scale + subtract (2), mask select (1).
+ADAM_FLOPS_PER_PARAM = 12
+
+
+def adam_step_bytes(n_params: int, *, fused: bool,
+                    trained_fraction: float = 1.0) -> int:
+    """HBM bytes of one masked-Adam step over ``n_params`` f32 params.
+
+    The fused kernel streams every block once (4 read passes) but skips the
+    write-back of frozen blocks (``@pl.when`` on the block mask), so writes
+    scale with the trained fraction; the unfused lowering reads and writes
+    everything regardless of the mask."""
+    if not 0.0 <= trained_fraction <= 1.0:
+        raise ValueError(f"trained_fraction must be in [0,1], got {trained_fraction}")
+    passes = (4.0 + 3.0 * trained_fraction) if fused \
+        else float(UNFUSED_ADAM_PASSES)
+    return int(F32_BYTES * passes * n_params)
+
+
+def adam_step_flops(n_params: int, trained_fraction: float = 1.0) -> int:
+    """Arithmetic cost of the same step — trained blocks only; frozen blocks
+    are pure copies in both realisations."""
+    return int(ADAM_FLOPS_PER_PARAM * n_params * trained_fraction)
+
+
+def fused_adam_traffic_ratio(trained_fraction: float = 1.0) -> float:
+    """Unfused/fused byte ratio: the roofline *upper bound* on the speedup
+    the fused kernel can deliver on a memory-bound part (2.0x at full
+    training, 3.5x when every block is frozen)."""
+    return UNFUSED_ADAM_PASSES / (4.0 + 3.0 * trained_fraction)
+
+
+# ---------------------------------------------------------------------------
 # Virtual time (async runtime)
 # ---------------------------------------------------------------------------
 

@@ -97,13 +97,45 @@ from repro.core.schedule import FULL_NETWORK, RoundSpec, round_base_mask
 from repro.data.pipeline import ClientDataset, stack_client_batches
 from repro.fl.algorithms import AlgoConfig
 from repro.fl.client import LocalTrainer
+from repro.kernels.masked_adam import ops as madam_ops
 from repro.optim.adam import adam_init
+from repro.optim.partial import fused_adam_init, guard_fused_config
 
 PyTree = Any
 
 ENGINES = ("sequential", "vmap", "shard_map")
 
 CLIENT_AXIS = "clients"  # mesh axis name the shard_map engine reduces over
+
+FUSED_BLOCK_ROWS = 8     # kernel block granularity the fused engines pack to
+
+
+def _transmitted_rows(params: PyTree, partition: Partition, groups,
+                      block_rows: int = FUSED_BLOCK_ROWS) -> np.ndarray:
+    """Static packed-row indices of the round's *transmitted* blocks: the
+    trainable ``groups``' leaves minus BN running moments — exactly the
+    subtree the unfused shard_map path selects + ``drop_local_stats``-es
+    before its psum, expressed in ``ops.pack`` layout."""
+    bm = madam_ops.block_mask_for_group(
+        params, partition, groups, block_rows,
+        exclude=aggregation.is_local_stat)
+    blocks = np.flatnonzero(bm)
+    return (blocks[:, None] * block_rows
+            + np.arange(block_rows)[None, :]).reshape(-1)
+
+
+def _plan_rows(params: PyTree, partition: Partition,
+               block_rows: int = FUSED_BLOCK_ROWS
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Static (rows, per-row group ids) for plan rounds: every non-stat
+    block travels (any client may have trained it), each row weighted by its
+    group's per-client effective weight."""
+    gids = madam_ops.block_group_ids(
+        params, partition, block_rows, exclude=aggregation.is_local_stat)
+    blocks = np.flatnonzero(gids >= 0)
+    rows = (blocks[:, None] * block_rows
+            + np.arange(block_rows)[None, :]).reshape(-1)
+    return rows, np.repeat(gids[blocks], block_rows)
 
 
 def resolve_plan(plan, spec: RoundSpec, num_groups: int):
@@ -136,7 +168,12 @@ class SequentialEngine:
     trainer: LocalTrainer
     partition: Partition
     algo: AlgoConfig
+    fused_adam: bool = False
     name: str = "sequential"
+
+    def __post_init__(self):
+        if self.fused_adam:
+            guard_fused_config(self.trainer.adam)
 
     @property
     def trace_count(self) -> int:
@@ -172,6 +209,7 @@ class SequentialEngine:
                 prev_params=prev_params[i] if prev_params is not None else None,
                 step_tracker=tracker if i == 0 else None,
                 groups=groups_i,
+                fused=self.fused_adam,
             )
             losses.append(loss)
             if keep_locals:
@@ -215,6 +253,7 @@ class SequentialEngine:
                 prev_params=prev_params[i] if prev_params is not None else None,
                 groups=(tuple(int(g) for g in np.flatnonzero(plan[i]))
                         if plan is not None else None),
+                fused=self.fused_adam,
             )
             locals_.append(local)
             losses.append(loss)
@@ -272,12 +311,15 @@ class _BatchedEngineBase:
     partition: Partition
     algo: AlgoConfig
     donate: bool = True
+    fused_adam: bool = False
 
     def __post_init__(self):
         self.trace_count = 0
         self._local_fns: dict[tuple[int, bool], Callable] = {}
         self._agg_fns: dict[Any, Callable] = {}
         self._cohort_fns: dict[tuple[int, bool], Callable] = {}
+        if self.fused_adam:
+            guard_fused_config(self.trainer.adam)
 
     # Donation sets (active when ``donate``).  Only buffers whose shapes can
     # actually alias an output are donated — donating the stacked
@@ -333,7 +375,22 @@ class _BatchedEngineBase:
 
     def _one_client_fn(self, group: int) -> Callable:
         """Single-client local round (``_scan_local_steps`` over the pruned
-        full/partial step for ``group``)."""
+        full/partial step for ``group``).  With ``fused_adam`` the step is
+        the Pallas masked-Adam kernel over the packed (rows, 128) layout
+        instead: same scan, same signature, packed optimizer state
+        (docs/KERNELS.md)."""
+        if self.fused_adam:
+            step_fn = self.trainer.make_fused_step(
+                None if group < 0 else group, FUSED_BLOCK_ROWS)
+
+            def one_client(global_params, inputs, labels, step_valid, prev):
+                opt0 = fused_adam_init(global_params, FUSED_BLOCK_ROWS)
+                return self._scan_local_steps(
+                    step_fn, global_params, opt0, inputs, labels, step_valid,
+                    prev)
+
+            return one_client
+
         step_fn = (
             self.trainer.make_full_step()
             if group < 0
@@ -364,7 +421,28 @@ class _BatchedEngineBase:
         exactly the frozen context the pruned form sees (equivalence to the
         sequential oracle pinned in tests/test_engine_equivalence.py).
         Client-local statistics (BN running moments) always update,
-        mirroring the pruned path's stats splice."""
+        mirroring the pruned path's stats splice.
+
+        With ``fused_adam`` the per-client bitmask instead becomes a traced
+        per-*block* kernel mask (``ops.plan_block_mask``): untrained blocks
+        are frozen inside the kernel itself, so no per-leaf re-pinning is
+        needed — still one compiled program for every plan row."""
+        if self.fused_adam:
+            plan_step = self.trainer.make_fused_plan_step(FUSED_BLOCK_ROWS)
+
+            def one_client(global_params, inputs, labels, step_valid, prev,
+                           gmask):
+                opt0 = fused_adam_init(global_params, FUSED_BLOCK_ROWS)
+
+                def step_fn(p, o, x, y, gp, pv):
+                    return plan_step(p, o, x, y, gp, pv, gmask)
+
+                return self._scan_local_steps(
+                    step_fn, global_params, opt0, inputs, labels, step_valid,
+                    prev)
+
+            return one_client
+
         step_fn = self.trainer.make_full_step()
         partition = self.partition
 
@@ -782,19 +860,33 @@ class ShardMapEngine(_BatchedEngineBase):
         partition = self.partition
         prev_axis = 0 if stacked_prev else None
 
+        fused = self.fused_adam
+
         def device_round(global_params, inputs, labels, step_valid, prev, w_norm):
             self.trace_count += 1
             locals_stacked, losses = jax.vmap(
                 one_client, in_axes=(None, 0, 0, 0, prev_axis)
             )(global_params, inputs, labels, step_valid, prev)
-            sub = (
-                locals_stacked if group < 0
-                else masking.select(locals_stacked, partition, group)
-            )
-            sub = aggregation.drop_local_stats(sub)
-            update = jax.tree.map(
-                lambda x: jnp.tensordot(w_norm, x.astype(jnp.float32), axes=1), sub
-            )
+            if fused:
+                # Fused weight-scale epilogue: pack the stacked locals back
+                # into kernel layout and reduce only the *transmitted* rows
+                # (trainable groups minus BN stats) — one gather + tensordot
+                # instead of a per-leaf tree, and only scaled transmitted
+                # blocks ever leave the device.
+                packed, _ = madam_ops.pack_stacked(
+                    locals_stacked, FUSED_BLOCK_ROWS)
+                sel = tuple(range(partition.num_groups)) if group < 0 else group
+                tx = _transmitted_rows(global_params, partition, sel)
+                update = jnp.tensordot(w_norm, packed[:, tx], axes=1)
+            else:
+                sub = (
+                    locals_stacked if group < 0
+                    else masking.select(locals_stacked, partition, group)
+                )
+                sub = aggregation.drop_local_stats(sub)
+                update = jax.tree.map(
+                    lambda x: jnp.tensordot(w_norm, x.astype(jnp.float32), axes=1), sub
+                )
             update = jax.lax.psum(update, CLIENT_AXIS)
             if stacked_prev:
                 return update, losses, locals_stacked
@@ -829,20 +921,33 @@ class ShardMapEngine(_BatchedEngineBase):
         partition = self.partition
         prev_axis = 0 if stacked_prev else None
 
+        fused = self.fused_adam
+
         def device_round(global_params, inputs, labels, step_valid, prev,
                          gmask, eff_w):
             self.trace_count += 1
             locals_stacked, losses = jax.vmap(
                 one_client, in_axes=(None, 0, 0, 0, prev_axis, 0)
             )(global_params, inputs, labels, step_valid, prev, gmask)
-            sub = aggregation.drop_local_stats(locals_stacked)
+            if fused:
+                # Fused plan epilogue: every non-stat row travels (any client
+                # may have trained it), weighted per row by its group's
+                # per-client effective weight — one einsum over the packed
+                # buffer instead of a per-leaf tree walk.
+                packed, _ = madam_ops.pack_stacked(
+                    locals_stacked, FUSED_BLOCK_ROWS)
+                rows, gids_rows = _plan_rows(global_params, partition)
+                wrow = eff_w[:, gids_rows]                     # (C, T)
+                update = jnp.einsum("ct,ctl->tl", wrow, packed[:, rows])
+            else:
+                sub = aggregation.drop_local_stats(locals_stacked)
 
-            def _wsum(path, x):
-                g = partition.group_of(
-                    "/".join(masking._entry_str(e) for e in path))
-                return jnp.tensordot(eff_w[:, g], x.astype(jnp.float32), axes=1)
+                def _wsum(path, x):
+                    g = partition.group_of(
+                        "/".join(masking._entry_str(e) for e in path))
+                    return jnp.tensordot(eff_w[:, g], x.astype(jnp.float32), axes=1)
 
-            update = jax.tree_util.tree_map_with_path(_wsum, sub)
+                update = jax.tree_util.tree_map_with_path(_wsum, sub)
             update = jax.lax.psum(update, CLIENT_AXIS)
             if stacked_prev:
                 return update, losses, locals_stacked
@@ -996,16 +1101,29 @@ class ShardMapEngine(_BatchedEngineBase):
             return self._agg_fns[key]
         partition = self.partition
 
-        def splice(global_params, updates):
-            self.trace_count += 1
-            summed = jax.tree.map(lambda *xs: sum(xs), *updates)
-            ref = (
-                global_params if group < 0
-                else masking.select(global_params, partition, group)
-            )
-            ref = aggregation.drop_local_stats(ref)
-            averaged = jax.tree.map(lambda s, r: s.astype(r.dtype), summed, ref)
-            return masking.tree_update(global_params, averaged)
+        if self.fused_adam:
+            def splice(global_params, updates):
+                # Scatter the summed transmitted rows into the packed global
+                # and unpack — ``unpack`` restores each leaf's recorded
+                # dtype, so untransmitted f32 leaves round-trip bit-exact.
+                self.trace_count += 1
+                summed = jax.tree.map(lambda *xs: sum(xs), *updates)
+                pg, meta = madam_ops.pack(global_params, FUSED_BLOCK_ROWS)
+                sel = tuple(range(partition.num_groups)) if group < 0 else group
+                tx = _transmitted_rows(global_params, partition, sel)
+                pg = pg.at[tx].set(summed)
+                return madam_ops.unpack(pg, meta)
+        else:
+            def splice(global_params, updates):
+                self.trace_count += 1
+                summed = jax.tree.map(lambda *xs: sum(xs), *updates)
+                ref = (
+                    global_params if group < 0
+                    else masking.select(global_params, partition, group)
+                )
+                ref = aggregation.drop_local_stats(ref)
+                averaged = jax.tree.map(lambda s, r: s.astype(r.dtype), summed, ref)
+                return masking.tree_update(global_params, averaged)
 
         self._agg_fns[key] = jax.jit(splice, donate_argnums=self._donate_params())
         return self._agg_fns[key]
@@ -1021,18 +1139,31 @@ class ShardMapEngine(_BatchedEngineBase):
             return self._agg_fns[key]
         partition = self.partition
 
-        def splice(global_params, updates, trained):
-            self.trace_count += 1
-            summed = jax.tree.map(lambda *xs: sum(xs), *updates)
-            ref = aggregation.drop_local_stats(global_params)
+        if self.fused_adam:
+            def splice(global_params, updates, trained):
+                # Row-granular zero-trainer freeze: a row whose group nobody
+                # trained keeps the packed global's value bit-exact, exactly
+                # like the unfused leaf-granular ``jnp.where(trained[g], ...)``.
+                self.trace_count += 1
+                summed = jax.tree.map(lambda *xs: sum(xs), *updates)
+                pg, meta = madam_ops.pack(global_params, FUSED_BLOCK_ROWS)
+                rows, gids_rows = _plan_rows(global_params, partition)
+                keep = trained[jnp.asarray(gids_rows)][:, None]
+                pg = pg.at[rows].set(jnp.where(keep, summed, pg[rows]))
+                return madam_ops.unpack(pg, meta)
+        else:
+            def splice(global_params, updates, trained):
+                self.trace_count += 1
+                summed = jax.tree.map(lambda *xs: sum(xs), *updates)
+                ref = aggregation.drop_local_stats(global_params)
 
-            def _choose(path, s, r):
-                g = partition.group_of(
-                    "/".join(masking._entry_str(e) for e in path))
-                return jnp.where(trained[g], s.astype(r.dtype), r)
+                def _choose(path, s, r):
+                    g = partition.group_of(
+                        "/".join(masking._entry_str(e) for e in path))
+                    return jnp.where(trained[g], s.astype(r.dtype), r)
 
-            averaged = jax.tree_util.tree_map_with_path(_choose, summed, ref)
-            return masking.tree_update(global_params, averaged)
+                averaged = jax.tree_util.tree_map_with_path(_choose, summed, ref)
+                return masking.tree_update(global_params, averaged)
 
         self._agg_fns[key] = jax.jit(splice, donate_argnums=self._donate_params())
         return self._agg_fns[key]
@@ -1124,6 +1255,7 @@ def make_engine(
     algo: AlgoConfig,
     sim_devices: int = 0,
     donate: bool = True,
+    fused_adam: bool = False,
 ):
     """Build a client-simulation engine by name.
 
@@ -1140,13 +1272,20 @@ def make_engine(
     *consumes* its params argument — callers must thread the returned params
     into the next round (``run_federated`` does; pass ``donate=False`` to
     keep re-feeding the same tree, e.g. for fixed-workload benchmarking).
+
+    ``fused_adam`` routes every local step through the Pallas masked-Adam
+    kernel (interpret mode off-TPU — docs/KERNELS.md): packed (rows, 128)
+    optimizer state, block-masked fused update, and on the shard_map engine
+    a packed weight-scale epilogue feeding the on-mesh psum.
     """
     if name == "sequential":
-        return SequentialEngine(trainer=trainer, partition=partition, algo=algo)
+        return SequentialEngine(trainer=trainer, partition=partition, algo=algo,
+                                fused_adam=fused_adam)
     if name == "vmap":
         return VmapEngine(trainer=trainer, partition=partition, algo=algo,
-                          donate=donate)
+                          donate=donate, fused_adam=fused_adam)
     if name == "shard_map":
         return ShardMapEngine(trainer=trainer, partition=partition, algo=algo,
-                              donate=donate, devices=sim_devices)
+                              donate=donate, devices=sim_devices,
+                              fused_adam=fused_adam)
     raise ValueError(f"unknown engine {name!r}; expected one of {ENGINES}")

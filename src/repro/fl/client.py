@@ -16,11 +16,14 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import masking
+from repro.core import aggregation, masking
 from repro.core.partition import Partition
 from repro.fl.algorithms import AlgoConfig, augment_loss
 from repro.fl.tasks import TaskAdapter
-from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.kernels.masked_adam import ops as madam_ops
+from repro.kernels.masked_adam.kernel import masked_adam_kernel
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+from repro.optim.partial import fused_adam_init, guard_fused_config
 
 PyTree = Any
 
@@ -37,6 +40,7 @@ class LocalTrainer:
         self._full_step = jax.jit(self._counted(self.make_full_step()))
         self._partial_steps: dict[int, Callable] = {}
         self._plan_steps: dict[tuple[int, ...], Callable] = {}
+        self._fused_steps: dict[Any, Callable] = {}
 
     def _counted(self, fn: Callable) -> Callable:
         """Wrap a step fn so each XLA trace bumps ``trace_count`` (the wrapper
@@ -111,6 +115,95 @@ class LocalTrainer:
 
         return step
 
+    # -- fused (Pallas masked-Adam) step builders ---------------------------
+
+    def _fused_update(self, params, grads, opt_state, block_mask, block_rows):
+        """Shared tail of every fused step: pack params/grads into the kernel
+        layout, run the fused masked Adam (m/v stay packed across steps —
+        ``optim.partial.fused_adam_init``), unpack the new params."""
+        step_i = opt_state.step + 1
+        pp, meta = madam_ops.pack(params, block_rows)
+        pg, _ = madam_ops.pack(grads, block_rows)
+        scalars = madam_ops.adam_scalars(
+            step_i, self.adam.lr, self.adam.b1, self.adam.b2, self.adam.eps)
+        np_, nm, nv = masked_adam_kernel(
+            pp, pg, opt_state.m, opt_state.v, jnp.asarray(block_mask),
+            scalars, b1=self.adam.b1, b2=self.adam.b2, block_rows=block_rows,
+            interpret=madam_ops.default_interpret(),
+        )
+        return madam_ops.unpack(np_, meta), AdamState(step_i, nm, nv)
+
+    def make_fused_step(self, group=None, block_rows: int = 8):
+        """Raw (unjitted) fused step: FNU-shaped full-tree gradient, one
+        fused kernel pass with a *static* per-block mask — ``group=None``
+        trains every layer group (FNU), an int / sequence trains that
+        homogeneous group set, and frozen blocks copy through bit-exact
+        (Eq. 1's masked form; equivalence with the pruned partial step is
+        pinned in tests).  BN running moments are excluded from the kernel
+        mask and spliced fresh from the forward pass, exactly like the
+        unfused steps.  ``opt_state`` is the packed ``fused_adam_init``
+        state."""
+        guard_fused_config(self.adam)
+        partition = self.partition
+
+        def step(params, opt_state, inputs, labels, global_params, prev_params):
+            def loss_fn(p):
+                loss = self._total_loss(p, inputs, labels, global_params, prev_params)
+                stats = self.adapter.stats(p, inputs)
+                return loss, stats
+
+            (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            sel = tuple(range(partition.num_groups)) if group is None else group
+            bm = madam_ops.block_mask_for_group(
+                params, partition, sel, block_rows,
+                exclude=aggregation.is_local_stat)
+            new_params, new_state = self._fused_update(
+                params, grads, opt_state, bm, block_rows)
+            if stats is not None:
+                new_params = masking.tree_update(new_params, stats)
+            return new_params, new_state, loss
+
+        return step
+
+    def make_fused_plan_step(self, block_rows: int = 8):
+        """Fused step for per-client layer plans: same kernel pass, but the
+        block mask is *traced* from the client's ``(M,)`` group bitmask
+        (seventh argument) via static per-block group ids — one compiled
+        program serves every plan row, mirroring ``_one_client_plan_fn``'s
+        contract without the per-leaf re-pinning (the kernel mask already
+        freezes untrained blocks)."""
+        guard_fused_config(self.adam)
+        partition = self.partition
+
+        def step(params, opt_state, inputs, labels, global_params,
+                 prev_params, gmask):
+            def loss_fn(p):
+                loss = self._total_loss(p, inputs, labels, global_params, prev_params)
+                stats = self.adapter.stats(p, inputs)
+                return loss, stats
+
+            (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            gids = madam_ops.block_group_ids(
+                params, partition, block_rows,
+                exclude=aggregation.is_local_stat)
+            bm = madam_ops.plan_block_mask(gids, gmask)
+            new_params, new_state = self._fused_update(
+                params, grads, opt_state, bm, block_rows)
+            if stats is not None:
+                new_params = masking.tree_update(new_params, stats)
+            return new_params, new_state, loss
+
+        return step
+
+    def fused_step(self, group=None) -> Callable:
+        """Jitted cache over ``make_fused_step`` keys (None / int / tuple)."""
+        key = group if (group is None or isinstance(group, int)) \
+            else tuple(sorted(int(g) for g in group))
+        if key not in self._fused_steps:
+            self._fused_steps[key] = jax.jit(
+                self._counted(self.make_fused_step(key)))
+        return self._fused_steps[key]
+
     def partial_step(self, group: int) -> Callable:
         if group not in self._partial_steps:
             self._partial_steps[group] = jax.jit(
@@ -142,12 +235,14 @@ class LocalTrainer:
         prev_params: PyTree | None = None,
         step_tracker=None,
         groups: Sequence[int] | None = None,
+        fused: bool = False,
     ) -> tuple[PyTree, float]:
         """Train locally; returns (updated full params, mean loss).
 
         ``groups`` (per-client layer plans) overrides ``group`` with a *set*
         of trainable layer groups; a set covering every group is the FNU
-        step."""
+        step.  ``fused`` routes every step through the Pallas masked-Adam
+        kernel (docs/KERNELS.md) with packed optimizer state."""
         params = global_params
         prev = prev_params if prev_params is not None else global_params
         if groups is not None:
@@ -155,7 +250,11 @@ class LocalTrainer:
             full = len(groups) == self.partition.num_groups
         else:
             full = group < 0
-        if full:
+        if fused:
+            opt_state = fused_adam_init(params)
+            step = self.fused_step(
+                None if full else (groups if groups is not None else group))
+        elif full:
             opt_state = adam_init(params)
             step = self._full_step
         elif groups is not None:

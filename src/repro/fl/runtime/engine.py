@@ -158,7 +158,7 @@ def run_federated_async(
     engine = make_engine(
         run_cfg.engine, trainer=trainer, partition=partition,
         algo=run_cfg.algo, sim_devices=run_cfg.sim_devices,
-        donate=run_cfg.donate_buffers,
+        donate=run_cfg.donate_buffers, fused_adam=run_cfg.fused_adam,
     )
     policy = make_policy(
         run_cfg.async_policy, partition,

@@ -79,6 +79,7 @@ class FLRunConfig:
     engine: str = "sequential"      # "sequential" | "vmap" | "shard_map"
     sim_devices: int = 0            # shard_map mesh size (0 = all devices)
     donate_buffers: bool = True     # donate params into the agg jit + MOON prev stack (batched engines)
+    fused_adam: bool = False        # Pallas masked-Adam local steps (docs/KERNELS.md)
     # -- per-client layer plans (heterogeneous fleets, docs/HETEROGENEITY.md)
     plan: str = "homogeneous"       # "homogeneous" | "nested" | "random"
     capacity_tiers: tuple[float, ...] = ()  # tier capacities in (0,1]; () = one full-capacity tier
@@ -151,7 +152,7 @@ def run_federated(
     engine = make_engine(
         run_cfg.engine, trainer=trainer, partition=partition,
         algo=run_cfg.algo, sim_devices=run_cfg.sim_devices,
-        donate=run_cfg.donate_buffers,
+        donate=run_cfg.donate_buffers, fused_adam=run_cfg.fused_adam,
     )
     assigner = PlanAssigner(
         num_groups=partition.num_groups, kind=run_cfg.plan,

@@ -110,3 +110,36 @@ def masked_adam_kernel(
         input_output_aliases={2: 0, 4: 1, 5: 2},
         interpret=interpret,
     )(block_mask, scalars, p, g, m, v)
+
+
+def masked_adam_stacked(
+    p: jax.Array,           # (clients, rows, 128)
+    g: jax.Array,
+    m: jax.Array,           # f32
+    v: jax.Array,           # f32
+    block_masks: jax.Array, # (clients, num_blocks) int32
+    scalars: jax.Array,     # (4,) f32, shared across clients
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Client-stacked variant: fold the client axis into the row-block grid
+    so one ``pallas_call`` sweeps every client's blocks.  Valid because each
+    client's ``rows`` is a block multiple (``ops.pack_stacked`` guarantees
+    it), so client boundaries coincide with block boundaries and the per-
+    client masks concatenate to one grid-aligned mask."""
+    clients, rows, lanes = p.shape
+    assert rows % block_rows == 0, (p.shape, block_rows)
+    assert block_masks.shape == (clients, rows // block_rows), (
+        block_masks.shape, p.shape, block_rows)
+
+    def fold(x):
+        return x.reshape(clients * rows, lanes)
+
+    out = masked_adam_kernel(
+        fold(p), fold(g), fold(m), fold(v), block_masks.reshape(-1), scalars,
+        b1=b1, b2=b2, block_rows=block_rows, interpret=interpret,
+    )
+    return tuple(x.reshape(clients, rows, lanes) for x in out)

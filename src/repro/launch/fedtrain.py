@@ -149,6 +149,7 @@ def run_simulation(args) -> int:
                             rounds_per_layer=args.rl, cycles=cycles)
     cfg = FLRunConfig(local_epochs=1, batch_size=args.batch, lr=args.lr,
                       engine=args.engine, sim_devices=args.sim_devices,
+                      fused_adam=args.fused_adam,
                       runtime=args.runtime, async_policy=args.async_policy,
                       buffer_k=args.buffer_k,
                       staleness_exponent=args.staleness_exp,
@@ -196,6 +197,10 @@ def main(argv=None) -> int:
                     help="client engine for --sim-clients: per-client oracle "
                          "loop (default), batched vmap-over-clients, or "
                          "mesh-sharded shard_map (see --sim-devices)")
+    ap.add_argument("--fused-adam", action="store_true",
+                    help="run local steps through the Pallas masked-Adam "
+                         "kernel (packed optimizer state; interpret mode "
+                         "off-TPU — docs/KERNELS.md)")
     ap.add_argument("--sim-devices", type=int, default=0,
                     help="shard_map mesh size over the 'clients' axis "
                          "(0 = all visible devices; on CPU, N>1 also forces "

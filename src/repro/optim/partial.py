@@ -10,6 +10,14 @@ Two mathematically equivalent realisations (asserted equal in
   frozen remainder closed over as constants.  XLA prunes the dead backward
   graph; Adam m/v are allocated for the subtree only.  This is what the
   framework runs.
+
+A third realisation, ``fused_masked_step``, is Eq. 1 through the Pallas
+masked-Adam kernel (``kernels/masked_adam``): params/grads are packed into
+the kernel's (rows, 128) block layout, the whole optimizer update runs as one
+fused pass with a per-block mask, and m/v live *packed* across steps
+(``fused_adam_init``).  The three-way equivalence is pinned in
+``tests/test_kernels_adam.py``; the engines' ``fused_adam=True`` path builds
+on the same step shape (docs/KERNELS.md).
 """
 
 from __future__ import annotations
@@ -17,12 +25,63 @@ from __future__ import annotations
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import masking
 from repro.core.partition import Partition
+from repro.kernels.masked_adam import ops as madam_ops
+from repro.kernels.masked_adam.kernel import LANES, masked_adam_kernel
 from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
 
 PyTree = Any
+
+
+def fused_adam_init(params: PyTree, block_rows: int = 8) -> AdamState:
+    """Adam state over the *packed* (rows, 128) layout: m/v are single f32
+    buffers aligned with ``ops.pack(params)``, not per-leaf trees.  This is
+    what keeps the fused scan pack-free for the optimizer state — only
+    params/grads are packed each step."""
+    rows = madam_ops.packed_rows(params, block_rows)
+    z = jnp.zeros((rows, LANES), jnp.float32)
+    return AdamState(step=jnp.zeros((), jnp.int32), m=z, v=jnp.zeros_like(z))
+
+
+def guard_fused_config(cfg: AdamConfig) -> None:
+    """The kernel implements plain Adam — weight decay would silently not be
+    applied, so refuse it loudly."""
+    if cfg.weight_decay:
+        raise ValueError(
+            "fused_adam does not support weight_decay "
+            f"(got {cfg.weight_decay}); use the unfused engines")
+
+
+def fused_masked_step(
+    loss_fn: Callable[[PyTree], jax.Array],
+    params: PyTree,
+    opt_state: AdamState,          # packed state from ``fused_adam_init``
+    partition: Partition,
+    groups,                        # int or set of trainable group ids
+    cfg: AdamConfig,
+    *,
+    block_rows: int = 8,
+    interpret: bool | None = None,
+) -> tuple[PyTree, AdamState, jax.Array]:
+    """Eq. 1 through the fused kernel: full-tree gradient, block-masked
+    packed Adam update, frozen blocks copy through bit-exact."""
+    guard_fused_config(cfg)
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    step = opt_state.step + 1
+    bm = madam_ops.block_mask_for_group(params, partition, groups, block_rows)
+    pp, meta = madam_ops.pack(params, block_rows)
+    pg, _ = madam_ops.pack(grads, block_rows)
+    scalars = madam_ops.adam_scalars(step, cfg.lr, cfg.b1, cfg.b2, cfg.eps)
+    if interpret is None:
+        interpret = madam_ops.default_interpret()
+    np_, nm, nv = masked_adam_kernel(
+        pp, pg, opt_state.m, opt_state.v, jnp.asarray(bm), scalars,
+        b1=cfg.b1, b2=cfg.b2, block_rows=block_rows, interpret=interpret,
+    )
+    return madam_ops.unpack(np_, meta), AdamState(step, nm, nv), loss
 
 
 def masked_step(

@@ -74,3 +74,20 @@ def test_shallower_groups_cost_more_compute():
     per = report.per_round_flops
     assert per[0] > per[-1]
     assert np.all(np.diff(per) <= 0)
+
+
+def test_fused_adam_kernel_book():
+    n = 1 << 20
+    # full training: fused does 7 passes, unfused 14 -> exactly 2x traffic
+    assert costs.adam_step_bytes(n, fused=True) == 4 * 7 * n
+    assert costs.adam_step_bytes(n, fused=False) == 4 * 14 * n
+    assert costs.fused_adam_traffic_ratio(1.0) == pytest.approx(2.0)
+    # frozen blocks skip the write-back: 4 passes, ratio 3.5x
+    assert costs.adam_step_bytes(n, fused=True, trained_fraction=0.0) == 4 * 4 * n
+    assert costs.fused_adam_traffic_ratio(0.0) == pytest.approx(3.5)
+    # unfused traffic is mask-independent
+    assert costs.adam_step_bytes(n, fused=False, trained_fraction=0.25) == \
+        costs.adam_step_bytes(n, fused=False)
+    assert costs.adam_step_flops(n, 0.5) == costs.adam_step_flops(n) // 2
+    with pytest.raises(ValueError, match="trained_fraction"):
+        costs.adam_step_bytes(n, fused=True, trained_fraction=1.5)

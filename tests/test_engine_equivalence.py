@@ -254,6 +254,78 @@ def test_hetero_plan_async_degenerate_matches_sync(setup):
     _assert_equivalent(sync, asy)
 
 
+# -- fused Pallas masked-Adam path (fused_adam=True, docs/KERNELS.md) -------
+#
+# The acceptance bar (ISSUE 6): the fused path — local steps through the
+# packed masked-Adam kernel, interpret mode on CPU — matches the *unfused
+# sequential oracle* (whose partial rounds are ``partitioned_step``'s pruned
+# form) to <=1e-5 under every engine x {homogeneous, nested, random} plans,
+# on the module's ragged-step-count cohort.  Baselines are cached per plan:
+# the oracle runs once, each fused engine compares against it.
+
+_FUSED_BASELINES: dict = {}
+
+
+def _fused_baseline(setup, plan):
+    if plan not in _FUSED_BASELINES:
+        if plan == "homogeneous":
+            _FUSED_BASELINES[plan] = _run(setup, "fedavg", "sequential", MIXED)
+        else:
+            _FUSED_BASELINES[plan] = _run(
+                setup, "fedavg", "sequential", HETERO_MIXED,
+                plan=plan, capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    return _FUSED_BASELINES[plan]
+
+
+@pytest.mark.parametrize("engine", ["sequential", "vmap", "shard_map"])
+@pytest.mark.parametrize("plan", ["homogeneous", "nested", "random"])
+def test_fused_adam_matches_partitioned_oracle(setup, engine, plan):
+    """fused_adam=True x every engine x every plan kind == the unfused
+    sequential oracle (Eq. 1 masked kernel form vs pruned partitioned form),
+    params + losses + cost books."""
+    if plan == "homogeneous":
+        fz = _run(setup, "fedavg", engine, MIXED, fused_adam=True)
+    else:
+        fz = _run(setup, "fedavg", engine, HETERO_MIXED, fused_adam=True,
+                  plan=plan, capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    _assert_equivalent(_fused_baseline(setup, plan), fz)
+
+
+def test_fused_async_degenerate_matches_sync(setup):
+    """The async runtime inherits the fused path through
+    ``run_local_async``: degenerate async == sync, both fused."""
+    sync = _run(setup, "fedavg", "vmap", MIXED, fused_adam=True)
+    asy = _run(setup, "fedavg", "vmap", MIXED, fused_adam=True,
+               runtime="async")
+    _assert_equivalent(sync, asy)
+
+
+@pytest.mark.slow
+def test_fused_ragged_small_client_bucket():
+    """Fused path through a dedicated batch-width bucket (client 12 < 16):
+    bucket routing is step-implementation-agnostic."""
+    small = _make_setup((12, 36, 20))
+    seq = _run(small, "fedavg", "sequential", MIXED[1:])
+    fz = _run(small, "fedavg", "vmap", MIXED[1:], fused_adam=True)
+    _assert_equivalent(seq, fz)
+
+
+def test_fused_rejects_weight_decay(setup):
+    """The kernel implements plain Adam; a weight-decay config must be
+    refused at engine construction, not silently ignored."""
+    from repro.fl import LocalTrainer, make_engine
+    from repro.optim.adam import AdamConfig
+
+    adapter, _, _ = setup
+    params = adapter.init(jax.random.key(0))
+    part = adapter.partition(params)
+    trainer = LocalTrainer(adapter=adapter, partition=part,
+                           algo=AlgoConfig(), adam=AdamConfig(weight_decay=0.1))
+    with pytest.raises(ValueError, match="weight_decay"):
+        make_engine("vmap", trainer=trainer, partition=part,
+                    algo=AlgoConfig(), fused_adam=True)
+
+
 def test_homogeneous_plan_is_identical_to_default(setup):
     """plan="homogeneous" (with tiers set, which it ignores) must be the
     pre-plan path exactly — same programs, same numbers, every engine

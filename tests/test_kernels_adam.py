@@ -1,16 +1,40 @@
-"""Fused masked-Adam Pallas kernel vs. oracle + pytree wrapper semantics."""
+"""Fused masked-Adam Pallas kernel vs. oracle + pytree wrapper semantics.
+
+Also pins the pack/unpack dtype-fidelity contract (ISSUE 6): per-leaf dtypes
+recorded in ``PackMeta`` and restored by ``unpack``, mixed-dtype / 0-dim /
+empty-leaf round trips (hypothesis when available, seeded cases always), the
+``tree_flatten_with_path`` == ``jax.tree.flatten`` layout-order assertion the
+mask builders rely on, the client-stacked pack variants, and the three-way
+``fused_masked_step == masked_step == partitioned_step`` equivalence at
+mixed-group block boundaries.
+"""
+
+import typing
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import masking
 from repro.core.partition import build_partition
 from repro.kernels.masked_adam import ops
-from repro.kernels.masked_adam.kernel import masked_adam_kernel
+from repro.kernels.masked_adam.kernel import (masked_adam_kernel,
+                                              masked_adam_stacked)
 from repro.kernels.masked_adam.ref import masked_adam_ref
 from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.optim.partial import (fused_adam_init, fused_masked_step,
+                                 masked_step, partitioned_step)
 from tests.conftest import small_params
+from tests.test_partial_equivalence import _loss_fn
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAS_HYPOTHESIS = False
 
 
 @pytest.mark.parametrize("rows,br", [(32, 8), (64, 16), (128, 8)])
@@ -119,3 +143,280 @@ def test_fused_matches_unfused_adam_on_selected_group():
             np.testing.assert_allclose(np.asarray(a), np.asarray(want), atol=1e-6)
         else:
             np.testing.assert_array_equal(np.asarray(a), np.asarray(orig))
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack dtype fidelity (per-leaf dtypes recorded and restored)
+# ---------------------------------------------------------------------------
+
+_SHAPES = [(), (0,), (1,), (5,), (3, 4), (2, 3, 2), (130,)]
+_DTYPES = [jnp.float32, jnp.bfloat16, jnp.float16, jnp.int32]
+
+
+def _make_tree(specs, seed):
+    """Dict tree from (shape, dtype) specs; values exactly representable in
+    every listed dtype's f32 round trip (small ints, normals cast down)."""
+    rng = np.random.default_rng(seed)
+    tree = {}
+    for i, (shape, dt) in enumerate(specs):
+        if dt == jnp.int32:
+            arr = rng.integers(-99, 100, size=shape).astype(np.int32)
+        else:
+            arr = rng.normal(size=shape).astype(np.float32)
+        tree[f"leaf{i:02d}"] = jnp.asarray(arr).astype(dt)
+    return tree
+
+
+def _assert_roundtrip(tree, block_rows=8):
+    packed, meta = ops.pack(tree, block_rows)
+    assert packed.dtype == jnp.float32          # kernel compute dtype
+    restored = ops.unpack(packed, meta)
+    for (pa, a), (_, b) in zip(
+        jax.tree_util.tree_flatten_with_path(tree)[0],
+        jax.tree_util.tree_flatten_with_path(restored)[0],
+    ):
+        assert b.dtype == a.dtype, f"{pa}: {a.dtype} -> {b.dtype}"
+        assert b.shape == a.shape, pa
+        np.testing.assert_array_equal(
+            np.asarray(a.astype(jnp.float32)),
+            np.asarray(b.astype(jnp.float32)), err_msg=str(pa))
+
+
+@pytest.mark.parametrize("block_rows", [8, 16])
+def test_pack_unpack_mixed_dtype_roundtrip_exact(block_rows):
+    """The ISSUE 6 bugfix pin: bf16/f16/int32 leaves come back in their own
+    dtype (not leaves[0]'s), including 0-dim scalars and empty leaves."""
+    specs = list(zip(_SHAPES, [jnp.float32, jnp.bfloat16, jnp.float16,
+                               jnp.int32, jnp.bfloat16, jnp.float16,
+                               jnp.int32]))
+    _assert_roundtrip(_make_tree(specs, seed=0), block_rows)
+
+
+def test_unpack_global_dtype_override_warns():
+    """``unpack(dtype=...)`` still works (casts every leaf) but is
+    deprecated now that per-leaf dtypes round-trip by default."""
+    tree = _make_tree([((3, 4), jnp.bfloat16), ((5,), jnp.float32)], seed=1)
+    packed, meta = ops.pack(tree)
+    with pytest.deprecated_call():
+        forced = ops.unpack(packed, meta, dtype=jnp.float32)
+    assert all(leaf.dtype == jnp.float32 for leaf in jax.tree.leaves(forced))
+    # and the default path emits no warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        restored = ops.unpack(packed, meta)
+    assert [leaf.dtype for leaf in jax.tree.leaves(restored)] == \
+        [leaf.dtype for leaf in jax.tree.leaves(tree)]
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        specs=st.lists(
+            st.tuples(st.sampled_from(_SHAPES), st.sampled_from(_DTYPES)),
+            min_size=1, max_size=6),
+        seed=st.integers(0, 2**31 - 1),
+        block_rows=st.sampled_from([8, 16]),
+    )
+    def test_pack_unpack_roundtrip_property(specs, seed, block_rows):
+        _assert_roundtrip(_make_tree(specs, seed), block_rows)
+
+else:  # seeded fallback so the property is still exercised without hypothesis
+
+    @pytest.mark.parametrize("seed", range(10))
+    def test_pack_unpack_roundtrip_property(seed):
+        rng = np.random.default_rng(seed)
+        specs = [
+            (_SHAPES[int(rng.integers(len(_SHAPES)))],
+             _DTYPES[int(rng.integers(len(_DTYPES)))])
+            for _ in range(int(rng.integers(1, 7)))
+        ]
+        _assert_roundtrip(_make_tree(specs, seed), int(rng.choice([8, 16])))
+
+
+# ---------------------------------------------------------------------------
+# layout-order contract: tree_flatten_with_path == jax.tree.flatten
+# ---------------------------------------------------------------------------
+
+class _NTBlock(typing.NamedTuple):
+    kernel: jax.Array
+    bias: jax.Array
+
+
+def test_layout_order_holds_for_dict_and_namedtuple_trees():
+    tree = {
+        "z": _NTBlock(kernel=jnp.ones((4, 4)), bias=jnp.zeros((4,))),
+        "a": {"w": jnp.ones((2, 3)), "s": jnp.float32(1.0)},
+    }
+    packed, meta = ops.pack(tree)          # pack runs the assertion itself
+    _assert_roundtrip(tree)
+    # leaf spans in the packed buffer follow flatten order exactly
+    leaves = jax.tree.leaves(tree)
+    flat = np.asarray(packed).reshape(-1)
+    off = 0
+    for leaf, n, pn in zip(leaves, meta.sizes, meta.padded):
+        np.testing.assert_array_equal(
+            flat[off : off + n],
+            np.asarray(leaf, np.float32).reshape(-1))
+        off += pn
+
+
+def test_layout_order_assertion_rejects_reordered_leaves():
+    tree = {"a": jnp.ones((2,)), "b": jnp.zeros((3,))}
+    leaves = jax.tree.leaves(tree)
+    ops._assert_layout_order(tree, leaves)                 # agrees: fine
+    with pytest.raises(AssertionError, match="different order"):
+        ops._assert_layout_order(tree, leaves[::-1])       # misaligned
+
+
+# ---------------------------------------------------------------------------
+# client-stacked pack variants (batched-engine layout)
+# ---------------------------------------------------------------------------
+
+def test_pack_stacked_roundtrip_and_per_client_layout():
+    C = 3
+    rng = np.random.default_rng(11)
+    tree = {
+        "w": jnp.asarray(rng.normal(size=(C, 4, 5)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(C, 130)).astype(np.float32)
+                         ).astype(jnp.bfloat16),
+        "s": jnp.asarray(rng.normal(size=(C,)).astype(np.float32)),
+    }
+    packed, meta = ops.pack_stacked(tree)
+    assert packed.shape[0] == C and packed.shape[2] == 128
+    restored = ops.unpack_stacked(packed, meta)
+    for (pa, a), (_, b) in zip(
+        jax.tree_util.tree_flatten_with_path(tree)[0],
+        jax.tree_util.tree_flatten_with_path(restored)[0],
+    ):
+        assert b.dtype == a.dtype and b.shape == a.shape, pa
+        np.testing.assert_array_equal(
+            np.asarray(a.astype(jnp.float32)),
+            np.asarray(b.astype(jnp.float32)), err_msg=str(pa))
+    # each client's slab equals the single-tree pack of that client's slice
+    for c in range(C):
+        one = jax.tree.map(lambda x: x[c], tree)
+        pc, mc = ops.pack(one)
+        np.testing.assert_array_equal(np.asarray(packed[c]), np.asarray(pc))
+        assert mc.padded == meta.padded
+
+
+def test_pack_stacked_rejects_empty_and_ragged_trees():
+    with pytest.raises(ValueError, match="at least one leaf"):
+        ops.pack_stacked({})
+    with pytest.raises(ValueError, match="client axis"):
+        ops.pack_stacked({"a": jnp.ones((3, 2)), "b": jnp.ones((4, 2))})
+
+
+# ---------------------------------------------------------------------------
+# plan bitmask -> per-client block masks
+# ---------------------------------------------------------------------------
+
+def test_block_masks_for_plan_matches_per_group_masks():
+    params = small_params()
+    part = build_partition(params)
+    plan = np.zeros((3, part.num_groups), np.int32)
+    plan[0, :] = 1                       # full-capacity client
+    plan[1, [0, 2]] = 1                  # partial subset
+    masks = ops.block_masks_for_plan(params, part, plan)
+    gids = ops.block_group_ids(params, part)
+    assert masks.shape == (3, len(gids))
+    for c in range(3):
+        sel = {g for g in range(part.num_groups) if plan[c, g]}
+        want = ops.block_mask_for_group(params, part, sel)
+        np.testing.assert_array_equal(masks[c], want, err_msg=f"client {c}")
+        # traced builder (what the engines run under vmap) agrees too
+        traced = ops.plan_block_mask(gids, jnp.asarray(plan[c]))
+        np.testing.assert_array_equal(np.asarray(traced), want,
+                                      err_msg=f"client {c} traced")
+    assert not masks[2].any()            # all-zero plan row -> nothing trains
+
+
+def test_masked_adam_stacked_matches_per_client_kernel_calls():
+    C, rows, br = 3, 32, 8
+    ks = jax.random.split(jax.random.key(5), 4)
+    p = jax.random.normal(ks[0], (C, rows, 128), jnp.float32)
+    g = jax.random.normal(ks[1], (C, rows, 128), jnp.float32)
+    m = jax.random.normal(ks[2], (C, rows, 128), jnp.float32) * 0.1
+    v = jnp.abs(jax.random.normal(ks[3], (C, rows, 128))) * 0.01
+    masks = jnp.asarray(
+        np.random.default_rng(3).integers(0, 2, (C, rows // br)), jnp.int32)
+    sc = jnp.array([1e-3, 1 - 0.9**2, 1 - 0.999**2, 1e-8], jnp.float32)
+    outs = masked_adam_stacked(p, g, m, v, masks, sc, block_rows=br,
+                               interpret=True)
+    for c in range(C):
+        ref = masked_adam_kernel(p[c], g[c], m[c], v[c], masks[c], sc,
+                                 block_rows=br, interpret=True)
+        for a, b, name in zip(outs, ref, "pmv"):
+            np.testing.assert_allclose(
+                np.asarray(a[c]), np.asarray(b), atol=1e-6,
+                err_msg=f"client {c} {name}")
+
+
+# ---------------------------------------------------------------------------
+# three-way equivalence: fused == masked == partitioned (Eq. 1, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def _assert_trees_close(got, want, **tol):
+    tol.setdefault("rtol", 2e-5)
+    tol.setdefault("atol", 2e-6)
+    for (pa, a), (_, b) in zip(
+        jax.tree_util.tree_flatten_with_path(got)[0],
+        jax.tree_util.tree_flatten_with_path(want)[0],
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   err_msg=f"{pa} differs", **tol)
+
+
+@pytest.mark.parametrize("groups", [
+    2,
+    pytest.param(0, marks=pytest.mark.slow),
+    (0, 2),        # multi-group: block boundaries between trained/frozen
+])
+def test_three_way_fused_masked_partitioned(groups):
+    """The three realisations of the paper's Eq. 1 — full-grad masked update,
+    pruned-subtree update, and the fused packed-kernel update — must agree on
+    real transformer leaves where trained and frozen groups share packed-block
+    neighbourhoods."""
+    params = small_params()
+    part = build_partition(params)
+    x = jax.random.randint(jax.random.key(1), (4, 6), 0, 32)
+    y = jax.random.randint(jax.random.key(2), (4,), 0, 8)
+    loss_fn = _loss_fn((x, y))
+    cfg = AdamConfig(lr=1e-2)
+    gsel = groups if isinstance(groups, int) else set(groups)
+
+    mask = masking.mask_tree(params, part, gsel)
+    p_masked, _, loss_m = masked_step(loss_fn, params, adam_init(params),
+                                      mask, cfg)
+    p_fused, st_fused, loss_f = fused_masked_step(
+        loss_fn, params, fused_adam_init(params), part, gsel, cfg)
+    assert np.allclose(float(loss_m), float(loss_f), rtol=1e-6)
+    assert int(st_fused.step) == 1
+    _assert_trees_close(p_fused, p_masked)
+
+    if isinstance(groups, int):
+        p_part, _, loss_p = partitioned_step(loss_fn, params, part, groups,
+                                             None, cfg)
+        assert np.allclose(float(loss_f), float(loss_p), rtol=1e-6)
+        _assert_trees_close(p_fused, p_part)
+
+    # frozen groups copy through bit-exact in the fused path
+    sel = {gsel} if isinstance(gsel, int) else gsel
+    for (path, a), (_, orig) in zip(
+        jax.tree_util.tree_flatten_with_path(p_fused)[0],
+        jax.tree_util.tree_flatten_with_path(params)[0],
+    ):
+        ps = "/".join(str(getattr(k, "key", k)) for k in path)
+        if part.group_of(ps) not in sel:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(orig),
+                                          err_msg=ps)
+
+
+def test_fused_masked_step_rejects_weight_decay():
+    params = small_params()
+    part = build_partition(params)
+    with pytest.raises(ValueError, match="weight_decay"):
+        fused_masked_step(lambda p: jnp.float32(0.0), params,
+                          fused_adam_init(params), part, 0,
+                          AdamConfig(weight_decay=0.1))
