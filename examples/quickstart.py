@@ -47,6 +47,12 @@ def main(argv=None):
     ap.add_argument("--capacity-tiers", type=float, nargs="*", default=[],
                     help="tier capacity fractions in (0, 1], clients "
                          "round-robin (e.g. 0.3 0.6 1.0)")
+    ap.add_argument("--compression",
+                    choices=["none", "int8", "onebit", "topk"],
+                    default="none",
+                    help="compress the transmitted subtree (int8 / 1-bit / "
+                         "top-k with error feedback, docs/COMPRESSION.md); "
+                         "the comm column then prices the encoded bytes")
     args = ap.parse_args(argv)
 
     spec = VisionDatasetSpec(num_classes=8, image_size=16, noise=1.0)
@@ -61,10 +67,13 @@ def main(argv=None):
     run_cfg = FLRunConfig(local_epochs=1, batch_size=32, lr=1e-3,
                           engine=args.engine, sim_devices=args.sim_devices,
                           plan=args.plan,
-                          capacity_tiers=tuple(args.capacity_tiers))
+                          capacity_tiers=tuple(args.capacity_tiers),
+                          compression=args.compression)
 
     print(f"=== FedPart (partial network updates) [engine={args.engine}"
           + (f", plan={args.plan}" if args.plan != "homogeneous" else "")
+          + (f", compression={args.compression}"
+             if args.compression != "none" else "")
           + "] ===")
     fp = run_federated(adapter, clients, eval_set, schedule.rounds(), run_cfg,
                        verbose=True)

@@ -20,6 +20,15 @@ whose plan bit for it is set*, with its own weight denominator
 (``plan_group_denominators``); a group nobody trained keeps the frozen global
 verbatim.  A homogeneous plan reproduces the single-group paths bit-for-bit
 (tests/test_plans.py).
+
+Transmission compression (``core.compress``, docs/COMPRESSION.md) composes
+*upstream* of everything here: clients quantise their transmitted leaves and
+the server view is reconstructed as ``global + decode(codes)`` **before**
+averaging, so every path in this module — including the plan-aware splices
+and their zero-trainer ``jnp.where`` freeze — consumes decompressed values
+unchanged.  In particular a group nobody trained still keeps the frozen
+global bit-for-bit even while other groups' error-feedback residuals are
+active: untransmitted leaves never enter an average or consume residual.
 """
 
 from __future__ import annotations

@@ -1,0 +1,404 @@
+"""Lossy compression of transmitted subtrees (docs/COMPRESSION.md).
+
+FedPart already shrinks communication structurally — partial rounds move only
+the scheduled group's subtree (Eq. 5).  This module shrinks the *remaining*
+off-mesh bytes another 4–32x by compressing the per-client update at the
+transmission boundary:
+
+* ``int8``   — symmetric per-block quantization: ``q = round(127 x / s)``
+  with ``s = max|x|`` per block, dequantized as ``q s / 127``.  Worst-case
+  elementwise error ``s / 254``.  ~4x smaller than f32 (+ one f32 scale per
+  block).
+* ``onebit`` — sign-SGD-style 1-bit encoding with a per-block magnitude
+  ``s = mean|x|``; dequantized as ``sign(x) * s``.  ~32x smaller.
+* ``topk``   — per-leaf magnitude top-k sparsification: the ``k =
+  ceil(topk_fraction * n)`` largest-|x| elements travel as (value, index)
+  pairs; everything else is dropped.
+
+Each scheme compresses the client's *update* ``u = local - global`` (scale
+invariance makes this interchangeable with compressing the weight-scaled
+subtree: the server reconstructs ``global + c_i`` per client and the usual
+weighted aggregation applies).  With ``error_feedback=True`` every client
+carries a persistent residual ``r``: the transmitted value is ``c = Q(u + r)``
+and the new residual ``r' = (u + r) - c``, so quantization error telescopes
+across rounds instead of accumulating (1-bit Adam / EF-SGD contract; the
+per-round identity ``sum(c) + r == sum(u)`` is pinned by
+tests/test_compress.py).
+
+Blocking: ``block_rows = 0`` (default) uses one scale per leaf;
+``block_rows = B`` uses blocks of ``B * 128`` elements with per-leaf padding —
+the same lane width and leaf alignment as the packed masked-Adam layout
+(``kernels/masked_adam/ops.pack``; blocks never span leaves), so ``B = 8``
+matches the kernel's 8x128 block grid exactly.
+
+Two realisations are provided and pinned equal:
+
+* ``qdq_leaf`` / ``transmit_tree*`` — the jit-friendly quantize→dequantize
+  path the engines run on device (values only, nothing materialises the wire
+  format);
+* ``encode_leaf`` / ``decode_leaf`` — the host-side wire format (int8 codes /
+  packed sign bits / (value, index) pairs + per-block f32 scales), whose
+  actual array bytes match the analytic ledger (``leaf_encoded_bytes``) that
+  ``core.costs.comm_cost`` and the async runtime book.
+
+Client-local statistics (BN running moments) never travel and are never
+compressed; they keep the legacy 4-bytes/param ledger basis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, masking
+from repro.core.partition import Partition
+
+PyTree = Any
+
+KINDS = ("none", "int8", "onebit", "topk")
+
+#: lane width of one packed block row — matches kernels/masked_adam/ops.LANES
+#: so ``block_rows=8`` reproduces the kernel's 8x128 block granularity.
+LANES = 128
+
+F32_BYTES = 4
+INT8_BYTES = 1
+SCALE_BYTES = 4      # one f32 scale per block
+INDEX_BYTES = 4      # one int32 index per retained top-k element
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Static description of one transmission-compression scheme.
+
+    Hashable and frozen so engines can key jit caches on it.  ``kind`` is
+    never ``"none"`` here — the *absence* of compression is represented by
+    passing ``None`` around (``make_config``), which keeps the legacy paths
+    structurally untouched.
+    """
+
+    kind: str
+    topk_fraction: float = 0.01
+    error_feedback: bool = True
+    block_rows: int = 0          # 0 = one block (scale) per leaf
+
+    def __post_init__(self):
+        if self.kind not in KINDS[1:]:
+            raise ValueError(
+                f"compression kind must be one of {KINDS[1:]}, got {self.kind!r}"
+                " (represent 'none' as None — make_config does this)")
+        if self.kind == "topk" and not 0.0 < self.topk_fraction <= 1.0:
+            raise ValueError(
+                f"topk_fraction must be in (0, 1], got {self.topk_fraction}")
+        if self.block_rows < 0:
+            raise ValueError(f"block_rows must be >= 0, got {self.block_rows}")
+
+    @property
+    def block_elems(self) -> int:
+        """Elements per scale block (0 = whole leaf)."""
+        return self.block_rows * LANES
+
+
+def make_config(kind: str = "none", *, topk_fraction: float = 0.01,
+                error_feedback: bool = True,
+                block_rows: int = 0) -> CompressionConfig | None:
+    """``FLRunConfig`` string -> config object, or ``None`` for ``"none"``.
+
+    Returning ``None`` (not a no-op config) is what makes ``"none"``
+    structurally absent: every consumer guards on ``compression is None`` and
+    runs the byte-identical legacy path."""
+    if kind == "none":
+        return None
+    if kind not in KINDS:
+        raise ValueError(f"compression must be one of {KINDS}, got {kind!r}")
+    return CompressionConfig(kind=kind, topk_fraction=topk_fraction,
+                             error_feedback=error_feedback,
+                             block_rows=block_rows)
+
+
+# ---------------------------------------------------------------------------
+# Block geometry (shared by the qdq path, the wire format and the ledger)
+# ---------------------------------------------------------------------------
+
+def _num_blocks(n: int, cfg: CompressionConfig) -> int:
+    if n == 0:
+        return 0
+    be = cfg.block_elems or n
+    return -(-n // be)
+
+
+def _topk_k(n: int, cfg: CompressionConfig) -> int:
+    if n == 0:
+        return 0
+    return min(n, max(1, math.ceil(cfg.topk_fraction * n)))
+
+
+def _blocked(flat: jax.Array, cfg: CompressionConfig):
+    """Zero-pad ``flat`` to a whole number of blocks -> ((nb, be), valid)."""
+    n = flat.shape[0]
+    be = cfg.block_elems or n
+    nb = -(-n // be)
+    blocks = jnp.pad(flat, (0, nb * be - n)).reshape(nb, be)
+    valid = (jnp.arange(nb * be) < n).reshape(nb, be)
+    return blocks, valid
+
+
+def _int8_scales(blocks: jax.Array) -> jax.Array:
+    s = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    return jnp.where(s > 0, s, 1.0)
+
+
+def _onebit_scales(blocks: jax.Array, valid: jax.Array) -> jax.Array:
+    cnt = jnp.maximum(jnp.sum(valid, axis=1, keepdims=True), 1)
+    return jnp.sum(jnp.abs(blocks), axis=1, keepdims=True) / cnt
+
+
+# ---------------------------------------------------------------------------
+# Quantize -> dequantize (the on-device value path the engines run)
+# ---------------------------------------------------------------------------
+
+def qdq_leaf(x: jax.Array, cfg: CompressionConfig) -> jax.Array:
+    """Quantize-dequantize one f32 leaf: the values the server would see
+    after decoding the wire format (``decode_leaf(encode_leaf(x))`` —
+    bit-identical, pinned by tests/test_compress.py).  Jit/vmap-friendly:
+    all shapes are static functions of ``x.shape`` and ``cfg``."""
+    n = int(np.prod(x.shape)) if x.shape else 1
+    if n == 0:
+        return x
+    flat = x.astype(jnp.float32).reshape(-1)
+    if cfg.kind == "topk":
+        k = _topk_k(n, cfg)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        deq = jnp.zeros_like(flat).at[idx].set(flat[idx])
+        return deq.reshape(x.shape)
+    blocks, valid = _blocked(flat, cfg)
+    if cfg.kind == "int8":
+        scale = _int8_scales(blocks)
+        q = jnp.clip(jnp.round(blocks * (127.0 / scale)), -127.0, 127.0)
+        deq = q * (scale / 127.0)
+    elif cfg.kind == "onebit":
+        scale = _onebit_scales(blocks, valid)
+        deq = jnp.where(blocks >= 0, scale, -scale)
+    else:  # pragma: no cover - guarded by CompressionConfig
+        raise ValueError(f"unknown compression kind {cfg.kind!r}")
+    return deq.reshape(-1)[:n].reshape(x.shape)
+
+
+def transmit_leaf(g_leaf: jax.Array, local_leaf: jax.Array,
+                  res_leaf: jax.Array,
+                  cfg: CompressionConfig) -> tuple[jax.Array, jax.Array]:
+    """One leaf's error-feedback transmission step.
+
+    ``u = local - global`` is the true update; the client transmits
+    ``c = Q(u + r)`` and keeps ``r' = (u + r) - c``.  Returns the *server
+    view* ``global + c`` (cast back to the leaf dtype) and the new residual
+    (f32).  With ``error_feedback=False`` the residual stays untouched (all
+    zeros) and ``c = Q(u)``."""
+    g32 = g_leaf.astype(jnp.float32)
+    u = local_leaf.astype(jnp.float32) - g32
+    t = u + res_leaf if cfg.error_feedback else u
+    c = qdq_leaf(t, cfg)
+    new_res = (t - c) if cfg.error_feedback else res_leaf
+    tx = (g32 + c).astype(local_leaf.dtype)
+    return tx, new_res
+
+
+def init_residual(params: PyTree) -> PyTree:
+    """Fresh all-zero f32 error-feedback residual for one client."""
+    return jax.tree.map(lambda x: jnp.zeros(jnp.shape(x), jnp.float32), params)
+
+
+def _split_pairs(pairs: PyTree) -> tuple[PyTree, PyTree]:
+    is_pair = lambda x: isinstance(x, tuple)
+    tx = jax.tree.map(lambda pr: pr[0], pairs, is_leaf=is_pair)
+    res = jax.tree.map(lambda pr: pr[1], pairs, is_leaf=is_pair)
+    return tx, res
+
+
+def transmit_tree(global_params: PyTree, local: PyTree, residual: PyTree,
+                  cfg: CompressionConfig, *, partition: Partition,
+                  groups: Sequence[int] | None = None
+                  ) -> tuple[PyTree, PyTree]:
+    """Apply the transmission step to every *transmitted* leaf of a full
+    client tree: leaves outside ``groups`` (``None`` = all groups) and
+    client-local statistics pass through unchanged (``local`` value, residual
+    untouched) — they do not travel, so they must not consume error feedback.
+
+    Returns ``(tx, new_residual)`` where ``tx`` is the full tree the
+    server-side aggregation consumes in place of ``local`` (the
+    decompress-and-splice view: ``global + Q(update)`` on transmitted leaves,
+    ``local`` elsewhere)."""
+    sel = None if groups is None else frozenset(int(g) for g in groups)
+
+    def _leaf(path, g_leaf, l_leaf, r_leaf):
+        p = "/".join(masking._entry_str(e) for e in path)
+        if aggregation.is_local_stat(p) or (
+                sel is not None and partition.group_of(p) not in sel):
+            return (l_leaf, r_leaf)
+        return transmit_leaf(g_leaf, l_leaf, r_leaf, cfg)
+
+    pairs = jax.tree_util.tree_map_with_path(
+        _leaf, global_params, local, residual)
+    return _split_pairs(pairs)
+
+
+def transmit_tree_plan(global_params: PyTree, local: PyTree, residual: PyTree,
+                       gmask: jax.Array, cfg: CompressionConfig, *,
+                       partition: Partition) -> tuple[PyTree, PyTree]:
+    """Plan-program variant of ``transmit_tree``: the trained-group set is a
+    *traced* ``(M,)`` bitmask (one per client riding the stacked axis), so the
+    per-leaf decision is a ``jnp.where`` instead of structural pruning.
+    Untrained leaves keep ``local`` (== global under the masked step) and
+    their residual untouched; statistics are excluded statically."""
+    bits = jnp.asarray(gmask, jnp.float32) != 0
+
+    def _leaf(path, g_leaf, l_leaf, r_leaf):
+        p = "/".join(masking._entry_str(e) for e in path)
+        if aggregation.is_local_stat(p):
+            return (l_leaf, r_leaf)
+        bit = bits[partition.group_of(p)]
+        tx, nr = transmit_leaf(g_leaf, l_leaf, r_leaf, cfg)
+        return (jnp.where(bit, tx, l_leaf),
+                jnp.where(bit, nr, r_leaf))
+
+    pairs = jax.tree_util.tree_map_with_path(
+        _leaf, global_params, local, residual)
+    return _split_pairs(pairs)
+
+
+# ---------------------------------------------------------------------------
+# Wire format (host-side; what the byte ledger prices)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EncodedLeaf:
+    """One leaf's encoded payload.  ``nbytes`` is the actual array storage —
+    tests pin it equal to the analytic ``leaf_encoded_bytes`` model."""
+
+    kind: str
+    shape: tuple[int, ...]
+    dtype: Any
+    payload: np.ndarray                 # int8 codes / packed sign bits / f32 values
+    scales: np.ndarray | None = None    # (nblocks,) f32, quantized kinds only
+    indices: np.ndarray | None = None   # (k,) int32, topk only
+
+    @property
+    def nbytes(self) -> int:
+        total = self.payload.nbytes
+        if self.scales is not None:
+            total += self.scales.nbytes
+        if self.indices is not None:
+            total += self.indices.nbytes
+        return total
+
+
+def encode_leaf(x, cfg: CompressionConfig) -> EncodedLeaf:
+    """Encode one leaf into its compact wire format (host-side numpy)."""
+    arr = np.asarray(x)
+    n = arr.size
+    flat = jnp.asarray(arr, jnp.float32).reshape(-1)
+    if cfg.kind == "topk":
+        k = _topk_k(n, cfg)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        idx = np.asarray(idx, np.int32)
+        vals = np.asarray(flat, np.float32)[idx]
+        return EncodedLeaf(kind=cfg.kind, shape=arr.shape, dtype=arr.dtype,
+                           payload=vals, indices=idx)
+    blocks, valid = _blocked(flat, cfg)
+    if cfg.kind == "int8":
+        scale = _int8_scales(blocks)
+        q = jnp.clip(jnp.round(blocks * (127.0 / scale)), -127.0, 127.0)
+        codes = np.asarray(q, np.int8).reshape(-1)[:n]
+        return EncodedLeaf(kind=cfg.kind, shape=arr.shape, dtype=arr.dtype,
+                           payload=codes,
+                           scales=np.asarray(scale, np.float32).reshape(-1))
+    if cfg.kind == "onebit":
+        scale = _onebit_scales(blocks, valid)
+        signs = np.asarray(flat >= 0, bool)
+        return EncodedLeaf(kind=cfg.kind, shape=arr.shape, dtype=arr.dtype,
+                           payload=np.packbits(signs),
+                           scales=np.asarray(scale, np.float32).reshape(-1))
+    raise ValueError(f"unknown compression kind {cfg.kind!r}")
+
+
+def decode_leaf(enc: EncodedLeaf, cfg: CompressionConfig) -> jax.Array:
+    """Decode back to the leaf's shape/dtype.  Bit-identical to
+    ``qdq_leaf`` on the same input (same arithmetic, same order)."""
+    n = int(np.prod(enc.shape)) if enc.shape else 1
+    if enc.kind == "topk":
+        flat = jnp.zeros((n,), jnp.float32)
+        deq = flat.at[jnp.asarray(enc.indices)].set(jnp.asarray(enc.payload))
+        return deq.reshape(enc.shape).astype(enc.dtype)
+    nb = enc.scales.shape[0]
+    be = (cfg.block_elems or n)
+    scale = jnp.asarray(enc.scales, jnp.float32).reshape(nb, 1)
+    if enc.kind == "int8":
+        q = jnp.pad(jnp.asarray(enc.payload, jnp.float32), (0, nb * be - n))
+        deq = q.reshape(nb, be) * (scale / 127.0)
+    elif enc.kind == "onebit":
+        bits = np.unpackbits(enc.payload)[:n].astype(bool)
+        bits = jnp.pad(jnp.asarray(bits), (0, nb * be - n))
+        deq = jnp.where(bits.reshape(nb, be), scale, -scale)
+    else:
+        raise ValueError(f"unknown compression kind {enc.kind!r}")
+    return deq.reshape(-1)[:n].reshape(enc.shape).astype(enc.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Analytic byte ledger (consumed by core.costs and the async runtime)
+# ---------------------------------------------------------------------------
+
+def leaf_encoded_bytes(n: int, cfg: CompressionConfig | None) -> int:
+    """Wire bytes for one transmitted leaf of ``n`` elements: payload plus
+    per-block scales plus top-k indices.  ``cfg=None`` is the legacy dense
+    f32 ledger (4 bytes/param)."""
+    if n == 0:
+        return 0
+    if cfg is None:
+        return F32_BYTES * n
+    nb = _num_blocks(n, cfg)
+    if cfg.kind == "int8":
+        return INT8_BYTES * n + SCALE_BYTES * nb
+    if cfg.kind == "onebit":
+        return -(-n // 8) + SCALE_BYTES * nb
+    if cfg.kind == "topk":
+        return _topk_k(n, cfg) * (F32_BYTES + INDEX_BYTES)
+    raise ValueError(f"unknown compression kind {cfg.kind!r}")
+
+
+def group_encoded_bytes(params: PyTree, partition: Partition,
+                        cfg: CompressionConfig | None) -> np.ndarray:
+    """Per-group transmitted bytes under ``cfg`` — the compressed counterpart
+    of ``partition.group_param_bytes``.  Client-local statistics keep the
+    dense-f32 basis (they are not compressed; keeping them priced preserves
+    the legacy ledger exactly at ``cfg=None``)."""
+    out = np.zeros(partition.num_groups, dtype=np.int64)
+
+    def _add(path, leaf):
+        p = "/".join(masking._entry_str(e) for e in path)
+        n = int(np.prod(jnp.shape(leaf))) if jnp.shape(leaf) else 1
+        eff = None if aggregation.is_local_stat(p) else cfg
+        out[partition.group_of(p)] += leaf_encoded_bytes(n, eff)
+
+    jax.tree_util.tree_map_with_path(_add, params)
+    return out
+
+
+def tree_encoded_bytes(tree: PyTree, cfg: CompressionConfig | None) -> int:
+    """Total wire bytes of one (possibly pruned) transmitted subtree."""
+    total = 0
+
+    def _add(path, leaf):
+        nonlocal total
+        p = "/".join(masking._entry_str(e) for e in path)
+        n = int(np.prod(jnp.shape(leaf))) if jnp.shape(leaf) else 1
+        eff = None if aggregation.is_local_stat(p) else cfg
+        total += leaf_encoded_bytes(n, eff)
+
+    jax.tree_util.tree_map_with_path(_add, tree)
+    return total

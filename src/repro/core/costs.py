@@ -47,8 +47,22 @@ def comm_cost(
     params,
     partition: Partition,
     rounds: Sequence[RoundSpec],
+    compression=None,
 ) -> CommReport:
+    """Upstream bytes per client per round.
+
+    With ``compression`` (a ``core.compress.CompressionConfig``) the per-group
+    bytes are the *encoded* wire sizes (payload + per-block scales + top-k
+    indices — ``compress.group_encoded_bytes``); ``fnu_total_bytes`` stays the
+    dense-f32 FNU baseline so ``ratio_to_fnu`` reports the combined
+    partial-round x compression saving."""
     group_bytes = group_param_bytes(params, partition)
+    fnu_full = int(group_bytes.sum())
+    if compression is not None:
+        from repro.core import compress
+
+        group_bytes = compress.group_encoded_bytes(params, partition,
+                                                   compression)
     full = int(group_bytes.sum())
     per_round = np.array(
         [full if r.is_full else int(group_bytes[r.group]) for r in rounds],
@@ -57,7 +71,7 @@ def comm_cost(
     return CommReport(
         per_round_bytes=per_round,
         total_bytes=int(per_round.sum()),
-        fnu_total_bytes=full * len(rounds),
+        fnu_total_bytes=fnu_full * len(rounds),
     )
 
 

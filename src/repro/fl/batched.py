@@ -57,6 +57,18 @@ an AbstractMesh-traced shard_map for the sharded engine — so equal-width
 submeshes share a single trace and concurrent cohorts never contend for a
 device (docs/ENGINES.md, docs/ASYNC.md).
 
+Transmission compression (``core.compress``, docs/COMPRESSION.md): engines
+built with ``compression=`` (a ``CompressionConfig``; ``None`` = off, the
+byte-identical legacy paths) apply the quantize→dequantize transmission step
+to every client's update at the transmission boundary — the sequential oracle
+and the vmap engine right before aggregation, the shard_map engine *inside*
+the device program before the weight-scale psum (so only compressed-value
+subtrees ever cross the mesh).  Error-feedback residuals are per real client:
+``run_round`` then requires ``client_ids=`` so residuals persist across
+rounds regardless of cohort composition.  The async runtime compresses
+host-side at update resolution instead (``repro.fl.runtime.engine``), so
+``run_local_async`` always returns *uncompressed* locals.
+
 With ``donate=True`` (default) the batched engines donate the global params
 into the aggregation jit (in-place splice — ``run_round`` then *consumes* its
 params argument; thread the returned tree) and the stacked MOON prev-model
@@ -89,7 +101,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import aggregation, masking
+from repro.core import aggregation, compress, masking
 from repro.core.compat import SHARD_MAP_NO_CHECK_KW as _SHARD_MAP_KW
 from repro.core.compat import shard_map as _shard_map
 from repro.core.partition import Partition
@@ -161,17 +173,47 @@ def resolve_plan(plan, spec: RoundSpec, num_groups: int):
     return p
 
 
+class _CompressionState:
+    """Per-client error-feedback residual store shared by the engines.
+
+    Residuals are keyed by the *real* client id (not the cohort position), so
+    error feedback telescopes correctly across rounds with partial
+    participation.  Entirely inert when ``self.compression is None`` — no
+    state is allocated and no compression branch is ever taken."""
+
+    def _init_compression_state(self) -> None:
+        self._residuals: dict[int, PyTree] = {}
+
+    def _require_client_ids(self, client_ids, num: int) -> list[int] | None:
+        if self.compression is None:
+            return None
+        if client_ids is None:
+            raise ValueError(
+                "compression needs client_ids= on run_round: error-feedback "
+                "residuals persist per real client across rounds")
+        ids = [int(c) for c in client_ids]
+        if len(ids) != num:
+            raise ValueError(f"{len(ids)} client_ids for {num} client datasets")
+        return ids
+
+    def _residual_for(self, cid: int, params: PyTree) -> PyTree:
+        res = self._residuals.get(cid)
+        return res if res is not None else compress.init_residual(params)
+
+
 @dataclasses.dataclass
-class SequentialEngine:
+class SequentialEngine(_CompressionState):
     """Reference oracle: one client at a time, aggregation on host."""
 
     trainer: LocalTrainer
     partition: Partition
     algo: AlgoConfig
     fused_adam: bool = False
+    compression: compress.CompressionConfig | None = None
     name: str = "sequential"
 
     def __post_init__(self):
+        self._init_compression_state()
         if self.fused_adam:
             guard_fused_config(self.trainer.adam)
 
@@ -192,8 +234,10 @@ class SequentialEngine:
         prev_params: Sequence[PyTree | None] | None = None,
         tracker=None,
         plan=None,
+        client_ids: Sequence[int] | None = None,
     ) -> tuple[PyTree, list[float], list[PyTree] | None]:
         plan = resolve_plan(plan, spec, self.partition.num_groups)
+        ids = self._require_client_ids(client_ids, len(datasets))
         keep_locals = self.algo.name == "moon"
         uploads, losses, new_locals = [], [], ([] if keep_locals else None)
         for i, (ds, seed) in enumerate(zip(datasets, seeds)):
@@ -213,13 +257,24 @@ class SequentialEngine:
             )
             losses.append(loss)
             if keep_locals:
-                new_locals.append(local)
+                new_locals.append(local)     # MOON keeps the TRUE local model
+            send = local
+            if self.compression is not None:
+                # Transmission boundary: what travels (and is aggregated) is
+                # the compressed view global + Q(update + residual).
+                tx_groups = (groups_i if plan is not None
+                             else None if spec.is_full else (spec.group,))
+                res = self._residual_for(ids[i], params)
+                send, new_res = compress.transmit_tree(
+                    params, local, res, self.compression,
+                    partition=self.partition, groups=tx_groups)
+                self._residuals[ids[i]] = new_res
             if plan is not None:
-                uploads.append(masking.select(local, self.partition, groups_i))
+                uploads.append(masking.select(send, self.partition, groups_i))
             elif spec.is_full:
-                uploads.append(local)
+                uploads.append(send)
             else:
-                uploads.append(masking.select(local, self.partition, spec.group))
+                uploads.append(masking.select(send, self.partition, spec.group))
         if plan is not None:
             new_params = aggregation.aggregate_plan(
                 params, uploads, self.partition, plan, weights)
@@ -288,7 +343,7 @@ class SequentialEngine:
 
 
 @dataclasses.dataclass
-class _BatchedEngineBase:
+class _BatchedEngineBase(_CompressionState):
     """Shared pad-and-mask local-round core for the stacked engines.
 
     Owns the pieces both batched engines agree on:
@@ -312,12 +367,14 @@ class _BatchedEngineBase:
     algo: AlgoConfig
     donate: bool = True
     fused_adam: bool = False
+    compression: compress.CompressionConfig | None = None
 
     def __post_init__(self):
         self.trace_count = 0
         self._local_fns: dict[tuple[int, bool], Callable] = {}
         self._agg_fns: dict[Any, Callable] = {}
         self._cohort_fns: dict[tuple[int, bool], Callable] = {}
+        self._init_compression_state()
         if self.fused_adam:
             guard_fused_config(self.trainer.adam)
 
@@ -475,6 +532,21 @@ class _BatchedEngineBase:
         g = np.zeros((bucket.num_clients, plan.shape[1]), dtype=np.float32)
         g[: bucket.num_real] = plan[list(bucket.members)]
         return g
+
+    def _stacked_residuals(self, ids: Sequence[int], members: Sequence[int],
+                           num_clients: int, params: PyTree) -> PyTree:
+        """Stack the given cohort members' error-feedback residuals along the
+        client axis (all-zero residuals for padding clients)."""
+        rs = [self._residual_for(ids[m], params) for m in members]
+        rs += [compress.init_residual(params)] * (num_clients - len(rs))
+        return masking.stack_trees(rs)
+
+    def _store_residuals(self, ids: Sequence[int], members: Sequence[int],
+                         new_res_stacked: PyTree) -> None:
+        """Write back per-client residual slices (padding rows dropped)."""
+        for i, m in enumerate(members):
+            self._residuals[ids[m]] = jax.tree.map(
+                lambda x, i=i: x[i], new_res_stacked)
 
     def _guard_round(self, weights: Sequence[float], tracker) -> None:
         if tracker is not None:
@@ -757,6 +829,46 @@ class VmapEngine(_BatchedEngineBase):
         self._agg_fns["plan"] = jax.jit(agg, donate_argnums=self._donate_params())
         return self._agg_fns["plan"]
 
+    def _tx_fn(self, group: int) -> Callable:
+        """Jitted vmapped transmission-compression step: the cohort's stacked
+        true locals + per-client residuals -> (compressed server view
+        ``global + Q(update + residual)``, new residuals).  Runs between the
+        local round and the stacked aggregation — the vmap engine's
+        transmission boundary."""
+        key = ("tx", group)
+        if key in self._agg_fns:
+            return self._agg_fns[key]
+        partition, cfg = self.partition, self.compression
+        sel = None if group < 0 else (group,)
+
+        def tx(global_params, stacked, res):
+            self.trace_count += 1
+            return jax.vmap(
+                lambda l, r: compress.transmit_tree(
+                    global_params, l, r, cfg, partition=partition, groups=sel)
+            )(stacked, res)
+
+        self._agg_fns[key] = jax.jit(tx)
+        return self._agg_fns[key]
+
+    def _plan_tx_fn(self) -> Callable:
+        """``_tx_fn`` for heterogeneous cohorts: the per-client group bitmask
+        rides the stacked axis, so one program serves every plan."""
+        key = ("tx", "plan")
+        if key in self._agg_fns:
+            return self._agg_fns[key]
+        partition, cfg = self.partition, self.compression
+
+        def tx(global_params, stacked, res, plan_f):
+            self.trace_count += 1
+            return jax.vmap(
+                lambda l, r, m: compress.transmit_tree_plan(
+                    global_params, l, r, m, cfg, partition=partition)
+            )(stacked, res, plan_f)
+
+        self._agg_fns[key] = jax.jit(tx)
+        return self._agg_fns[key]
+
     # -- round execution ---------------------------------------------------
 
     def run_round(
@@ -772,9 +884,11 @@ class VmapEngine(_BatchedEngineBase):
         prev_params: Sequence[PyTree | None] | None = None,
         tracker=None,
         plan=None,
+        client_ids: Sequence[int] | None = None,
     ) -> tuple[PyTree, list[float], list[PyTree] | None]:
         self._guard_round(weights, tracker)
         plan = resolve_plan(plan, spec, self.partition.num_groups)
+        ids = self._require_client_ids(client_ids, len(datasets))
         group = FULL_NETWORK if spec.is_full else spec.group
         use_prev = self.algo.name == "moon"
         num = len(datasets)
@@ -797,13 +911,22 @@ class VmapEngine(_BatchedEngineBase):
             parts.append((bucket.members, (locals_stacked, bucket_losses)))
 
         stacked, losses_dev = self._gather_order(parts, num)
+        agg_in = stacked                 # MOON keeps the TRUE locals below
+        if self.compression is not None:
+            res = self._stacked_residuals(ids, range(num), num, params)
+            if plan is None:
+                agg_in, new_res = self._tx_fn(group)(params, stacked, res)
+            else:
+                agg_in, new_res = self._plan_tx_fn()(
+                    params, stacked, res, jnp.asarray(plan, jnp.float32))
+            self._store_residuals(ids, range(num), new_res)
         if plan is None:
             new_params = self._agg_fn(group)(
-                params, stacked, jnp.asarray(weights, dtype=jnp.float32)
+                params, agg_in, jnp.asarray(weights, dtype=jnp.float32)
             )
         else:
             new_params = self._plan_agg_fn()(
-                params, stacked, jnp.asarray(plan, dtype=jnp.float32),
+                params, agg_in, jnp.asarray(plan, dtype=jnp.float32),
                 jnp.asarray(weights, dtype=jnp.float32)
             )
         losses = [float(x) for x in np.asarray(losses_dev)]
@@ -861,6 +984,54 @@ class ShardMapEngine(_BatchedEngineBase):
         prev_axis = 0 if stacked_prev else None
 
         fused = self.fused_adam
+        cfg = self.compression
+
+        if cfg is not None:
+            # Compressed transmission boundary: each device quantizes its
+            # clients' updates (with per-client error-feedback residuals
+            # riding the client axis) BEFORE the weight-scale psum, so only
+            # compressed-value subtrees ever cross the mesh.  The epilogue is
+            # always the per-leaf tree form — the fused packed epilogue stays
+            # reserved for the uncompressed path (training steps may still
+            # run the fused kernel; only the reduction differs).
+            sel = None if group < 0 else (group,)
+
+            def device_round(global_params, inputs, labels, step_valid, prev,
+                             w_norm, res):
+                self.trace_count += 1
+                locals_stacked, losses = jax.vmap(
+                    one_client, in_axes=(None, 0, 0, 0, prev_axis)
+                )(global_params, inputs, labels, step_valid, prev)
+                tx_stacked, new_res = jax.vmap(
+                    lambda l, r: compress.transmit_tree(
+                        global_params, l, r, cfg, partition=partition,
+                        groups=sel)
+                )(locals_stacked, res)
+                sub = (
+                    tx_stacked if group < 0
+                    else masking.select(tx_stacked, partition, group)
+                )
+                sub = aggregation.drop_local_stats(sub)
+                update = jax.tree.map(
+                    lambda x: jnp.tensordot(w_norm, x.astype(jnp.float32),
+                                            axes=1), sub
+                )
+                update = jax.lax.psum(update, CLIENT_AXIS)
+                if stacked_prev:
+                    return update, losses, locals_stacked, new_res
+                return update, losses, new_res
+
+            c = P(CLIENT_AXIS)
+            in_specs = (P(), c, c, c, c if stacked_prev else P(), c, c)
+            out_specs = ((P(), c, c, c) if stacked_prev else (P(), c, c))
+            self._local_fns[key] = jax.jit(
+                _shard_map(
+                    device_round, mesh=self.mesh, in_specs=in_specs,
+                    out_specs=out_specs, **_SHARD_MAP_KW,
+                ),
+                donate_argnums=self._donate_prev(stacked_prev),
+            )
+            return self._local_fns[key]
 
         def device_round(global_params, inputs, labels, step_valid, prev, w_norm):
             self.trace_count += 1
@@ -922,6 +1093,47 @@ class ShardMapEngine(_BatchedEngineBase):
         prev_axis = 0 if stacked_prev else None
 
         fused = self.fused_adam
+        cfg = self.compression
+
+        if cfg is not None:
+            # Compressed plan boundary: per-client traced bitmask decides
+            # which leaves consume error feedback and travel; the per-leaf
+            # plan-weighted psum epilogue follows (tree form — see _local_fn).
+            def device_round(global_params, inputs, labels, step_valid, prev,
+                             gmask, eff_w, res):
+                self.trace_count += 1
+                locals_stacked, losses = jax.vmap(
+                    one_client, in_axes=(None, 0, 0, 0, prev_axis, 0)
+                )(global_params, inputs, labels, step_valid, prev, gmask)
+                tx_stacked, new_res = jax.vmap(
+                    lambda l, r, m: compress.transmit_tree_plan(
+                        global_params, l, r, m, cfg, partition=partition)
+                )(locals_stacked, res, gmask)
+                sub = aggregation.drop_local_stats(tx_stacked)
+
+                def _wsum(path, x):
+                    g = partition.group_of(
+                        "/".join(masking._entry_str(e) for e in path))
+                    return jnp.tensordot(eff_w[:, g], x.astype(jnp.float32),
+                                         axes=1)
+
+                update = jax.tree_util.tree_map_with_path(_wsum, sub)
+                update = jax.lax.psum(update, CLIENT_AXIS)
+                if stacked_prev:
+                    return update, losses, locals_stacked, new_res
+                return update, losses, new_res
+
+            c = P(CLIENT_AXIS)
+            in_specs = (P(), c, c, c, c if stacked_prev else P(), c, c, c)
+            out_specs = ((P(), c, c, c) if stacked_prev else (P(), c, c))
+            self._local_fns[key] = jax.jit(
+                _shard_map(
+                    device_round, mesh=self.mesh, in_specs=in_specs,
+                    out_specs=out_specs, **_SHARD_MAP_KW,
+                ),
+                donate_argnums=self._donate_prev(stacked_prev),
+            )
+            return self._local_fns[key]
 
         def device_round(global_params, inputs, labels, step_valid, prev,
                          gmask, eff_w):
@@ -1101,7 +1313,9 @@ class ShardMapEngine(_BatchedEngineBase):
             return self._agg_fns[key]
         partition = self.partition
 
-        if self.fused_adam:
+        # Compressed rounds always reduce in the per-leaf tree form (the
+        # packed epilogue is the uncompressed fused path's fast lane).
+        if self.fused_adam and self.compression is None:
             def splice(global_params, updates):
                 # Scatter the summed transmitted rows into the packed global
                 # and unpack — ``unpack`` restores each leaf's recorded
@@ -1139,7 +1353,7 @@ class ShardMapEngine(_BatchedEngineBase):
             return self._agg_fns[key]
         partition = self.partition
 
-        if self.fused_adam:
+        if self.fused_adam and self.compression is None:
             def splice(global_params, updates, trained):
                 # Row-granular zero-trainer freeze: a row whose group nobody
                 # trained keeps the packed global's value bit-exact, exactly
@@ -1183,9 +1397,11 @@ class ShardMapEngine(_BatchedEngineBase):
         prev_params: Sequence[PyTree | None] | None = None,
         tracker=None,
         plan=None,
+        client_ids: Sequence[int] | None = None,
     ) -> tuple[PyTree, list[float], list[PyTree] | None]:
         self._guard_round(weights, tracker)
         plan = resolve_plan(plan, spec, self.partition.num_groups)
+        ids = self._require_client_ids(client_ids, len(datasets))
         group = FULL_NETWORK if spec.is_full else spec.group
         use_prev = self.algo.name == "moon"
         num = len(datasets)
@@ -1208,12 +1424,16 @@ class ShardMapEngine(_BatchedEngineBase):
             prev_params=prev_params, use_prev=use_prev,
             pad_clients_to=self.num_devices,
         ):
+            res_args: tuple = ()
+            if self.compression is not None:
+                res_args = (self._stacked_residuals(
+                    ids, bucket.members, bucket.num_clients, params),)
             if plan is None:
                 wb = np.zeros(bucket.num_clients, dtype=np.float32)
                 wb[: bucket.num_real] = w_norm[list(bucket.members)]
                 fn = self._local_fn(group, stacked_prev=use_prev)
                 out = fn(params, bucket.inputs, bucket.labels,
-                         bucket.step_valid, prev_arg, wb)
+                         bucket.step_valid, prev_arg, wb, *res_args)
             else:
                 wb = np.zeros((bucket.num_clients, plan.shape[1]),
                               dtype=np.float32)
@@ -1221,7 +1441,7 @@ class ShardMapEngine(_BatchedEngineBase):
                 fn = self._plan_local_fn(stacked_prev=use_prev)
                 out = fn(params, bucket.inputs, bucket.labels,
                          bucket.step_valid, prev_arg,
-                         self._bucket_gmask(plan, bucket), wb)
+                         self._bucket_gmask(plan, bucket), wb, *res_args)
             update, bucket_losses = out[0], out[1]
             updates.append(update)
             n = bucket.num_real
@@ -1231,6 +1451,8 @@ class ShardMapEngine(_BatchedEngineBase):
                     bucket.members,
                     jax.tree.map(lambda x: x[:n], out[2]),
                 ))
+            if self.compression is not None:
+                self._store_residuals(ids, bucket.members, out[-1])
 
         if plan is None:
             new_params = self._splice_fn(group, len(updates))(params, updates)
@@ -1256,6 +1478,7 @@ def make_engine(
     sim_devices: int = 0,
     donate: bool = True,
     fused_adam: bool = False,
+    compression: compress.CompressionConfig | None = None,
 ):
     """Build a client-simulation engine by name.
 
@@ -1277,15 +1500,22 @@ def make_engine(
     kernel (interpret mode off-TPU — docs/KERNELS.md): packed (rows, 128)
     optimizer state, block-masked fused update, and on the shard_map engine
     a packed weight-scale epilogue feeding the on-mesh psum.
+
+    ``compression`` (a ``core.compress.CompressionConfig``, or ``None`` for
+    the byte-identical legacy paths) compresses every client's transmitted
+    update at the engine's transmission boundary with per-client
+    error-feedback residuals; ``run_round`` then requires ``client_ids=``
+    (docs/COMPRESSION.md).
     """
     if name == "sequential":
         return SequentialEngine(trainer=trainer, partition=partition, algo=algo,
-                                fused_adam=fused_adam)
+                                fused_adam=fused_adam, compression=compression)
     if name == "vmap":
         return VmapEngine(trainer=trainer, partition=partition, algo=algo,
-                          donate=donate, fused_adam=fused_adam)
+                          donate=donate, fused_adam=fused_adam,
+                          compression=compression)
     if name == "shard_map":
         return ShardMapEngine(trainer=trainer, partition=partition, algo=algo,
                               donate=donate, devices=sim_devices,
-                              fused_adam=fused_adam)
+                              fused_adam=fused_adam, compression=compression)
     raise ValueError(f"unknown engine {name!r}; expected one of {ENGINES}")

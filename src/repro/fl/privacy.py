@@ -10,7 +10,7 @@ drops accordingly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,12 +54,19 @@ def dlg_attack(
     *,
     partition: Partition | None = None,
     group: int | None = None,
+    observe_transform: Optional[Callable[[PyTree], PyTree]] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Run DLG.  ``loss_fn(params, x)`` is the client training loss for input
     ``x`` (labels closed over — the paper's setting with known labels).
 
     If ``partition``/``group`` are given, the attacker only observes the
     gradients of that layer group (FedPart's transmitted subset).
+
+    ``observe_transform`` models a lossy channel between client and attacker:
+    it is applied to the *target* observation only (e.g. the int8 / 1-bit
+    quantize-dequantize of ``core.compress`` — what an eavesdropper on the
+    compressed wire actually sees), while the attacker still matches with its
+    own exact candidate gradients, per the strongest-attacker convention.
 
     Returns (reconstructed_x, final gradient-match loss).
     """
@@ -76,7 +83,10 @@ def dlg_attack(
         def observed_grads(x):
             return _grad_of_sample(loss_fn, params, x)
 
-    target_g = jax.lax.stop_gradient(observed_grads(target_x))
+    target_g = observed_grads(target_x)
+    if observe_transform is not None:
+        target_g = observe_transform(target_g)
+    target_g = jax.lax.stop_gradient(target_g)
 
     def attack_loss(x_hat):
         return _grad_match_loss(observed_grads(x_hat), target_g)

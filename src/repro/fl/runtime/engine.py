@@ -53,6 +53,16 @@ losses / cost books match ``run_federated`` to <=1e-5 under every engine.
 The dispatch decisions depend only on virtual events, never on host speed or
 device count, so a given config is reproducible on any machine; submeshes
 only decide *where* a cohort's compiled program runs.
+
+**Transmission compression** (``FLRunConfig.compression``, ``core.compress``,
+docs/COMPRESSION.md): the local training programs are untouched
+(``run_local_async`` always returns exact locals); quantisation happens
+host-side at update *resolution*, against the dispatch-version model, with a
+runtime-owned per-client error-feedback residual.  Buffered ``ClientUpdate``
+subtrees therefore hold the *decompressed* server view — staleness
+discounting and the policy merge operate on values — while each update's
+``comm_bytes`` (and hence ``VirtualTimeModel.comm_seconds``) books the
+*encoded* wire size from the ``core.compress`` byte ledger.
 """
 
 from __future__ import annotations
@@ -65,7 +75,7 @@ from typing import TYPE_CHECKING, Any, Sequence
 import jax
 import numpy as np
 
-from repro.core import aggregation, masking
+from repro.core import aggregation, compress, masking
 from repro.core.costs import comm_cost, comp_cost, plan_step_flops
 from repro.core.partition import (group_param_bytes, group_param_counts,
                                   total_param_bytes)
@@ -180,10 +190,21 @@ def run_federated_async(
     eval_fn = jax.jit(adapter.evaluate)
     is_moon = run_cfg.algo.name == "moon"
     prev_store: dict[int, PyTree] = {}
+    ccfg = compress.make_config(
+        run_cfg.compression, topk_fraction=run_cfg.topk_fraction,
+        error_feedback=run_cfg.error_feedback,
+        block_rows=run_cfg.compression_block_rows)
+    residuals: dict[int, PyTree] = {}  # per-client EF residual (full tree)
 
-    # Cost tables: upstream bytes + per-step flops per scheduled group.
-    group_bytes = group_param_bytes(params, partition)
-    full_bytes = int(total_param_bytes(params))
+    # Cost tables: upstream bytes + per-step flops per scheduled group.  With
+    # compression on, the upstream table prices the *encoded* wire format
+    # (payload + scales + indices; BN stats stay dense-f32).
+    if ccfg is None:
+        group_bytes = group_param_bytes(params, partition)
+        full_bytes = int(total_param_bytes(params))
+    else:
+        group_bytes = compress.group_encoded_bytes(params, partition, ccfg)
+        full_bytes = int(group_bytes.sum())
     group_counts = group_param_counts(params, partition).astype(np.float64)
     _flops_cache: dict[int, float] = {}
 
@@ -278,9 +299,37 @@ def run_federated_async(
             # traffic) so the merge never mixes committed devices.
             sub = jax.device_put(sub, home)
         subs = masking.unstack_tree(sub, len(cohort.picked))
+        # Host-side transmission compression: quantise each member's subtree
+        # against the dispatch-version model (stats already dropped), carrying
+        # the per-client EF residual across dispatches.  The buffered subtree
+        # is the *decompressed* server view; ``comm_bytes`` already booked the
+        # encoded size at dispatch.
+        g_views: dict = {}
+
+        def _g_view(sel):
+            if sel not in g_views:
+                t = (cohort.params if sel is None
+                     else masking.select(cohort.params, partition, sel))
+                g_views[sel] = aggregation.drop_local_stats(t)
+            return g_views[sel]
+
         for i, upd in enumerate(cohort.updates):
-            upd.subtree = (subs[i] if upd.groups is None else
-                           masking.select(subs[i], partition, upd.groups))
+            upd_sub = (subs[i] if upd.groups is None else
+                       masking.select(subs[i], partition, upd.groups))
+            if ccfg is not None:
+                sel = (upd.groups if upd.groups is not None
+                       else (None if spec.is_full else spec.group))
+                res_full = residuals.get(upd.client_id)
+                if res_full is None:
+                    res_full = compress.init_residual(cohort.params)
+                res_sub = aggregation.drop_local_stats(
+                    res_full if sel is None
+                    else masking.select(res_full, partition, sel))
+                upd_sub, new_res = compress.transmit_tree(
+                    _g_view(sel), upd_sub, res_sub, ccfg, partition=partition)
+                residuals[upd.client_id] = masking.tree_update(
+                    res_full, new_res)
+            upd.subtree = upd_sub
             upd.loss = losses[i]
         # Drop the big references now, not at last-straggler pop: the params
         # snapshot, the in-flight outputs, and (MOON) the superseded
@@ -361,6 +410,7 @@ def run_federated_async(
                 subtree=None, weight=float(len(datasets[i])),
                 loss=float("nan"), dispatched_t=t, completed_t=t + dur,
                 comp_flops=flops, comm_bytes=ub, groups=groups_i,
+                encoding=None if ccfg is None else ccfg.kind,
             )
             members.append((upd, "drop" if avail.drops() else "complete"))
             end_t = max(end_t, t + dur)
@@ -476,7 +526,7 @@ def run_federated_async(
     # Cost books over the committed server rounds — identical to the sync
     # ledger by construction (the schedule advanced exactly through `rounds`);
     # the timeline holds the per-update async accounting on top.
-    comm = comm_cost(params, partition, rounds)
+    comm = comm_cost(params, partition, rounds, compression=ccfg)
     comp = comp_cost(partition, rounds, group_fwd_flops=group_counts)
     return FLResult(
         history=history,

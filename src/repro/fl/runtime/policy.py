@@ -24,6 +24,11 @@ the *current* global model — a stale update for group ``g`` merges against
 today's frozen context, never against the model it was trained from.  The
 averaging path reuses ``core.aggregation`` (``tree_mean_stacked`` + splice),
 i.e. exactly the synchronous engines' aggregation arithmetic.
+
+Updates may arrive compressed (``ClientUpdate.encoding``, ``core.compress``):
+the runtime decompresses at resolution, so every policy here is agnostic —
+staleness scales and merges apply to decompressed values, and the encoded
+wire size only matters to the cost books (``comm_bytes``).
 """
 
 from __future__ import annotations
@@ -62,6 +67,12 @@ class ClientUpdate:
     # The subtree then holds the *union* of the trained groups and the merge
     # splices per (client, group).
     groups: tuple[int, ...] | None = None
+    # Transmission compression (core.compress): the wire format this update
+    # travelled in ("int8" | "onebit" | "topk"; None = exact).  ``subtree``
+    # always holds the *decompressed* server view — the merge and staleness
+    # discounting below are value-level and never see codes — while
+    # ``comm_bytes`` books the *encoded* size (docs/COMPRESSION.md).
+    encoding: str | None = None
 
     def staleness(self, current_version: int) -> int:
         return max(current_version - self.version, 0)

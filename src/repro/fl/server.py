@@ -38,6 +38,11 @@ Orthogonally to both, ``FLRunConfig(plan=..., capacity_tiers=...)`` picks the
 group exactly as before; ``"nested"`` / ``"random"`` give capacity-tiered
 clients different group subsets in the same round, and aggregation averages
 each group over only the clients that trained it (docs/HETEROGENEITY.md).
+
+``FLRunConfig(compression=...)`` additionally compresses the transmitted
+subtree at the client→server boundary (int8 / 1-bit / top-k with per-client
+error feedback, ``core.compress``); ``"none"`` (default) is structurally
+absent — today's paths bit-for-bit (docs/COMPRESSION.md).
 """
 
 from __future__ import annotations
@@ -48,6 +53,7 @@ from typing import Any, Sequence
 import jax
 import numpy as np
 
+from repro.core import compress
 from repro.core.costs import VirtualTimeModel, comm_cost, comp_cost
 from repro.core.partition import Partition, group_param_counts
 from repro.core.schedule import PlanAssigner, RoundSpec
@@ -80,6 +86,11 @@ class FLRunConfig:
     sim_devices: int = 0            # shard_map mesh size (0 = all devices)
     donate_buffers: bool = True     # donate params into the agg jit + MOON prev stack (batched engines)
     fused_adam: bool = False        # Pallas masked-Adam local steps (docs/KERNELS.md)
+    # -- transmitted-subtree compression (core.compress, docs/COMPRESSION.md)
+    compression: str = "none"       # "none" | "int8" | "onebit" | "topk"
+    topk_fraction: float = 0.01     # retained fraction per leaf (topk only)
+    error_feedback: bool = True     # per-client EF residuals (compressed kinds)
+    compression_block_rows: int = 0  # scale granularity: 0 = per leaf, B = B*128-elem blocks
     # -- per-client layer plans (heterogeneous fleets, docs/HETEROGENEITY.md)
     plan: str = "homogeneous"       # "homogeneous" | "nested" | "random"
     capacity_tiers: tuple[float, ...] = ()  # tier capacities in (0,1]; () = one full-capacity tier
@@ -149,10 +160,15 @@ def run_federated(
         algo=run_cfg.algo,
         adam=AdamConfig(lr=run_cfg.lr, eps=run_cfg.adam_eps),
     )
+    ccfg = compress.make_config(
+        run_cfg.compression, topk_fraction=run_cfg.topk_fraction,
+        error_feedback=run_cfg.error_feedback,
+        block_rows=run_cfg.compression_block_rows)
     engine = make_engine(
         run_cfg.engine, trainer=trainer, partition=partition,
         algo=run_cfg.algo, sim_devices=run_cfg.sim_devices,
         donate=run_cfg.donate_buffers, fused_adam=run_cfg.fused_adam,
+        compression=ccfg,
     )
     assigner = PlanAssigner(
         num_groups=partition.num_groups, kind=run_cfg.plan,
@@ -189,6 +205,7 @@ def run_federated(
             prev_params=prevs,
             tracker=tracker,
             plan=assigner.assign(spec, [int(ci) for ci in picked]),
+            client_ids=[int(ci) for ci in picked],
         )
         if new_locals is not None:
             for ci, local in zip(picked, new_locals):
@@ -206,7 +223,7 @@ def run_federated(
 
     # Cost bookkeeping (per client, per the paper's Comm./Comp. metrics).
     group_weights = group_param_counts(params, partition).astype(np.float64)
-    comm = comm_cost(params, partition, rounds)
+    comm = comm_cost(params, partition, rounds, compression=ccfg)
     comp = comp_cost(partition, rounds, group_fwd_flops=group_weights)
     return FLResult(
         history=history,

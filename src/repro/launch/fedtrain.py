@@ -48,6 +48,13 @@ trained it:
 
     python -m repro.launch.fedtrain --sim-clients 8 --rounds 12 \
         --engine vmap --plan nested --capacity-tiers 0.3 0.6 1.0
+
+``--compression int8|onebit|topk`` quantises/sparsifies the transmitted
+subtree at the client→server boundary with per-client error feedback
+(docs/COMPRESSION.md); the comm ledger then prices the encoded wire format:
+
+    python -m repro.launch.fedtrain --sim-clients 8 --rounds 12 \
+        --engine vmap --compression int8
 """
 
 from __future__ import annotations
@@ -157,6 +164,10 @@ def run_simulation(args) -> int:
                       max_inflight_cohorts=args.max_inflight,
                       plan=args.plan,
                       capacity_tiers=tuple(args.capacity_tiers),
+                      compression=args.compression,
+                      topk_fraction=args.topk_fraction,
+                      error_feedback=not args.no_error_feedback,
+                      compression_block_rows=args.compression_block_rows,
                       availability=AvailabilityConfig(
                           speed_spread=args.speed_spread,
                           latency_jitter=args.latency_jitter,
@@ -235,6 +246,22 @@ def main(argv=None) -> int:
                     help="capacity fractions in (0, 1], one per tier, clients "
                          "assigned round-robin (e.g. 0.3 0.6 1.0); empty = "
                          "one full-capacity tier")
+    ap.add_argument("--compression",
+                    choices=["none", "int8", "onebit", "topk"],
+                    default="none",
+                    help="transmitted-subtree compression for --sim-clients "
+                         "(docs/COMPRESSION.md): symmetric int8, 1-bit "
+                         "sign+scale, or top-k sparsification, each with "
+                         "per-client error feedback")
+    ap.add_argument("--topk-fraction", type=float, default=0.01,
+                    help="retained fraction per leaf under --compression topk")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="disable the per-client error-feedback residual "
+                         "(compressed kinds only)")
+    ap.add_argument("--compression-block-rows", type=int, default=0,
+                    help="quantisation scale granularity: 0 = one scale per "
+                         "leaf, B = one per B*128-element block (the masked-"
+                         "Adam packed-row layout, docs/KERNELS.md)")
     ap.add_argument("--speed-spread", type=float, default=0.0,
                     help="per-client compute-speed heterogeneity (log-uniform "
                          "spread; 0 = homogeneous fleet)")

@@ -1,0 +1,324 @@
+"""Transmission-compression properties (core.compress, docs/COMPRESSION.md).
+
+Pins the module's contracts (ISSUE 7):
+
+* quantize→dequantize round-trips preserve shape and per-leaf dtype — checked
+  through ``PackMeta`` (the packed masked-Adam layout's dtype-fidelity record),
+  so the compressed path composes with the kernel's pack/unpack;
+* int8 elementwise error is bounded by ``scale / 254`` per block;
+* error-feedback residuals telescope: after any number of rounds,
+  ``sum(transmitted) + residual == sum(true updates)``;
+* the host wire format (``encode_leaf`` / ``decode_leaf``) is bit-identical
+  to the on-device ``qdq_leaf`` path and its actual array bytes equal the
+  analytic ledger (``leaf_encoded_bytes``);
+* ``compression="none"`` is structurally absent (``make_config`` returns
+  ``None``; ``CompressionConfig`` refuses the kind).
+
+Property-based via hypothesis when available, with seeded deterministic
+fallbacks mirroring tests/test_kernels_adam.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compress
+from repro.core.compress import CompressionConfig, make_config
+from repro.kernels.masked_adam import ops
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAS_HYPOTHESIS = False
+
+KINDS = ("int8", "onebit", "topk")
+_SHAPES = [(7,), (16,), (130,), (4, 33), (8, 128), (3, 5, 7), ()]
+_DTYPES = [jnp.float32, jnp.bfloat16, jnp.float16]
+
+
+def _cfg(kind, block_rows=0, topk_fraction=0.25):
+    return CompressionConfig(kind=kind, block_rows=block_rows,
+                             topk_fraction=topk_fraction)
+
+
+def _rand(shape, dtype, seed):
+    x = jax.random.normal(jax.random.key(seed), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# "none" is structurally absent
+# ---------------------------------------------------------------------------
+
+def test_make_config_none_returns_none():
+    assert make_config("none") is None
+    assert make_config() is None
+
+
+def test_config_rejects_none_kind():
+    with pytest.raises(ValueError):
+        CompressionConfig(kind="none")
+    with pytest.raises(ValueError):
+        make_config("gzip")
+    with pytest.raises(ValueError):
+        CompressionConfig(kind="topk", topk_fraction=0.0)
+    with pytest.raises(ValueError):
+        CompressionConfig(kind="int8", block_rows=-1)
+
+
+def test_leaf_encoded_bytes_none_is_dense_f32():
+    assert compress.leaf_encoded_bytes(100, None) == 400
+    assert compress.leaf_encoded_bytes(0, None) == 0
+
+
+# ---------------------------------------------------------------------------
+# round-trip: shape + per-leaf dtype via PackMeta
+# ---------------------------------------------------------------------------
+
+def _mixed_tree(seed=0):
+    return {
+        "a": {"w": _rand((8, 128), jnp.float32, seed),
+              "b": _rand((33,), jnp.bfloat16, seed + 1)},
+        "c": {"s": _rand((), jnp.float32, seed + 2),
+              "h": _rand((4, 33), jnp.float16, seed + 3)},
+    }
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("block_rows", [0, 1])
+def test_roundtrip_preserves_packmeta(kind, block_rows):
+    """qdq (engines) and encode→decode (wire) both return trees whose packed
+    layout — shapes, sizes, per-leaf dtypes recorded in PackMeta — is
+    identical to the input's."""
+    tree = _mixed_tree()
+    cfg = _cfg(kind, block_rows)
+    qdq = jax.tree.map(
+        lambda x: compress.qdq_leaf(x.astype(jnp.float32), cfg).astype(x.dtype),
+        tree)
+    wire = jax.tree.map(
+        lambda x: compress.decode_leaf(compress.encode_leaf(x, cfg), cfg), tree)
+    _, meta0 = ops.pack(tree)
+    for restored in (qdq, wire):
+        _, meta = ops.pack(restored)
+        assert meta.shapes == meta0.shapes
+        assert meta.sizes == meta0.sizes
+        assert meta.dtypes == meta0.dtypes
+        assert meta.treedef == meta0.treedef
+
+
+# ---------------------------------------------------------------------------
+# int8 error bound: |x - deq| <= scale / 254 per block
+# ---------------------------------------------------------------------------
+
+def _assert_int8_bound(x, block_rows):
+    cfg = _cfg("int8", block_rows)
+    flat = jnp.asarray(x, jnp.float32).reshape(-1)
+    deq = compress.qdq_leaf(flat, cfg)
+    blocks, _ = compress._blocked(flat, cfg)
+    scale = compress._int8_scales(blocks)          # (nb, 1)
+    err, _ = compress._blocked(jnp.abs(flat - deq), cfg)
+    bound = scale / 254.0 + 1e-7 * scale           # f32 rounding headroom
+    assert bool(jnp.all(err <= bound)), (
+        f"int8 error {float(err.max())} exceeds bound {float(bound.max())}")
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 300])
+@pytest.mark.parametrize("block_rows", [0, 1])
+def test_int8_error_bound_seeded(n, block_rows):
+    _assert_int8_bound(_rand((n,), jnp.float32, n), block_rows)
+
+
+def test_int8_zero_block_is_exact():
+    cfg = _cfg("int8")
+    z = jnp.zeros((64,), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(compress.qdq_leaf(z, cfg)),
+                                  np.zeros(64, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# error-feedback telescoping: sum(c) + r == sum(u)
+# ---------------------------------------------------------------------------
+
+def _assert_telescopes(kind, updates, block_rows=0):
+    cfg = _cfg(kind, block_rows)
+    g = jnp.zeros_like(updates[0])
+    res = jnp.zeros_like(updates[0])
+    sent = jnp.zeros_like(updates[0])
+    for u in updates:
+        tx, res = compress.transmit_leaf(g, g + u, res, cfg)
+        sent = sent + (tx - g)
+    total = np.asarray(sum(np.asarray(u, np.float64) for u in updates))
+    np.testing.assert_allclose(np.asarray(sent) + np.asarray(res), total,
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_error_feedback_telescopes_seeded(kind):
+    updates = [_rand((96,), jnp.float32, 10 + t) * 0.1 for t in range(5)]
+    _assert_telescopes(kind, updates)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_no_error_feedback_keeps_residual_zero(kind):
+    cfg = CompressionConfig(kind=kind, error_feedback=False, topk_fraction=0.25)
+    g = jnp.zeros((64,), jnp.float32)
+    res = jnp.zeros_like(g)
+    for t in range(3):
+        _, res = compress.transmit_leaf(g, g + _rand((64,), jnp.float32, t),
+                                        res, cfg)
+    np.testing.assert_array_equal(np.asarray(res), np.zeros(64, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# wire format == on-device qdq, bit for bit; bytes match the analytic model
+# ---------------------------------------------------------------------------
+
+def _assert_wire_matches_qdq(x, kind, block_rows):
+    cfg = _cfg(kind, block_rows)
+    qdq = compress.qdq_leaf(jnp.asarray(x, jnp.float32), cfg)
+    enc = compress.encode_leaf(x, cfg)
+    dec = compress.decode_leaf(enc, cfg)
+    np.testing.assert_array_equal(np.asarray(qdq, np.float32),
+                                  np.asarray(dec, np.float32))
+    assert enc.nbytes == compress.leaf_encoded_bytes(int(np.asarray(x).size),
+                                                     cfg)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("shape", [(5,), (128,), (4, 33), (8, 128)])
+@pytest.mark.parametrize("block_rows", [0, 1])
+def test_wire_matches_qdq_seeded(kind, shape, block_rows):
+    _assert_wire_matches_qdq(_rand(shape, jnp.float32, sum(shape)), kind,
+                             block_rows)
+
+
+def test_topk_keeps_largest_magnitudes():
+    cfg = _cfg("topk", topk_fraction=0.25)
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -0.3], jnp.float32)
+    deq = np.asarray(compress.qdq_leaf(x, cfg))
+    # k = ceil(0.25 * 8) = 2: only the two largest-|x| survive
+    assert np.count_nonzero(deq) == 2
+    np.testing.assert_array_equal(deq[[1, 3]], np.asarray([-5.0, 3.0]))
+
+
+def test_onebit_uses_mean_abs_scale():
+    cfg = _cfg("onebit")
+    x = jnp.asarray([1.0, -3.0, 2.0, -2.0], jnp.float32)
+    deq = np.asarray(compress.qdq_leaf(x, cfg))
+    np.testing.assert_allclose(deq, [2.0, -2.0, 2.0, -2.0], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# property sweep (hypothesis when present, seeded fallback otherwise)
+# ---------------------------------------------------------------------------
+
+def _property_case(kind, shape, seed, block_rows):
+    x = _rand(shape or (1,), jnp.float32, seed)
+    x = x.reshape(shape)
+    _assert_wire_matches_qdq(x, kind, block_rows)
+    if kind == "int8":
+        _assert_int8_bound(x, block_rows)
+    flat_updates = [_rand((int(np.prod(shape)) or 1,), jnp.float32, seed + t)
+                    for t in range(3)]
+    _assert_telescopes(kind, flat_updates, block_rows)
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(kind=st.sampled_from(KINDS),
+           shape=st.sampled_from(_SHAPES),
+           seed=st.integers(0, 2**31 - 1),
+           block_rows=st.sampled_from([0, 1, 8]))
+    def test_compress_properties(kind, shape, seed, block_rows):
+        _property_case(kind, shape, seed, block_rows)
+
+else:  # seeded fallback so the property is still exercised without hypothesis
+
+    @pytest.mark.parametrize("seed", range(10))
+    def test_compress_properties(seed):
+        rng = np.random.default_rng(seed)
+        _property_case(KINDS[int(rng.integers(len(KINDS)))],
+                       _SHAPES[int(rng.integers(len(_SHAPES)))],
+                       seed, int(rng.choice([0, 1, 8])))
+
+
+# ---------------------------------------------------------------------------
+# tree-level: stats and untrained groups pass through, residual untouched
+# ---------------------------------------------------------------------------
+
+def _stat_tree(seed=0):
+    return {
+        "blocks": {
+            "0": {"w": _rand((64,), jnp.float32, seed),
+                  "mean_ema": _rand((8,), jnp.float32, seed + 1)},
+            "1": {"w": _rand((64,), jnp.float32, seed + 2)},
+        },
+    }
+
+
+def _stat_partition():
+    from repro.core.partition import Partition
+    return Partition(
+        group_keys=(("block", "blocks", 0), ("block", "blocks", 1)),
+        assignment={"blocks/0/w": 0, "blocks/0/mean_ema": 0, "blocks/1/w": 1})
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_transmit_tree_excludes_stats_and_untrained_groups(kind):
+    cfg = _cfg(kind)
+    part = _stat_partition()
+    g = jax.tree.map(jnp.zeros_like, _stat_tree())
+    local = _stat_tree(seed=5)
+    res = compress.init_residual(g)
+    tx, new_res = compress.transmit_tree(g, local, res, cfg, partition=part,
+                                         groups=(0,))
+    # transmitted leaf moved through Q
+    assert float(jnp.abs(tx["blocks"]["0"]["w"] -
+                         local["blocks"]["0"]["w"]).max()) > 0 or kind != "topk"
+    # BN stat passes through exactly; untrained group leaf passes through
+    np.testing.assert_array_equal(np.asarray(tx["blocks"]["0"]["mean_ema"]),
+                                  np.asarray(local["blocks"]["0"]["mean_ema"]))
+    np.testing.assert_array_equal(np.asarray(tx["blocks"]["1"]["w"]),
+                                  np.asarray(local["blocks"]["1"]["w"]))
+    # residuals: only the transmitted leaf's slot may move
+    np.testing.assert_array_equal(
+        np.asarray(new_res["blocks"]["1"]["w"]), np.zeros(64, np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(new_res["blocks"]["0"]["mean_ema"]),
+        np.zeros(8, np.float32))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_transmit_tree_plan_matches_static_selection(kind):
+    """The traced-bitmask variant must agree with the structural one."""
+    cfg = _cfg(kind)
+    part = _stat_partition()
+    g = jax.tree.map(jnp.zeros_like, _stat_tree())
+    local = _stat_tree(seed=9)
+    res = compress.init_residual(g)
+    tx_a, res_a = compress.transmit_tree(g, local, res, cfg, partition=part,
+                                         groups=(0,))
+    tx_b, res_b = compress.transmit_tree_plan(
+        g, local, res, jnp.asarray([1.0, 0.0]), cfg, partition=part)
+    for a, b in zip(jax.tree.leaves(tx_a), jax.tree.leaves(tx_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(res_a), jax.tree.leaves(res_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_group_encoded_bytes_matches_tree_model():
+    part = _stat_partition()
+    tree = _stat_tree()
+    for kind in KINDS:
+        cfg = _cfg(kind)
+        got = compress.group_encoded_bytes(tree, part, cfg)
+        # group 0: compressed w (64) + dense-f32 stat (8); group 1: w only
+        want0 = (compress.leaf_encoded_bytes(64, cfg) +
+                 compress.leaf_encoded_bytes(8, None))
+        want1 = compress.leaf_encoded_bytes(64, cfg)
+        assert got.tolist() == [want0, want1]
+        assert compress.tree_encoded_bytes(tree, cfg) == want0 + want1

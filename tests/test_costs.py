@@ -91,3 +91,99 @@ def test_fused_adam_kernel_book():
     assert costs.adam_step_flops(n, 0.5) == costs.adam_step_flops(n) // 2
     with pytest.raises(ValueError, match="trained_fraction"):
         costs.adam_step_bytes(n, fused=True, trained_fraction=1.5)
+
+
+# -- compressed-byte ledger (core.compress, docs/COMPRESSION.md) ------------
+
+
+def test_compress_leaf_encoded_bytes_model():
+    """Analytic wire-byte model: payload + per-block scales + top-k indices."""
+    from repro.core import compress
+
+    cfg8 = compress.make_config("int8")
+    assert compress.leaf_encoded_bytes(1000, cfg8) == 1000 + 4   # 1 leaf scale
+    blocked = compress.make_config("int8", block_rows=1)         # 128-elem blocks
+    assert compress.leaf_encoded_bytes(1000, blocked) == 1000 + 4 * 8
+    cfg1 = compress.make_config("onebit")
+    assert compress.leaf_encoded_bytes(1000, cfg1) == 125 + 4    # packed bits
+    assert compress.leaf_encoded_bytes(1001, cfg1) == 126 + 4    # ceil
+    cfgk = compress.make_config("topk", topk_fraction=0.01)
+    assert compress.leaf_encoded_bytes(1000, cfgk) == 10 * (4 + 4)
+    assert compress.leaf_encoded_bytes(3, cfgk) == 1 * 8         # k >= 1
+    for cfg in (cfg8, cfg1, cfgk, None):
+        assert compress.leaf_encoded_bytes(0, cfg) == 0
+    assert compress.leaf_encoded_bytes(100, None) == 400         # dense f32
+
+
+def test_comm_cost_compressed_ledger():
+    """comm_cost(compression=...) prices the encoded wire format per round
+    while the FNU baseline stays dense f32, so ratio_to_fnu reports the
+    combined Eq. 5 x quantization saving."""
+    from repro.core import compress
+
+    m, n = 8, 64
+    params = uniform_params(m, n)
+    part = uniform_partition(m)
+    sched = FedPartSchedule(num_groups=m, warmup_rounds=0, rounds_per_layer=1,
+                            cycles=1)
+    cfg = compress.make_config("int8")
+    rep = costs.comm_cost(params, part, sched.rounds(), compression=cfg)
+    per_group = n + 4                                   # codes + 1 leaf scale
+    assert (rep.per_round_bytes == per_group).all()
+    assert rep.total_bytes == m * per_group
+    assert rep.fnu_total_bytes == m * (m * n * 4)       # dense FNU baseline
+    assert rep.ratio_to_fnu == pytest.approx(per_group / (m * n * 4.0))
+    # compression=None is the legacy dense ledger exactly
+    dense = costs.comm_cost(params, part, sched.rounds())
+    none = costs.comm_cost(params, part, sched.rounds(), compression=None)
+    assert none.total_bytes == dense.total_bytes
+    assert none.fnu_total_bytes == dense.fnu_total_bytes
+
+
+def test_async_books_consume_encoded_bytes():
+    """The async runtime's virtual clock must book *encoded* sizes: every
+    delivered update's comm_bytes equals the encoded per-group table entry
+    (never the dense one), and the identical federation finishes sooner on
+    the virtual clock because VirtualTimeModel.comm_seconds consumed the
+    smaller transfers."""
+    from repro.core import compress
+    from repro.core.partition import group_param_bytes, total_param_bytes
+    from repro.data import (VisionDatasetSpec, balanced_eval_set,
+                            build_clients, iid_partition, make_vision_dataset)
+    from repro.fl import FLRunConfig, resnet_task, run_federated
+
+    spec = VisionDatasetSpec(num_classes=4, image_size=8)
+    X, y = make_vision_dataset(spec, 96, seed=0)
+    Xe, ye = make_vision_dataset(spec, 64, seed=9)
+    eval_set = balanced_eval_set(Xe, ye, per_class=8)
+    clients = build_clients(X, y, iid_partition(len(y), 3, seed=0))
+    adapter = resnet_task("resnet4", num_classes=4)
+    rounds = FedPartSchedule(num_groups=6, warmup_rounds=1, rounds_per_layer=1,
+                             cycles=1).rounds()[:2]
+
+    def run(compression):
+        cfg = FLRunConfig(local_epochs=1, batch_size=16, lr=2e-3,
+                          adam_eps=1e-3, engine="vmap", runtime="async",
+                          compression=compression)
+        return run_federated(adapter, clients, eval_set, rounds, cfg)
+
+    dense_res = run("none")
+    int8_res = run("int8")
+    part = int8_res.partition
+    enc = compress.group_encoded_bytes(int8_res.params, part,
+                                       compress.make_config("int8"))
+    dense_group = group_param_bytes(int8_res.params, part)
+    full_enc = int(enc.sum())
+    allowed = {full_enc} | {int(b) for b in enc}
+    completes = int8_res.timeline.of_kind("complete")
+    assert completes, "async run delivered no updates"
+    for ev in completes:
+        assert ev["comm_bytes"] in allowed, ev
+    # never the dense sizes
+    dense_sizes = {int(total_param_bytes(int8_res.params))} | \
+        {int(b) for b in dense_group}
+    assert not {ev["comm_bytes"] for ev in completes} & dense_sizes
+    # smaller transfers -> earlier virtual finish, same schedule
+    assert int8_res.timeline.total_seconds < dense_res.timeline.total_seconds
+    assert int8_res.timeline.delivered_comm_bytes < \
+        dense_res.timeline.delivered_comm_bytes

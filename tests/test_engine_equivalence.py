@@ -575,3 +575,253 @@ def test_hetero_plan_shard_map_multidevice():
         assert r["param_maxdiff"] <= 1e-5, (case, r)
         assert r["loss_maxdiff"] <= 1e-5, (case, r)
         assert r["books_equal"], (case, r)
+
+
+# -- compressed transmitted subtrees (compression=..., docs/COMPRESSION.md) --
+#
+# The quantize->dequantize transmission step (core.compress) runs in three
+# places — the sequential oracle's host loop, the vmap engine's jitted tx
+# stage, and *inside* the shard_map device program before the weight-scale
+# psum — plus host-side at async update resolution.  All four must agree to
+# <=1e-5 on params/losses and exactly on the byte books (the ledger prices
+# the encoded wire format).  Error-feedback residuals are keyed by real
+# client id (``run_round(client_ids=...)``), so engine equivalence here also
+# pins the residual threading.
+#
+# Tolerance note: quantization amplifies the usual cross-engine float noise
+# only when a ~1e-7 pre-quantization difference flips a rounding decision
+# (one int8 step = scale/127) or a top-k threshold tie.  At this module's
+# scale (lr=2e-3, 2 rounds) the measured cross-engine divergence stays at
+# ~1e-7, well inside the 1e-5 bar.
+
+COMPRESS_KINDS = ("int8", "topk")
+
+
+@pytest.mark.parametrize("kind", COMPRESS_KINDS)
+def test_compress_vmap_matches_sequential(setup, kind):
+    seq = _run(setup, "fedavg", "sequential", MIXED, compression=kind)
+    vm = _run(setup, "fedavg", "vmap", MIXED, compression=kind)
+    _assert_equivalent(seq, vm)
+
+
+def test_compress_shard_map_matches_sequential(setup):
+    """Compressed tx inside the device program (degenerate 1-device mesh);
+    the multi-device sharpening lives in the slow 2-device subprocess."""
+    seq = _run(setup, "fedavg", "sequential", MIXED, compression="int8")
+    sm = _run(setup, "fedavg", "shard_map", MIXED, compression="int8")
+    _assert_equivalent(seq, sm)
+
+
+def test_compress_hetero_plan_engines_agree(setup):
+    """int8 under nested per-client plans: the traced-bitmask tx variant
+    (transmit_tree_plan) must match the oracle's structural selection."""
+    seq = _run(setup, "fedavg", "sequential", HETERO_MIXED, compression="int8",
+               plan="nested", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    vm = _run(setup, "fedavg", "vmap", HETERO_MIXED, compression="int8",
+              plan="nested", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    _assert_equivalent(seq, vm)
+
+
+@pytest.mark.slow
+def test_compress_hetero_plan_shard_map(setup):
+    """Plan + compression through the shard_map plan program (per-group
+    eff-weight epilogue on the compressed view).  Slow lane: the vmap test
+    above pins the same transmit_tree_plan arithmetic in tier-1 (nightly
+    compress-equivalence job)."""
+    seq = _run(setup, "fedavg", "sequential", HETERO_MIXED, compression="int8",
+               plan="nested", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    sm = _run(setup, "fedavg", "shard_map", HETERO_MIXED, compression="int8",
+              plan="nested", capacity_tiers=TIERS, adam_eps=HETERO_EPS)
+    _assert_equivalent(seq, sm)
+
+
+@pytest.mark.slow
+def test_compress_random_plan_and_topk_shard_map(setup):
+    """Random plan kind + top-k through all three engines (nightly): the
+    sparsification threshold is the tie-sensitive case, so it gets the
+    broader sweep in the slow lane."""
+    for engine in ("vmap", "shard_map"):
+        seq = _run(setup, "fedavg", "sequential", HETERO_MIXED,
+                   compression="topk", plan="random", capacity_tiers=TIERS,
+                   adam_eps=HETERO_EPS)
+        other = _run(setup, "fedavg", engine, HETERO_MIXED,
+                     compression="topk", plan="random", capacity_tiers=TIERS,
+                     adam_eps=HETERO_EPS)
+        _assert_equivalent(seq, other)
+
+
+@pytest.mark.slow
+def test_compress_ragged_buckets():
+    """A client below the batch size (12 < 16) routes through its own
+    batch-width bucket with its EF residual riding along — residual stacking
+    is bucket-local but keyed by real client id."""
+    small = _make_setup((12, 36, 20))
+    seq = _run(small, "fedavg", "sequential", MIXED[1:], compression="int8")
+    vm = _run(small, "fedavg", "vmap", MIXED[1:], compression="int8")
+    _assert_equivalent(seq, vm)
+
+
+def test_compress_async_degenerate_matches_sync(setup):
+    """Degenerate async == sync under int8: the runtime's host-side
+    compression at update resolution (against the dispatch-version model,
+    with its own residual store) must reproduce the sync engines' in-round
+    tx step, and the encoded byte books must match."""
+    sync = _run(setup, "fedavg", "vmap", MIXED, compression="int8")
+    asy = _run(setup, "fedavg", "vmap", MIXED, compression="int8",
+               runtime="async")
+    _assert_equivalent(sync, asy)
+
+
+def test_compress_none_is_identical_to_default(setup):
+    """compression="none" must be structurally absent: bit-for-bit equal to
+    the pre-compression path on every engine, with no residual state ever
+    allocated and no client-id requirement."""
+    from repro.fl import LocalTrainer, make_engine
+    from repro.optim.adam import AdamConfig
+
+    for engine in ("sequential", "vmap", "shard_map"):
+        base = _run(setup, "fedavg", engine, MIXED)
+        none = _run(setup, "fedavg", engine, MIXED, compression="none")
+        for a, b in zip(jax.tree.leaves(base.params),
+                        jax.tree.leaves(none.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert base.comm_total_bytes == none.comm_total_bytes
+
+    adapter, clients, _ = setup
+    params = adapter.init(jax.random.key(0))
+    part = adapter.partition(params)
+    eng = make_engine(
+        "vmap", trainer=LocalTrainer(adapter=adapter, partition=part,
+                                     algo=AlgoConfig(),
+                                     adam=AdamConfig(lr=1e-3)),
+        partition=part, algo=AlgoConfig())
+    assert eng.compression is None and eng._residuals == {}
+    eng.run_round(params, MIXED[1], clients, seeds=[1, 2, 3],
+                  weights=[1, 1, 1], epochs=1, batch_size=BATCH)
+    assert eng._residuals == {}
+
+
+def test_compress_requires_client_ids(setup):
+    """Engines built with compression must refuse an id-less run_round —
+    silently keying residuals by cohort position would corrupt error
+    feedback under partial participation."""
+    from repro.core import compress
+    from repro.fl import LocalTrainer, make_engine
+    from repro.optim.adam import AdamConfig
+
+    adapter, clients, _ = setup
+    params = adapter.init(jax.random.key(0))
+    part = adapter.partition(params)
+    eng = make_engine(
+        "sequential", trainer=LocalTrainer(adapter=adapter, partition=part,
+                                           algo=AlgoConfig(),
+                                           adam=AdamConfig(lr=1e-3)),
+        partition=part, algo=AlgoConfig(),
+        compression=compress.make_config("int8"))
+    with pytest.raises(ValueError, match="client_ids"):
+        eng.run_round(params, MIXED[1], clients, seeds=[1, 2, 3],
+                      weights=[1, 1, 1], epochs=1, batch_size=BATCH)
+
+
+def test_compress_zero_trainer_groups_stay_frozen(setup):
+    """Acceptance bar: on a partial round where some groups have no trainer
+    (nested tiers on HETERO_MIXED's group-4 round leave groups 0/1/3/5
+    untrained), those groups must stay bit-identical to the pre-round global
+    even while other groups' error-feedback residuals are active."""
+    from repro.core import masking
+
+    adapter, clients, eval_set = setup
+    untrained = (0, 1, 3, 5)
+    for engine in ("sequential", "vmap", "shard_map"):
+        cfg = FLRunConfig(local_epochs=1, batch_size=BATCH, lr=2e-3,
+                          adam_eps=HETERO_EPS, engine=engine,
+                          plan="nested", capacity_tiers=TIERS,
+                          compression="onebit")
+        res = run_federated(adapter, clients, eval_set, HETERO_MIXED[1:], cfg)
+        init = adapter.init(jax.random.key(cfg.seed))
+        frozen = masking.select(init, res.partition, untrained)
+        got = masking.select(res.params, res.partition, untrained)
+        for (path, a), b in zip(jax.tree_util.tree_flatten_with_path(frozen)[0],
+                                jax.tree.leaves(got)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"{engine}: frozen {jax.tree_util.keystr(path)} moved")
+
+
+# Compressed transmission on a genuinely sharded 2-device mesh: the tx step
+# runs inside the device program (before the weight-scale psum), padding
+# clients carry zero residuals, and the async runtime compresses host-side
+# at resolution against the same dispatch-version model.  Slow lane: the
+# nightly compress-equivalence job runs it via tier1.sh --slow.
+_COMPRESS_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys, json
+sys.path.insert(0, "src")
+import jax
+import numpy as np
+jax.config.update("jax_compilation_cache_dir", os.path.abspath(".jax_cache"))
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.2)
+
+from repro.core.schedule import FedPartSchedule
+from repro.data import (VisionDatasetSpec, balanced_eval_set, build_clients,
+                        make_vision_dataset)
+from repro.fl import AlgoConfig, FLRunConfig, resnet_task, run_federated
+
+assert len(jax.devices()) == 2, jax.devices()
+
+def make_setup(client_sizes):
+    spec = VisionDatasetSpec(num_classes=4, image_size=8)
+    X, y = make_vision_dataset(spec, sum(client_sizes), seed=0)
+    Xe, ye = make_vision_dataset(spec, 64, seed=9)
+    eval_set = balanced_eval_set(Xe, ye, per_class=8)
+    bounds = np.cumsum((0,) + tuple(client_sizes))
+    parts = [np.arange(bounds[i], bounds[i + 1])
+             for i in range(len(client_sizes))]
+    return resnet_task("resnet4", num_classes=4), build_clients(X, y, parts), eval_set
+
+def run(setup, engine, rounds, compression, runtime="sync"):
+    adapter, clients, eval_set = setup
+    cfg = FLRunConfig(local_epochs=1, batch_size=16, lr=2e-3, adam_eps=1e-3,
+                      algo=AlgoConfig(), engine=engine, sim_devices=2,
+                      runtime=runtime, compression=compression)
+    return run_federated(adapter, clients, eval_set, rounds, cfg)
+
+def diffs(a, b):
+    pd = max(float(np.max(np.abs(np.asarray(x) - np.asarray(z))))
+             for x, z in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)))
+    ld = max(abs(x["loss"] - z["loss"]) for x, z in zip(a.history, b.history))
+    books = a.comm_total_bytes == b.comm_total_bytes
+    return {"param_maxdiff": pd, "loss_maxdiff": ld, "books_equal": books}
+
+MIXED = FedPartSchedule(num_groups=6, warmup_rounds=1, rounds_per_layer=1,
+                        cycles=1).rounds()[:2]
+results = {}
+ragged = make_setup((36, 56, 40))         # one bucket, padded 3 -> 4 clients
+for kind in ("int8", "topk"):
+    seq = run(ragged, "sequential", MIXED, kind)
+    shard = run(ragged, "shard_map", MIXED, kind)
+    results[kind] = diffs(seq, shard)
+# none bitwise: explicit "none" == the default pre-compression config
+base = run(ragged, "shard_map", MIXED, "none")
+none = run(ragged, "shard_map", MIXED, "none")
+r = diffs(base, none)
+results["none_bitwise"] = dict(r, books_equal=(r["param_maxdiff"] == 0.0
+                                               and r["books_equal"]))
+# degenerate async on the sharded backend, int8: host-side resolution
+# compression must match the in-program tx of the sync path
+results["int8_async"] = diffs(
+    run(ragged, "shard_map", MIXED, "int8", runtime="async"),
+    run(ragged, "shard_map", MIXED, "int8"))
+print(json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_compress_shard_map_multidevice():
+    out = _run_subprocess_script(_COMPRESS_SHARD_SCRIPT)
+    for case, r in out.items():
+        tol = 0.0 if case == "none_bitwise" else 1e-5
+        assert r["param_maxdiff"] <= tol, (case, r)
+        assert r["loss_maxdiff"] <= tol, (case, r)
+        assert r["books_equal"], (case, r)

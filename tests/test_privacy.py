@@ -93,3 +93,76 @@ def test_dlg_full_reconstruction_quality():
     target = jax.random.normal(jax.random.key(5), (1, 48)) * 0.5
     x_hat, match = dlg_attack(loss_fn, params, target, DLGConfig(iterations=400, lr=0.05))
     assert float(mse(target, x_hat)) < float(mse(target, jnp.zeros_like(target)))
+
+
+# -- compressed observations (core.compress, docs/COMPRESSION.md) -----------
+#
+# Transmission compression is lossy, so an eavesdropper on the compressed
+# wire sees *at most* the information of the exact updates: DLG from the
+# quantized observation must reconstruct no better than from the exact one,
+# and the structural attack surface (encoded bytes per group) still strictly
+# shrinks on partial rounds.
+
+
+def _qdq_transform(kind):
+    from repro.core import compress
+
+    cfg = compress.make_config(kind)
+    return lambda g: jax.tree.map(lambda leaf: compress.qdq_leaf(leaf, cfg), g)
+
+
+def test_dlg_compress_observation_reconstructs_no_better():
+    """int8 / 1-bit observed updates: same attack budget as the exact
+    baseline, quantized target observation — reconstruction error must not
+    drop below the exact-observation error (data-processing direction; the
+    coarse 1-bit channel should hurt the attacker outright)."""
+    params, loss_fn = tiny_model()
+    target = jax.random.normal(jax.random.key(5), (1, 48)) * 0.5
+    cfg = DLGConfig(iterations=120, lr=0.05)
+
+    x_exact, _ = dlg_attack(loss_fn, params, target, cfg)
+    mse_exact = float(mse(target, x_exact))
+    for kind in ("int8", "onebit"):
+        x_q, match = dlg_attack(loss_fn, params, target, cfg,
+                                observe_transform=_qdq_transform(kind))
+        assert np.isfinite(float(match))
+        mse_q = float(mse(target, x_q))
+        # "no better": allow float/optimisation jitter, never a real gain.
+        assert mse_q >= 0.95 * mse_exact, (kind, mse_exact, mse_q)
+
+
+def test_dlg_compress_partial_surface_still_shrinks():
+    """On a partial round the compressed observation is both quantized AND
+    restricted to one group's subtree: the per-group encoded-byte surface is
+    a strict subset that tiles the full surface, ordered by depth exactly as
+    the dense ledger, and DLG under the deepest-group quantized observation
+    reconstructs worse than under full quantized observation."""
+    from repro.core import compress
+
+    params, loss_fn = tiny_model()
+    part = build_partition(params)
+    target = jax.random.normal(jax.random.key(5), (1, 48)) * 0.5
+    grads = jax.grad(lambda p: loss_fn(p, target))(params)
+
+    for kind in ("int8", "onebit"):
+        ccfg = compress.make_config(kind)
+        full_bytes = compress.tree_encoded_bytes(grads, ccfg)
+        per_group = [
+            compress.tree_encoded_bytes(masking.select(grads, part, g), ccfg)
+            for g in range(part.num_groups)
+        ]
+        assert all(0 < b < full_bytes for b in per_group), (kind, per_group)
+        assert sum(per_group) == full_bytes
+        assert per_group == sorted(per_group, reverse=True)
+
+    cfg = DLGConfig(iterations=120, lr=0.05)
+    transform = _qdq_transform("int8")
+    x_full, _ = dlg_attack(loss_fn, params, target, cfg,
+                           observe_transform=transform)
+    x_part, match = dlg_attack(loss_fn, params, target, cfg,
+                               partition=part, group=2,
+                               observe_transform=transform)
+    assert np.isfinite(float(match))
+    mse_full = float(mse(target, x_full))
+    mse_part = float(mse(target, x_part))
+    assert mse_part > 1.2 * mse_full, (mse_full, mse_part)
