@@ -32,7 +32,11 @@ import argparse
 import json
 
 # metric -> direction: +1 = higher is better, -1 = lower is better
-SCALE_FREE = {"speedup": +1, "clients_per_sec_per_device": +1}
+# overhead_ratio / peak_ratio: population_bench's O(cohort) invariants —
+# per-round wall and peak host memory of a 10^6-client streamed fleet
+# relative to a small fleet; lower is better, growth means O(N) crept in.
+SCALE_FREE = {"speedup": +1, "clients_per_sec_per_device": +1,
+              "overhead_ratio": -1, "peak_ratio": -1}
 ABSOLUTE = {"us_per_call": -1, "wall_seconds": -1}
 
 

@@ -28,6 +28,7 @@ BENCHES = [
     "engine_bench",
     "async_bench",
     "hetero_bench",
+    "population_bench",
     "compress_bench",
     "kernels_bench",
     "roofline",

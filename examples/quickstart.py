@@ -12,6 +12,10 @@ see benchmarks/engine_bench.py) pick --engine vmap, or --engine shard_map with
 
     PYTHONPATH=src python examples/quickstart.py \
         [--engine sequential|vmap|shard_map] [--sim-devices N]
+
+--population N streams the federation from N virtual clients whose shards
+derive on demand from (seed, client_id) — try --population 1000000
+--cohort-size 4: same demo, million-client fleet (docs/POPULATION.md).
 """
 
 import argparse
@@ -53,13 +57,27 @@ def main(argv=None):
                     help="compress the transmitted subtree (int8 / 1-bit / "
                          "top-k with error feedback, docs/COMPRESSION.md); "
                          "the comm column then prices the encoded bytes")
+    ap.add_argument("--population", type=int, default=0,
+                    help="stream N virtual clients from a seeded "
+                         "SyntheticPopulation (docs/POPULATION.md) instead of "
+                         "materialising 4 shards; per-round cost is O(cohort)")
+    ap.add_argument("--cohort-size", type=int, default=0,
+                    help="explicit clients per round (0 = full participation "
+                         "of a materialised fleet, or 4 under --population)")
     args = ap.parse_args(argv)
 
     spec = VisionDatasetSpec(num_classes=8, image_size=16, noise=1.0)
-    X, y = make_vision_dataset(spec, 1200, seed=0)
     Xe, ye = make_vision_dataset(spec, 600, seed=99)
     eval_set = balanced_eval_set(Xe, ye, per_class=24)
-    clients = build_clients(X, y, iid_partition(len(y), 4, seed=0))
+    if args.population > 0:
+        from repro.fl.population import SyntheticPopulation
+        clients = SyntheticPopulation(spec=spec, population=args.population,
+                                      samples_per_client=300, seed=0)
+        cohort = args.cohort_size or 4
+    else:
+        X, y = make_vision_dataset(spec, 1200, seed=0)
+        clients = build_clients(X, y, iid_partition(len(y), 4, seed=0))
+        cohort = args.cohort_size
     adapter = resnet_task("resnet8", num_classes=8)
 
     schedule = FedPartSchedule(num_groups=10, warmup_rounds=2,
@@ -68,7 +86,8 @@ def main(argv=None):
                           engine=args.engine, sim_devices=args.sim_devices,
                           plan=args.plan,
                           capacity_tiers=tuple(args.capacity_tiers),
-                          compression=args.compression)
+                          compression=args.compression,
+                          cohort_size=cohort)
 
     print(f"=== FedPart (partial network updates) [engine={args.engine}"
           + (f", plan={args.plan}" if args.plan != "homogeneous" else "")

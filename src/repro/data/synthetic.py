@@ -28,8 +28,23 @@ class VisionDatasetSpec:
     name: str = "synth-cifar"   # train/eval splits share them (sample seed differs)
 
 
+def _draw_labels(rng: np.random.Generator, num_classes: int, num_samples: int,
+                 class_probs=None) -> np.ndarray:
+    """Uniform labels (the default, bit-identical to the historical stream)
+    or ``class_probs``-weighted ones — per-client label skew for populations
+    whose shards are synthesized from (seed, client_id) rather than
+    partitioned from one global array (``fl.population``)."""
+    if class_probs is None:
+        return rng.integers(0, num_classes, num_samples).astype(np.int32)
+    p = np.asarray(class_probs, dtype=np.float64)
+    if p.shape != (num_classes,):
+        raise ValueError(f"class_probs shape {p.shape} != ({num_classes},)")
+    return rng.choice(num_classes, size=num_samples, p=p / p.sum()).astype(np.int32)
+
+
 def make_vision_dataset(
-    spec: VisionDatasetSpec, num_samples: int, seed: int = 0
+    spec: VisionDatasetSpec, num_samples: int, seed: int = 0,
+    class_probs=None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Returns (images (N,H,W,C) float32 in [-1,1], labels (N,) int32)."""
     proto_rng = np.random.default_rng(spec.proto_seed)
@@ -48,7 +63,7 @@ def make_vision_dataset(
         color = proto_rng.uniform(-0.8, 0.8, spec.channels)
         protos[c] = base[..., None] * 0.6 + color[None, None, :] * 0.4
 
-    labels = rng.integers(0, spec.num_classes, num_samples).astype(np.int32)
+    labels = _draw_labels(rng, spec.num_classes, num_samples, class_probs)
     images = protos[labels] + rng.normal(0, spec.noise, (num_samples, h, w, spec.channels))
     return images.astype(np.float32), labels
 
@@ -63,14 +78,15 @@ class TextDatasetSpec:
 
 
 def make_text_dataset(
-    spec: TextDatasetSpec, num_samples: int, seed: int = 0
+    spec: TextDatasetSpec, num_samples: int, seed: int = 0,
+    class_probs=None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Class-dependent Markov chains: (tokens (N,S) int32, labels (N,) int32)."""
     rng = np.random.default_rng(seed)
     # Per-class transition structure (task-level: shared across splits).
     proto_rng = np.random.default_rng(spec.proto_seed)
     succ = proto_rng.integers(0, spec.vocab_size, (spec.num_classes, spec.vocab_size, 4))
-    labels = rng.integers(0, spec.num_classes, num_samples).astype(np.int32)
+    labels = _draw_labels(rng, spec.num_classes, num_samples, class_probs)
     tokens = np.zeros((num_samples, spec.seq_len), np.int32)
     tokens[:, 0] = rng.integers(0, spec.vocab_size, num_samples)
     follow = rng.random((num_samples, spec.seq_len)) < 0.8

@@ -2,6 +2,9 @@ from repro.fl.algorithms import AlgoConfig  # noqa: F401
 from repro.fl.batched import (ENGINES, SequentialEngine, ShardMapEngine,  # noqa: F401
                               VmapEngine, make_engine)
 from repro.fl.client import LocalTrainer  # noqa: F401
+from repro.fl.population import (ClientPopulation, ClientStateStore,  # noqa: F401
+                                 MaterializedPopulation, SyntheticPopulation,
+                                 as_population)
 from repro.fl.runtime import (AvailabilityConfig, ClientAvailability,  # noqa: F401
                               run_federated_async)
 from repro.fl.server import (RUNTIMES, FLResult, FLRunConfig,  # noqa: F401

@@ -179,7 +179,14 @@ class _CompressionState:
     Residuals are keyed by the *real* client id (not the cohort position), so
     error feedback telescopes correctly across rounds with partial
     participation.  Entirely inert when ``self.compression is None`` — no
-    state is allocated and no compression branch is ever taken."""
+    state is allocated and no compression branch is ever taken.
+
+    With a ``state_store`` (``fl.population.ClientStateStore``) attached the
+    residuals live there instead of an unbounded dict — bounded LRU memory
+    with optional disk spill, the population-scale contract
+    (docs/POPULATION.md).  An evicted-and-spilled residual reloads
+    value-exact; an evicted-and-dropped one restarts from zero (the caller
+    opted into that by bounding the store without a spill dir)."""
 
     def _init_compression_state(self) -> None:
         self._residuals: dict[int, PyTree] = {}
@@ -197,8 +204,17 @@ class _CompressionState:
         return ids
 
     def _residual_for(self, cid: int, params: PyTree) -> PyTree:
-        res = self._residuals.get(cid)
+        store = getattr(self, "state_store", None)
+        res = (store.get("ef", cid) if store is not None
+               else self._residuals.get(cid))
         return res if res is not None else compress.init_residual(params)
+
+    def _set_residual(self, cid: int, tree: PyTree) -> None:
+        store = getattr(self, "state_store", None)
+        if store is not None:
+            store.put("ef", cid, tree)
+        else:
+            self._residuals[cid] = tree
 
 
 @dataclasses.dataclass
@@ -210,6 +226,7 @@ class SequentialEngine(_CompressionState):
     algo: AlgoConfig
     fused_adam: bool = False
     compression: compress.CompressionConfig | None = None
+    state_store: Any = None     # fl.population.ClientStateStore (EF residuals)
     name: str = "sequential"
 
     def __post_init__(self):
@@ -268,7 +285,7 @@ class SequentialEngine(_CompressionState):
                 send, new_res = compress.transmit_tree(
                     params, local, res, self.compression,
                     partition=self.partition, groups=tx_groups)
-                self._residuals[ids[i]] = new_res
+                self._set_residual(ids[i], new_res)
             if plan is not None:
                 uploads.append(masking.select(send, self.partition, groups_i))
             elif spec.is_full:
@@ -368,6 +385,7 @@ class _BatchedEngineBase(_CompressionState):
     donate: bool = True
     fused_adam: bool = False
     compression: compress.CompressionConfig | None = None
+    state_store: Any = None     # fl.population.ClientStateStore (EF residuals)
 
     def __post_init__(self):
         self.trace_count = 0
@@ -545,8 +563,8 @@ class _BatchedEngineBase(_CompressionState):
                          new_res_stacked: PyTree) -> None:
         """Write back per-client residual slices (padding rows dropped)."""
         for i, m in enumerate(members):
-            self._residuals[ids[m]] = jax.tree.map(
-                lambda x, i=i: x[i], new_res_stacked)
+            self._set_residual(ids[m], jax.tree.map(
+                lambda x, i=i: x[i], new_res_stacked))
 
     def _guard_round(self, weights: Sequence[float], tracker) -> None:
         if tracker is not None:
@@ -1479,6 +1497,7 @@ def make_engine(
     donate: bool = True,
     fused_adam: bool = False,
     compression: compress.CompressionConfig | None = None,
+    state_store: Any = None,
 ):
     """Build a client-simulation engine by name.
 
@@ -1509,13 +1528,15 @@ def make_engine(
     """
     if name == "sequential":
         return SequentialEngine(trainer=trainer, partition=partition, algo=algo,
-                                fused_adam=fused_adam, compression=compression)
+                                fused_adam=fused_adam, compression=compression,
+                                state_store=state_store)
     if name == "vmap":
         return VmapEngine(trainer=trainer, partition=partition, algo=algo,
                           donate=donate, fused_adam=fused_adam,
-                          compression=compression)
+                          compression=compression, state_store=state_store)
     if name == "shard_map":
         return ShardMapEngine(trainer=trainer, partition=partition, algo=algo,
                               donate=donate, devices=sim_devices,
-                              fused_adam=fused_adam, compression=compression)
+                              fused_adam=fused_adam, compression=compression,
+                              state_store=state_store)
     raise ValueError(f"unknown engine {name!r}; expected one of {ENGINES}")

@@ -1,0 +1,22 @@
+"""Population-scale streaming client store (docs/POPULATION.md).
+
+Cohorts sampled from millions of virtual clients: client state — dataset
+shards, MOON prev-models, error-feedback residuals, capacity tiers, speed
+multipliers — is produced on demand from (seed, client_id), so host memory
+and per-round overhead scale with the *cohort*, never the population.
+"""
+
+from repro.fl.population.base import (  # noqa: F401
+    ClientPopulation,
+    MaterializedPopulation,
+    as_population,
+)
+from repro.fl.population.sampling import (  # noqa: F401
+    IncrementalSampler,
+    client_round_seed,
+    resolve_cohort_size,
+    sample_excluding,
+    sample_without_replacement,
+)
+from repro.fl.population.store import ClientStateStore  # noqa: F401
+from repro.fl.population.synthetic import SyntheticPopulation  # noqa: F401

@@ -1,0 +1,101 @@
+"""``ClientPopulation`` — client state produced on demand from (seed, id).
+
+The historical simulator API materialises every client host-side
+(``run_federated(clients_data: Sequence, ...)``), which caps the fleet at a
+few hundred clients.  Production federations sample cohorts from populations
+of 10^6–10^8 mostly-offline devices; only the sampled cohort should ever
+cost memory or compute (docs/POPULATION.md).
+
+A ``ClientPopulation`` is the lazy contract behind that:
+
+* ``num_clients``            — the population size N (a number, not a list);
+* ``dataset(client_id)``     — that client's shard, built (or fetched from a
+  bounded cache) on demand;
+* ``num_samples(client_id)`` — the shard size *without* building the arrays
+  (aggregation weights and virtual-time cost books need only this);
+* ``capacity_tier(client_id)`` — the client's capacity tier for per-client
+  layer plans (stable in ``client_id``, never an O(N) table).
+
+``MaterializedPopulation`` wraps today's ``Sequence[ClientDataset]`` so the
+legacy call signature keeps working verbatim: ``as_population`` is the single
+adapter seam both runtimes go through.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Sequence
+
+from repro.data.pipeline import ClientDataset
+
+
+class ClientPopulation(abc.ABC):
+    """Lazy client-state factory: everything is a function of (seed, id)."""
+
+    @property
+    @abc.abstractmethod
+    def num_clients(self) -> int:
+        """Population size N.  Only ever used as a sampling bound."""
+
+    @abc.abstractmethod
+    def dataset(self, client_id: int) -> ClientDataset:
+        """The client's dataset shard, produced on demand.  Must be
+        deterministic in (population seed, client_id): two calls — or two
+        processes — see identical arrays."""
+
+    def num_samples(self, client_id: int) -> int:
+        """Shard size without materialising it.  Subclasses with a cheap
+        closed form should override; the default builds the shard."""
+        return len(self.dataset(client_id))
+
+    def capacity_tier(self, client_id: int, num_tiers: int) -> int:
+        """Stable capacity-tier assignment (round-robin by id — matches
+        ``core.schedule.PlanAssigner.tier_of``, so plan semantics are
+        identical whether the fleet is materialised or streamed)."""
+        return int(client_id) % max(1, num_tiers)
+
+    def _check_id(self, client_id: int) -> int:
+        cid = int(client_id)
+        if not 0 <= cid < self.num_clients:
+            raise IndexError(
+                f"client_id {cid} out of range for population of "
+                f"{self.num_clients}")
+        return cid
+
+    def materialize(self) -> list[ClientDataset]:
+        """Eagerly build every shard (tests / tiny populations only)."""
+        n = self.num_clients
+        if n > 100_000:
+            raise ValueError(
+                f"refusing to materialize {n} clients host-side; sample a "
+                "cohort instead (that is the point of this class)")
+        return [self.dataset(i) for i in range(n)]
+
+
+class MaterializedPopulation(ClientPopulation):
+    """The legacy path as a (trivial) population: a host-side ``Sequence`` of
+    ``ClientDataset``.  O(1) per lookup, nothing lazy — exists so both
+    runtimes speak only ``ClientPopulation``."""
+
+    def __init__(self, clients: Sequence[ClientDataset]):
+        self._clients = list(clients)
+        if not self._clients:
+            raise ValueError("population must contain at least one client")
+
+    @property
+    def num_clients(self) -> int:
+        return len(self._clients)
+
+    def dataset(self, client_id: int) -> ClientDataset:
+        return self._clients[self._check_id(client_id)]
+
+    def num_samples(self, client_id: int) -> int:
+        return len(self._clients[self._check_id(client_id)])
+
+
+def as_population(clients) -> ClientPopulation:
+    """The adapter seam: pass ``ClientPopulation`` through, wrap a legacy
+    ``Sequence[ClientDataset]`` in ``MaterializedPopulation``."""
+    if isinstance(clients, ClientPopulation):
+        return clients
+    return MaterializedPopulation(clients)

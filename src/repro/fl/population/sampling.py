@@ -1,0 +1,145 @@
+"""O(cohort) sampling + seed derivation for population-scale federations.
+
+Two host-side costs silently scale with the *population* in a naive
+simulator even though only the *cohort* ever trains:
+
+* **cohort selection** — ``rng.choice(N, k, replace=False)`` materialises a
+  permutation-sized workspace.  ``sample_without_replacement`` is Floyd's
+  algorithm (Bentley & Floyd, CACM 1987): exactly ``k`` draws, ``O(k)``
+  memory, uniform over k-subsets of ``range(n)`` — the population size never
+  appears as an allocation.  ``sample_excluding`` extends it to "the first
+  ``n`` naturals minus a (small, cohort-scale) excluded set" by sampling
+  *ranks* in the reduced pool and mapping rank -> id with a binary search
+  over the sorted exclusions — ``O(k log k + k log |excluded|)``.
+* **per-(round, client) seed derivation** — the historical linear formula
+  ``seed*100_003 + round*1_009 + client_id`` collides as soon as client ids
+  span more than 1_009 (round r, client c and round r+1, client c-1_009
+  train on identical batch orders).  ``client_round_seed`` feeds the triple
+  through ``np.random.SeedSequence``, whose hashing mixes all inputs into
+  the full 32-bit output space — collisions across any realistic grid are
+  ruled out by the regression test in tests/test_population.py.
+
+Both are shared by the synchronous server loop and the async runtime so the
+degenerate-config equivalence contract keeps holding: the two paths consume
+the *same* selection stream whenever the fleet is perfect.
+"""
+
+from __future__ import annotations
+
+from bisect import bisect_right, insort
+from typing import Sequence
+
+import numpy as np
+
+
+def client_round_seed(seed: int, round_index: int, client_id: int) -> int:
+    """Collision-resistant per-(run, round, client) seed.
+
+    ``SeedSequence`` hashing mixes the triple into a uniform 32-bit word, so
+    distinct (round, client) pairs get independent batch-order streams no
+    matter how large client ids grow (the linear formula this replaces
+    collided at ``client_id`` spans > 1_009).
+    """
+    ss = np.random.SeedSequence((int(seed), int(round_index), int(client_id)))
+    return int(ss.generate_state(1, np.uint32)[0])
+
+
+def resolve_cohort_size(n_clients: int, sample_fraction: float,
+                        cohort_size: int = 0) -> int:
+    """Clients per dispatch: an explicit ``cohort_size`` wins (clamped to
+    the population — the natural knob at population scale, where a fraction
+    of 10^6 is meaningless), else the legacy ``sample_fraction`` rounding."""
+    if cohort_size:
+        if cohort_size < 0:
+            raise ValueError(f"cohort_size must be >= 0, got {cohort_size}")
+        return max(1, min(int(cohort_size), n_clients))
+    return max(1, int(round(sample_fraction * n_clients)))
+
+
+def sample_without_replacement(rng: np.random.Generator, n: int, k: int
+                               ) -> list[int]:
+    """Floyd's algorithm: a uniform k-subset of ``range(n)`` in O(k).
+
+    Consumes exactly ``k`` draws from ``rng`` and allocates O(k) — never
+    O(n) — so cohorts can be sampled from populations of millions without
+    touching the non-participants.
+
+    >>> r = np.random.default_rng(0)
+    >>> s = sample_without_replacement(r, 10**9, 4)
+    >>> len(s) == len(set(s)) == 4 and all(0 <= x < 10**9 for x in s)
+    True
+    """
+    if not 0 <= k <= n:
+        raise ValueError(f"need 0 <= k <= n, got k={k}, n={n}")
+    chosen: set[int] = set()
+    out: list[int] = []
+    for j in range(n - k, n):
+        t = int(rng.integers(0, j + 1))
+        pick = t if t not in chosen else j
+        chosen.add(pick)
+        out.append(pick)
+    return out
+
+
+def _nth_absent(rank: int, excluded: Sequence[int]) -> int:
+    """The ``rank``-th natural number (0-based) not in sorted ``excluded``.
+
+    Binary search on ``id - |{e in excluded : e <= id}| == rank``: both sides
+    are monotone in ``id``, so O(log |excluded|).
+
+    >>> _nth_absent(0, [0, 1, 4]), _nth_absent(2, [0, 1, 4])
+    (2, 5)
+    """
+    lo, hi = rank, rank + len(excluded)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        absent_through_mid = mid + 1 - bisect_right(excluded, mid)
+        if absent_through_mid >= rank + 1:
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
+
+
+def sample_excluding(rng: np.random.Generator, n: int, k: int,
+                     excluded: Sequence[int]) -> list[int]:
+    """Uniform k-subset of ``range(n)`` minus sorted ``excluded``, in
+    O(k log k + k log |excluded|) — the async runtime's busy-set-aware
+    cohort sampler.  With ``excluded`` empty this *is*
+    ``sample_without_replacement`` (same rng stream, same result), which is
+    what keeps the degenerate async config on the synchronous server's
+    selection stream.
+    """
+    if not excluded:
+        return sample_without_replacement(rng, n, k)
+    m = n - len(excluded)
+    if not 0 <= k <= m:
+        raise ValueError(f"need 0 <= k <= {m} available ids, got k={k}")
+    ranks = sample_without_replacement(rng, m, k)
+    return [_nth_absent(r, excluded) for r in ranks]
+
+
+class IncrementalSampler:
+    """Stateful without-replacement sampler over ``range(n)`` minus a busy
+    set: repeated ``draw(k)`` calls never repeat an id (previously drawn ids
+    join the exclusion), so availability-rejected candidates can be topped
+    up without O(n) work or replacement bias."""
+
+    def __init__(self, rng: np.random.Generator, n: int,
+                 busy: Sequence[int] = ()):
+        self._rng = rng
+        self._n = n
+        self._excluded = sorted(int(b) for b in busy)
+
+    @property
+    def remaining(self) -> int:
+        return self._n - len(self._excluded)
+
+    def draw(self, k: int) -> list[int]:
+        k = min(k, self.remaining)
+        if k <= 0:
+            return []
+        out = sample_excluding(self._rng, self._n, k, self._excluded)
+        for ci in out:
+            insort(self._excluded, ci)
+        return out

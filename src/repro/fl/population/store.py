@@ -1,0 +1,136 @@
+"""Bounded per-client state store: LRU in memory, optional spill to disk.
+
+Three kinds of per-client state grow without bound in a naive simulator —
+MOON's previous local model (a full parameter tree per *ever-sampled*
+client), compression error-feedback residuals (``core.compress``), and lazy
+dataset shards.  At population scale (10^6+ clients, Sen et al. 2025) even
+a few KB per touched client eventually dominates host memory.
+
+``ClientStateStore`` bounds that: a ``max_entries`` LRU over ``(kind,
+client_id)`` keys.  On eviction the entry is either
+
+* **spilled** — pickled to ``spill_dir`` (tree structure + leaves as numpy
+  arrays) and transparently reloaded on the next ``get``, value-exact
+  (pinned by round-trip tests: a MOON prev or an EF residual that crossed
+  the disk boundary produces bit-identical training); or
+* **dropped** (no ``spill_dir``) — the next ``get`` returns ``None``, which
+  consumers already treat as "first contact" (MOON falls back to the global
+  model, error feedback restarts from a zero residual).  That is a
+  *semantic approximation* the caller opts into by bounding the store.
+
+``max_entries=0`` (the default in ``FLRunConfig``) means unbounded —
+bit-identical to the dict-based stores this class replaced.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+from collections import OrderedDict
+from typing import Any, Hashable
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _to_host(tree: PyTree) -> PyTree:
+    """Leaves as host numpy arrays (device buffers pin device memory and do
+    not pickle portably)."""
+    return jax.tree.map(np.asarray, tree)
+
+
+class ClientStateStore:
+    """LRU map ``(kind, client_id) -> pytree`` with optional disk spill.
+
+    ``kind`` namespaces the independent state families sharing one budget
+    (``"moon"`` prev-models, ``"ef"`` error-feedback residuals, ``"data"``
+    dataset shards); ``max_entries`` caps the total *in-memory* entry count
+    across kinds.  All values are converted to host numpy on ``put`` so the
+    store never pins device buffers.
+    """
+
+    def __init__(self, max_entries: int = 0, spill_dir: str | None = None):
+        if max_entries < 0:
+            raise ValueError(f"max_entries must be >= 0, got {max_entries}")
+        self.max_entries = int(max_entries)
+        self.spill_dir = spill_dir
+        self._mem: OrderedDict[tuple[str, Hashable], PyTree] = OrderedDict()
+        self._spilled: set[tuple[str, Hashable]] = set()
+        self.evictions = 0      # entries pushed out of memory (spilled or dropped)
+        self.spills = 0         # evictions persisted to disk
+        self.loads = 0          # disk reloads
+        if spill_dir:
+            os.makedirs(spill_dir, exist_ok=True)
+
+    # -- bookkeeping --------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def __contains__(self, key: tuple[str, Hashable]) -> bool:
+        return key in self._mem or key in self._spilled
+
+    def keys(self):
+        return list(self._mem.keys()) + sorted(self._spilled - set(self._mem))
+
+    def _path(self, key: tuple[str, Hashable]) -> str:
+        kind, cid = key
+        return os.path.join(self.spill_dir, f"{kind}-{cid}.pkl")
+
+    # -- core API -----------------------------------------------------------
+
+    def get(self, kind: str, client_id: Hashable) -> PyTree | None:
+        """The stored tree, or ``None`` for never-seen / dropped entries.
+        Reloads transparently from disk if the entry was spilled."""
+        key = (kind, client_id)
+        if key in self._mem:
+            self._mem.move_to_end(key)
+            return self._mem[key]
+        if key in self._spilled:
+            with open(self._path(key), "rb") as f:
+                treedef, leaves = pickle.load(f)
+            self.loads += 1
+            tree = jax.tree.unflatten(treedef, leaves)
+            self._insert(key, tree)
+            return tree
+        return None
+
+    def put(self, kind: str, client_id: Hashable, tree: PyTree) -> None:
+        self._insert((kind, client_id), _to_host(tree))
+
+    def pop(self, kind: str, client_id: Hashable) -> None:
+        """Forget an entry entirely (memory and disk)."""
+        key = (kind, client_id)
+        self._mem.pop(key, None)
+        if key in self._spilled:
+            self._spilled.discard(key)
+            try:
+                os.remove(self._path(key))
+            except OSError:
+                pass
+
+    def _insert(self, key: tuple[str, Hashable], tree: PyTree) -> None:
+        self._mem[key] = tree
+        self._mem.move_to_end(key)
+        if self.max_entries:
+            while len(self._mem) > self.max_entries:
+                old_key, old_tree = self._mem.popitem(last=False)
+                self.evictions += 1
+                if self.spill_dir is not None:
+                    leaves, treedef = jax.tree.flatten(old_tree)
+                    with open(self._path(old_key), "wb") as f:
+                        pickle.dump((treedef, leaves), f,
+                                    protocol=pickle.HIGHEST_PROTOCOL)
+                    self._spilled.add(old_key)
+                    self.spills += 1
+                else:
+                    self._spilled.discard(old_key)
+
+    # -- diagnostics --------------------------------------------------------
+
+    def stats(self) -> dict:
+        return {"in_memory": len(self._mem), "on_disk": len(self._spilled),
+                "evictions": self.evictions, "spills": self.spills,
+                "loads": self.loads, "max_entries": self.max_entries}

@@ -1,0 +1,131 @@
+"""Streaming synthetic populations: shards synthesized from (seed, id).
+
+The million-client regime cannot partition one global array — the array
+itself would be the O(N) cost.  ``SyntheticPopulation`` instead *derives*
+each client's shard directly from the population seed and the client id:
+
+* a per-client ``np.random.SeedSequence((seed, stream, client_id))`` gives
+  counter-based, order-independent randomness — client 999_999's shard is
+  identical whether it is the first or the millionth ever sampled, and two
+  processes agree without coordination;
+* the shard itself reuses ``data.synthetic``'s generators
+  (``make_vision_dataset`` / ``make_text_dataset``), so a streamed client
+  sees exactly the class prototypes / Markov structure a materialised split
+  of the same spec would (the task is a property of the spec's
+  ``proto_seed``, not of the population);
+* label skew follows the Dirichlet(α) recipe of ``data.partitioner``: each
+  client draws a persistent class-probability vector from Dirichlet(α·1)
+  and samples its labels from it — per-id, no global label array.  ``α = 0``
+  keeps the uniform (IID-in-distribution) stream;
+* shard sizes are deterministic per id (fixed, or log-range drawn), and
+  ``num_samples`` answers without building arrays — aggregation weights and
+  the async runtime's virtual-time books never force materialisation.
+
+A bounded ``ClientStateStore`` (kind ``"data"``) caches recently-built
+shards so a cohort that is re-sampled soon does not pay regeneration, with
+optional disk spill; host memory stays O(cache), never O(N).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.pipeline import ClientDataset
+from repro.data.synthetic import (TextDatasetSpec, VisionDatasetSpec,
+                                  make_text_dataset, make_vision_dataset)
+from repro.fl.population.base import ClientPopulation
+from repro.fl.population.store import ClientStateStore
+
+# Stream tags: keep the independent per-client draws (shard size / label
+# skew vs. sample noise) on distinct SeedSequence keys.
+_PLAN_STREAM = 0x0DA7A
+_SAMPLE_STREAM = 0x5A3D5
+
+
+@dataclasses.dataclass
+class SyntheticPopulation(ClientPopulation):
+    """Virtual fleet of ``population`` clients with on-demand shards.
+
+    ``samples_per_client`` is either a fixed ``int`` or an inclusive
+    ``(lo, hi)`` range drawn per client; ``alpha > 0`` switches the per-client
+    label distribution to Dirichlet(α) skew (``data.partitioner`` semantics,
+    derived per id); ``cache_entries`` bounds the in-memory shard cache
+    (0 = cache nothing beyond the entry being built).
+    """
+
+    spec: VisionDatasetSpec | TextDatasetSpec
+    population: int
+    samples_per_client: int | tuple[int, int] = 64
+    alpha: float = 0.0
+    seed: int = 0
+    cache_entries: int = 64
+    cache_dir: str | None = None
+
+    def __post_init__(self):
+        if self.population < 1:
+            raise ValueError(
+                f"population must be >= 1, got {self.population}")
+        if self.alpha < 0.0:
+            raise ValueError(f"alpha must be >= 0, got {self.alpha}")
+        spc = self.samples_per_client
+        if isinstance(spc, int):
+            lo = hi = int(spc)
+        else:
+            lo, hi = (int(spc[0]), int(spc[1]))
+        if not 1 <= lo <= hi:
+            raise ValueError(
+                f"samples_per_client must be >= 1 (lo <= hi), got {spc}")
+        self._size_range = (lo, hi)
+        if isinstance(self.spec, VisionDatasetSpec):
+            self._make = make_vision_dataset
+        elif isinstance(self.spec, TextDatasetSpec):
+            self._make = make_text_dataset
+        else:
+            raise TypeError(f"unsupported dataset spec {type(self.spec)}")
+        self._cache = ClientStateStore(max_entries=max(0, self.cache_entries),
+                                       spill_dir=self.cache_dir)
+
+    # -- ClientPopulation contract ------------------------------------------
+
+    @property
+    def num_clients(self) -> int:
+        return self.population
+
+    def num_samples(self, client_id: int) -> int:
+        n, _ = self._client_plan(self._check_id(client_id))
+        return n
+
+    def dataset(self, client_id: int) -> ClientDataset:
+        cid = self._check_id(client_id)
+        cached = self._cache.get("data", cid)
+        if cached is not None:
+            return ClientDataset(inputs=cached["inputs"],
+                                 labels=cached["labels"])
+        n, class_probs = self._client_plan(cid)
+        sample_seed = int(np.random.SeedSequence(
+            (self.seed, _SAMPLE_STREAM, cid)).generate_state(1)[0])
+        inputs, labels = self._make(self.spec, n, seed=sample_seed,
+                                    class_probs=class_probs)
+        if self.cache_entries:
+            self._cache.put("data", cid, {"inputs": inputs, "labels": labels})
+        return ClientDataset(inputs=inputs, labels=labels)
+
+    # -- per-id derivations --------------------------------------------------
+
+    def _client_plan(self, cid: int) -> tuple[int, np.ndarray | None]:
+        """(shard size, class-probability vector or None) — cheap: draws a
+        handful of scalars, never the shard arrays."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence((self.seed, _PLAN_STREAM, cid)))
+        lo, hi = self._size_range
+        n = lo if lo == hi else int(rng.integers(lo, hi + 1))
+        probs = None
+        if self.alpha > 0.0:
+            probs = rng.dirichlet(
+                np.full(self.spec.num_classes, self.alpha))
+        return n, probs
+
+    def cache_stats(self) -> dict:
+        return self._cache.stats()

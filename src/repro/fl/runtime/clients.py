@@ -8,7 +8,11 @@ dispatched work simply vanishes (Sen et al. 2025; Liu et al. 2023).
 
 * **compute-speed multipliers** — one persistent log-uniform draw per client
   in ``[1/(1+spread), 1+spread]``; a client's local round takes
-  ``flops / (flops_per_second * speed)`` virtual seconds;
+  ``flops / (flops_per_second * speed)`` virtual seconds.  The draw is
+  *counter-based*: derived lazily per client id from
+  ``SeedSequence((seed, stream, client_id))``, so no O(N) speed table is
+  ever built — a population of 10^6+ virtual clients costs nothing until a
+  client is actually sampled (docs/POPULATION.md);
 * **latency jitter** — a fresh multiplicative draw per dispatch in
   ``[1, 1+jitter]``, modelling network variance on top of the deterministic
   cost model (``core.costs.VirtualTimeModel``);
@@ -60,26 +64,50 @@ class AvailabilityConfig:
                 and self.dropout_prob == 0.0 and self.unavailable_prob == 0.0)
 
 
+# SeedSequence stream tag for the per-client persistent speed draw: keyed by
+# (seed, tag, client_id) so speeds are a pure function of the id — identical
+# whether the fleet has 8 clients or 10^8, and regardless of sampling order.
+_SPEED_STREAM = 0x5BEED
+
+
 class ClientAvailability:
-    """Seeded realisation of ``AvailabilityConfig`` for ``num_clients``."""
+    """Seeded realisation of ``AvailabilityConfig`` for ``num_clients``.
+
+    O(1) to construct at any population size: per-client speeds are derived
+    lazily (counter-based hashing per id, memoised for sampled clients), and
+    the per-dispatch event stream is a single generator consumed in dispatch
+    order as before."""
 
     def __init__(self, cfg: AvailabilityConfig, num_clients: int):
         if num_clients < 1:
             raise ValueError(f"num_clients must be >= 1, got {num_clients}")
         self.cfg = cfg
         self.num_clients = num_clients
-        rng = np.random.default_rng(cfg.seed)
-        if cfg.speed_spread > 0.0:
-            lo, hi = -np.log1p(cfg.speed_spread), np.log1p(cfg.speed_spread)
-            self.speeds = np.exp(rng.uniform(lo, hi, num_clients))
-        else:
-            self.speeds = np.ones(num_clients, dtype=np.float64)
-        # Per-dispatch draws come from a *separate* stream so adding clients
-        # (more speed draws) doesn't shift the event randomness.
+        self._speed_cache: dict[int, float] = {}
+        # Per-dispatch draws come from a *separate* stream so the number of
+        # clients never shifts the event randomness.
         self._rng = np.random.default_rng((cfg.seed, 0x5EED))
 
     def speed(self, client_id: int) -> float:
-        return float(self.speeds[client_id])
+        """Persistent log-uniform multiplier in [1/(1+spread), 1+spread],
+        a pure function of (seed, client_id) — no O(N) table, no draw at
+        all on a homogeneous fleet (the degenerate no-RNG contract)."""
+        if self.cfg.speed_spread <= 0.0:
+            return 1.0
+        s = self._speed_cache.get(client_id)
+        if s is None:
+            rng = np.random.default_rng(np.random.SeedSequence(
+                (self.cfg.seed, _SPEED_STREAM, int(client_id))))
+            lim = np.log1p(self.cfg.speed_spread)
+            s = float(np.exp(rng.uniform(-lim, lim)))
+            self._speed_cache[client_id] = s
+        return s
+
+    @property
+    def speeds(self) -> np.ndarray:
+        """The full speed table (diagnostics / small fleets only — this is
+        the one deliberately O(N) accessor)."""
+        return np.array([self.speed(i) for i in range(self.num_clients)])
 
     def jitter(self) -> float:
         """Multiplicative latency factor for one dispatch (1.0 when off)."""
@@ -103,3 +131,12 @@ class ClientAvailability:
             return cand
         keep = self._rng.random(len(cand)) >= self.cfg.unavailable_prob
         return [c for c, k in zip(cand, keep) if k]
+
+    def arrival_ok(self) -> bool:
+        """One candidate's arrival draw (population-scale sampling: the
+        availability filter runs over *sampled* candidates only, never the
+        whole fleet).  Consumes no randomness when the knob is off — the
+        degenerate-config contract."""
+        if self.cfg.unavailable_prob <= 0.0:
+            return True
+        return bool(self._rng.random() >= self.cfg.unavailable_prob)

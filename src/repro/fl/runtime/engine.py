@@ -63,6 +63,19 @@ subtrees therefore hold the *decompressed* server view — staleness
 discounting and the policy merge operate on values — while each update's
 ``comm_bytes`` (and hence ``VirtualTimeModel.comm_seconds``) books the
 *encoded* wire size from the ``core.compress`` byte ledger.
+
+**Population scale** (``fl.population``, docs/POPULATION.md): ``clients_data``
+may be a ``ClientPopulation`` instead of a materialised sequence, and every
+per-dispatch cost here is O(cohort), never O(population): cohorts are drawn
+by Floyd's algorithm over ``range(n) - busy`` (``IncrementalSampler``),
+availability filtering runs over *sampled candidates only*
+(``ClientAvailability.arrival_ok``), speed multipliers hash lazily from
+``(seed, client_id)``, datasets materialise only for picked members, and the
+MOON prev-models / EF residuals live in a bounded ``ClientStateStore``
+(``FLRunConfig.state_store_entries`` / ``state_store_spill``).  With an empty
+busy set the incremental sampler consumes the exact
+``sample_without_replacement`` stream of the synchronous server, so the
+degenerate-config equivalence holds unchanged.
 """
 
 from __future__ import annotations
@@ -83,6 +96,9 @@ from repro.core.schedule import PlanAssigner, RoundSpec, ScheduleIndex
 from repro.core.telemetry import Timeline
 from repro.fl.batched import make_engine, resolve_plan
 from repro.fl.client import LocalTrainer
+from repro.fl.population import (ClientPopulation, IncrementalSampler,
+                                 as_population, client_round_seed,
+                                 resolve_cohort_size)
 from repro.fl.runtime.clients import ClientAvailability
 from repro.fl.runtime.policy import ClientUpdate, make_policy
 from repro.fl.tasks import TaskAdapter
@@ -132,7 +148,7 @@ class _Cohort:
 
 def run_federated_async(
     adapter: TaskAdapter,
-    clients_data: Sequence,
+    clients_data: Sequence | ClientPopulation,
     eval_set: tuple[np.ndarray, np.ndarray],
     rounds: Sequence[RoundSpec],
     run_cfg: "FLRunConfig",
@@ -179,22 +195,25 @@ def run_federated_async(
     assigner = PlanAssigner(
         num_groups=partition.num_groups, kind=run_cfg.plan,
         capacity_tiers=tuple(run_cfg.capacity_tiers), seed=run_cfg.seed)
-    n_clients = len(clients_data)
+    population = as_population(clients_data)
+    n_clients = population.num_clients
     avail = ClientAvailability(run_cfg.availability, n_clients)
     vtm = run_cfg.vtime
     timeline = Timeline()
-    # Same selection stream as the synchronous server: one choice() per
-    # dispatch, over arange(n) whenever the whole fleet is idle+available.
+    # Same selection stream as the synchronous server: one Floyd k-subset
+    # sample per dispatch whenever the whole fleet is idle (busy empty).
     rng = np.random.default_rng(run_cfg.seed)
     eval_x, eval_y = eval_set
     eval_fn = jax.jit(adapter.evaluate)
     is_moon = run_cfg.algo.name == "moon"
-    prev_store: dict[int, PyTree] = {}
     ccfg = compress.make_config(
         run_cfg.compression, topk_fraction=run_cfg.topk_fraction,
         error_feedback=run_cfg.error_feedback,
         block_rows=run_cfg.compression_block_rows)
-    residuals: dict[int, PyTree] = {}  # per-client EF residual (full tree)
+    # Per-client cross-dispatch state — MOON prev-models ("moon") and EF
+    # residuals ("ef") — lives in one bounded LRU store so host memory
+    # tracks the active cohorts, not the population.
+    state_store = run_cfg.make_state_store()
 
     # Cost tables: upstream bytes + per-step flops per scheduled group.  With
     # compression on, the upstream table prices the *encoded* wire format
@@ -279,7 +298,8 @@ def run_federated_async(
             moon_stacked = (jax.device_put(stacked, home) if xfer_back
                             else stacked)
             for i, ci in enumerate(cohort.picked):
-                prev_store[int(ci)] = jax.tree.map(lambda x: x[i], moon_stacked)
+                state_store.put("moon", int(ci),
+                                jax.tree.map(lambda x: x[i], moon_stacked))
         spec = cohort.spec
         if cohort.plan is None:
             sub = stacked if spec.is_full else masking.select(
@@ -319,7 +339,7 @@ def run_federated_async(
             if ccfg is not None:
                 sel = (upd.groups if upd.groups is not None
                        else (None if spec.is_full else spec.group))
-                res_full = residuals.get(upd.client_id)
+                res_full = state_store.get("ef", upd.client_id)
                 if res_full is None:
                     res_full = compress.init_residual(cohort.params)
                 res_sub = aggregation.drop_local_stats(
@@ -327,13 +347,13 @@ def run_federated_async(
                     else masking.select(res_full, partition, sel))
                 upd_sub, new_res = compress.transmit_tree(
                     _g_view(sel), upd_sub, res_sub, ccfg, partition=partition)
-                residuals[upd.client_id] = masking.tree_update(
-                    res_full, new_res)
+                state_store.put("ef", upd.client_id,
+                                masking.tree_update(res_full, new_res))
             upd.subtree = upd_sub
             upd.loss = losses[i]
         # Drop the big references now, not at last-straggler pop: the params
         # snapshot, the in-flight outputs, and (MOON) the superseded
-        # prev-model trees whose prev_store slots were just overwritten.
+        # prev-model trees whose store slots were just overwritten.
         cohort.stacked = cohort.losses_dev = cohort.params = None
         cohort.prevs = None
         if cohort.submesh is not None:
@@ -355,25 +375,35 @@ def run_federated_async(
         (and retrace per cohort width) instead of overlapping it."""
         nonlocal pending, last_cohort, inflight
         spec = sched.for_version(version)
-        idle = [ci for ci in range(n_clients) if ci not in busy]
-        if not idle:
+        pool_size = n_clients - len(busy)
+        if pool_size <= 0:
             return 0
-        cand = avail.available(idle)
-        if not cand:
-            # Every idle client failed the arrival draw; rather than spinning
+        n_pick = resolve_cohort_size(n_clients, run_cfg.sample_fraction,
+                                     run_cfg.cohort_size)
+        if pool_size < n_pick and not fragment_ok:
+            return 0
+        # O(cohort) selection at population scale: Floyd-sample candidates
+        # from range(n) minus the busy set, filter each through its *own*
+        # arrival draw, and top up until the cohort fills or the idle pool
+        # runs dry — the fleet is never enumerated.
+        k_target = min(n_pick, pool_size)
+        sampler = IncrementalSampler(rng, n_clients, busy)
+        picked: list[int] = []
+        rejected: list[int] = []
+        while len(picked) < k_target and sampler.remaining > 0:
+            for ci in sampler.draw(k_target - len(picked)):
+                (picked if avail.arrival_ok() else rejected).append(ci)
+        if not picked:
+            # Every candidate failed the arrival draw; rather than spinning
             # the virtual clock, model "the server waits for the next one".
-            cand = idle
-        n_pick = max(1, int(round(run_cfg.sample_fraction * n_clients)))
-        if len(cand) < n_pick and not fragment_ok:
-            return 0
-        k = min(n_pick, len(cand))
-        picked = [cand[i] for i in
-                  np.asarray(rng.choice(len(cand), size=k, replace=False))]
+            picked = rejected[:k_target]
+        k = len(picked)
 
-        datasets = [clients_data[ci] for ci in picked]
-        seeds = [run_cfg.seed * 100_003 + spec.index * 1_009 + int(ci)
+        datasets = [population.dataset(ci) for ci in picked]
+        seeds = [client_round_seed(run_cfg.seed, spec.index, int(ci))
                  for ci in picked]
-        prevs = [prev_store.get(int(ci)) for ci in picked] if is_moon else None
+        prevs = ([state_store.get("moon", int(ci)) for ci in picked]
+                 if is_moon else None)
         # Per-client layer plan for this dispatch.  The raw plan (None only
         # under the homogeneous *kind*) decides the updates' trained group
         # sets, so the policy merge unbundles per (client, group) for every

@@ -43,6 +43,17 @@ each group over only the clients that trained it (docs/HETEROGENEITY.md).
 subtree at the client→server boundary (int8 / 1-bit / top-k with per-client
 error feedback, ``core.compress``); ``"none"`` (default) is structurally
 absent — today's paths bit-for-bit (docs/COMPRESSION.md).
+
+``clients_data`` may also be a ``fl.population.ClientPopulation`` — a
+*streaming* client store that produces shards on demand from
+(seed, client_id), so cohorts can be sampled from populations of millions of
+virtual clients with host cost O(cohort): selection is Floyd's O(cohort)
+algorithm, per-(round, client) seeds are collision-free ``SeedSequence``
+hashes, and cross-round per-client state (MOON prev-models, EF residuals)
+lives in a bounded LRU ``ClientStateStore`` with optional disk spill
+(``state_store_entries`` / ``state_store_spill``, docs/POPULATION.md).  A
+legacy materialised ``Sequence`` is wrapped transparently and behaves
+exactly as before.
 """
 
 from __future__ import annotations
@@ -61,6 +72,10 @@ from repro.core.telemetry import StepSizeTracker, Timeline
 from repro.fl.algorithms import AlgoConfig
 from repro.fl.batched import make_engine
 from repro.fl.client import LocalTrainer
+from repro.fl.population import (ClientPopulation, ClientStateStore,
+                                 as_population, client_round_seed,
+                                 resolve_cohort_size,
+                                 sample_without_replacement)
 from repro.fl.runtime.clients import AvailabilityConfig
 from repro.fl.tasks import TaskAdapter
 from repro.optim.adam import AdamConfig
@@ -78,6 +93,7 @@ class FLRunConfig:
     adam_eps: float = 1e-8
     algo: AlgoConfig = AlgoConfig()
     sample_fraction: float = 1.0    # participation fraction per dispatch/round
+    cohort_size: int = 0            # explicit clients per dispatch (0 = use fraction)
     seed: int = 0
     eval_every: int = 1
     eval_batch: int = 256
@@ -94,6 +110,9 @@ class FLRunConfig:
     # -- per-client layer plans (heterogeneous fleets, docs/HETEROGENEITY.md)
     plan: str = "homogeneous"       # "homogeneous" | "nested" | "random"
     capacity_tiers: tuple[float, ...] = ()  # tier capacities in (0,1]; () = one full-capacity tier
+    # -- bounded per-client state (population scale, docs/POPULATION.md) ----
+    state_store_entries: int = 0    # LRU cap on MOON prevs + EF residuals (0 = unbounded)
+    state_store_spill: str = ""     # spill dir for evicted entries ("" = drop on evict)
     # -- runtime (sync barrier loop vs event-driven async simulator) --------
     runtime: str = "sync"           # "sync" | "async" (repro.fl.runtime)
     async_policy: str = "fedbuff"   # "fedbuff" | "sync" (barrier oracle)
@@ -107,6 +126,13 @@ class FLRunConfig:
     # its own disjoint device submesh when the engine has one to give
     # (docs/ASYNC.md "Host-parallel dispatch").
     max_inflight_cohorts: int = 1
+
+    def make_state_store(self) -> ClientStateStore:
+        """The per-run store for cross-round per-client state (MOON
+        prev-models, EF residuals).  The defaults mean unbounded — the
+        legacy dict semantics, bit-for-bit."""
+        return ClientStateStore(max_entries=self.state_store_entries,
+                                spill_dir=self.state_store_spill or None)
 
 
 @dataclasses.dataclass
@@ -134,7 +160,7 @@ class FLResult:
 
 def run_federated(
     adapter: TaskAdapter,
-    clients_data: Sequence,
+    clients_data: Sequence | ClientPopulation,
     eval_set: tuple[np.ndarray, np.ndarray],
     rounds: Sequence[RoundSpec],
     run_cfg: FLRunConfig,
@@ -164,11 +190,12 @@ def run_federated(
         run_cfg.compression, topk_fraction=run_cfg.topk_fraction,
         error_feedback=run_cfg.error_feedback,
         block_rows=run_cfg.compression_block_rows)
+    state_store = run_cfg.make_state_store()
     engine = make_engine(
         run_cfg.engine, trainer=trainer, partition=partition,
         algo=run_cfg.algo, sim_devices=run_cfg.sim_devices,
         donate=run_cfg.donate_buffers, fused_adam=run_cfg.fused_adam,
-        compression=ccfg,
+        compression=ccfg, state_store=state_store,
     )
     assigner = PlanAssigner(
         num_groups=partition.num_groups, kind=run_cfg.plan,
@@ -178,21 +205,27 @@ def run_federated(
     eval_fn = jax.jit(adapter.evaluate)
 
     tracker = StepSizeTracker() if run_cfg.track_stepsizes else None
-    prev_params: dict[int, PyTree] = {}  # MOON: last local model per client
     history: list[dict] = []
     is_moon = run_cfg.algo.name == "moon"
 
-    n_clients = len(clients_data)
+    # The population seam: a legacy Sequence becomes a (materialised)
+    # population; everything below touches only the sampled cohort, so a
+    # streaming population of millions costs O(cohort) per round.
+    population = as_population(clients_data)
+    n_clients = population.num_clients
     for spec in rounds:
-        n_pick = max(1, int(round(run_cfg.sample_fraction * n_clients)))
-        picked = rng.choice(n_clients, size=n_pick, replace=False)
+        n_pick = resolve_cohort_size(n_clients, run_cfg.sample_fraction,
+                                     run_cfg.cohort_size)
+        picked = sample_without_replacement(rng, n_clients, n_pick)
         if tracker is not None:
             tracker.mark_round_boundary()
 
-        datasets = [clients_data[ci] for ci in picked]
-        seeds = [run_cfg.seed * 100_003 + spec.index * 1_009 + int(ci) for ci in picked]
+        datasets = [population.dataset(ci) for ci in picked]
+        seeds = [client_round_seed(run_cfg.seed, spec.index, ci)
+                 for ci in picked]
         weights = [len(d) for d in datasets]
-        prevs = [prev_params.get(int(ci)) for ci in picked] if is_moon else None
+        prevs = ([state_store.get("moon", int(ci)) for ci in picked]
+                 if is_moon else None)
 
         params, losses, new_locals = engine.run_round(
             params,
@@ -209,7 +242,7 @@ def run_federated(
         )
         if new_locals is not None:
             for ci, local in zip(picked, new_locals):
-                prev_params[int(ci)] = local
+                state_store.put("moon", int(ci), local)
 
         entry = {"round": spec.index, "phase": spec.phase, "group": spec.group,
                  "loss": float(np.mean(losses))}

@@ -55,6 +55,17 @@ subtree at the client→server boundary with per-client error feedback
 
     python -m repro.launch.fedtrain --sim-clients 8 --rounds 12 \
         --engine vmap --compression int8
+
+``--population N`` swaps the materialised client list for a *streaming*
+``fl.population.SyntheticPopulation`` of N virtual clients whose shards are
+derived on demand from (seed, client_id) — host cost per round is O(cohort),
+so N can be millions (docs/POPULATION.md).  ``--cohort-size K`` pins the
+dispatch size directly (the natural knob at population scale);
+``--state-store-entries`` / ``--state-store-spill`` bound the per-client
+MOON/EF state:
+
+    python -m repro.launch.fedtrain --population 1000000 --cohort-size 8 \
+        --rounds 12 --runtime async --participation 0.5
 """
 
 from __future__ import annotations
@@ -144,12 +155,22 @@ def run_simulation(args) -> int:
                             iid_partition, make_vision_dataset)
     from repro.fl import (AvailabilityConfig, FLRunConfig, resnet_task,
                           run_federated)
+    from repro.fl.population import SyntheticPopulation
 
     spec = VisionDatasetSpec(num_classes=8, image_size=16)
-    X, y = make_vision_dataset(spec, 160 * args.sim_clients, seed=0)
     Xe, ye = make_vision_dataset(spec, 400, seed=99)
     eval_set = balanced_eval_set(Xe, ye, per_class=24)
-    clients = build_clients(X, y, iid_partition(len(y), args.sim_clients, seed=0))
+    if args.population > 0:
+        # Streaming population: shards derive lazily from (seed, client_id);
+        # nothing O(population) is ever built (docs/POPULATION.md).
+        clients = SyntheticPopulation(spec=spec, population=args.population,
+                                      samples_per_client=160, seed=0)
+        n_clients = args.population
+    else:
+        X, y = make_vision_dataset(spec, 160 * args.sim_clients, seed=0)
+        clients = build_clients(
+            X, y, iid_partition(len(y), args.sim_clients, seed=0))
+        n_clients = args.sim_clients
     adapter = resnet_task("resnet8", num_classes=8)
     cycles = max(1, -(-args.rounds // (10 * args.rl)))   # just enough rounds
     sched = FedPartSchedule(num_groups=10, warmup_rounds=args.warmup,
@@ -161,6 +182,9 @@ def run_simulation(args) -> int:
                       buffer_k=args.buffer_k,
                       staleness_exponent=args.staleness_exp,
                       sample_fraction=args.participation,
+                      cohort_size=args.cohort_size,
+                      state_store_entries=args.state_store_entries,
+                      state_store_spill=args.state_store_spill,
                       max_inflight_cohorts=args.max_inflight,
                       plan=args.plan,
                       capacity_tiers=tuple(args.capacity_tiers),
@@ -181,7 +205,7 @@ def run_simulation(args) -> int:
         extra = (f" vtime={res.timeline.total_seconds:.3f}s "
                  f"max_staleness={max(stale) if stale else 0}")
     print(f"[fedtrain.sim] engine={args.engine} runtime={args.runtime} "
-          f"clients={args.sim_clients} rounds={args.rounds} "
+          f"clients={n_clients} rounds={args.rounds} "
           f"in {time.time()-t0:.1f}s | best_acc={res.best_acc:.4f} "
           f"comm={res.comm_total_bytes/max(res.comm_fnu_bytes,1):.2%} of FNU"
           f"{extra}")
@@ -203,6 +227,22 @@ def main(argv=None) -> int:
     ap.add_argument("--sim-clients", type=int, default=0,
                     help="simulate N federated clients (fl/ stack) instead of "
                          "the mesh trainer")
+    ap.add_argument("--population", type=int, default=0,
+                    help="stream N virtual clients from a seeded "
+                         "SyntheticPopulation instead of materialising "
+                         "--sim-clients shards up front; per-round host cost "
+                         "is O(cohort), so N can be millions "
+                         "(docs/POPULATION.md)")
+    ap.add_argument("--cohort-size", type=int, default=0,
+                    help="explicit clients per dispatch/round (0 = "
+                         "--participation fraction of the fleet); the natural "
+                         "knob under --population")
+    ap.add_argument("--state-store-entries", type=int, default=0,
+                    help="LRU cap on per-client MOON/EF state entries "
+                         "(0 = unbounded, the legacy behavior)")
+    ap.add_argument("--state-store-spill", default="",
+                    help="directory to spill evicted per-client state to "
+                         "(empty = evicted entries are dropped)")
     ap.add_argument("--engine", choices=["sequential", "vmap", "shard_map"],
                     default="sequential",
                     help="client engine for --sim-clients: per-client oracle "
@@ -271,7 +311,7 @@ def main(argv=None) -> int:
                     help="per-dispatch probability a client update is lost")
     args = ap.parse_args(argv)
 
-    if args.sim_clients > 0:
+    if args.sim_clients > 0 or args.population > 0:
         return run_simulation(args)
 
     cfg = get_config(args.arch, smoke=not args.full_size)

@@ -1,0 +1,420 @@
+"""Population-scale client store (fl.population, docs/POPULATION.md).
+
+Pins the subsystem's three contracts:
+
+1. **Equivalence** — a ``SyntheticPopulation``-backed run is bit-identical to
+   the same federation run from the materialised ``Sequence`` (its shards
+   pre-built client by client), across the sequential/vmap engines and the
+   degenerate async runtime; ``MaterializedPopulation`` wrapping is exact by
+   construction.  Bounding the state store *with spill* is also exact: MOON
+   prev-models and EF residuals that crossed the disk boundary train
+   bit-identically.
+
+2. **Scale** — every per-round host cost is O(cohort): Floyd's sampler draws
+   k ids with k rng draws, ``IncrementalSampler`` tops up without
+   replacement, lazy speed multipliers and shards make a million-client
+   fleet dispatchable in milliseconds, and the seed-collision regression
+   pins why the linear per-(round, client) formula had to go.
+
+3. **Boundedness** — the LRU store caps in-memory entries, spills
+   value-exactly, and drops to "first contact" semantics without spill.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.schedule import FNUSchedule, FedPartSchedule
+from repro.data import (VisionDatasetSpec, balanced_eval_set, build_clients,
+                        iid_partition, make_vision_dataset)
+from repro.fl import AlgoConfig, AvailabilityConfig, FLRunConfig, resnet_task, run_federated
+from repro.fl.population import (ClientStateStore, IncrementalSampler,
+                                 MaterializedPopulation, SyntheticPopulation,
+                                 as_population, client_round_seed,
+                                 resolve_cohort_size, sample_excluding,
+                                 sample_without_replacement)
+from repro.fl.population.sampling import _nth_absent
+from repro.fl.runtime.clients import ClientAvailability
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+def test_floyd_uniform_subsets_and_draw_count():
+    rng = np.random.default_rng(0)
+    for n, k in [(1, 1), (5, 0), (5, 5), (10, 3), (10**9, 6)]:
+        before = rng.bit_generator.state
+        out = sample_without_replacement(rng, n, k)
+        assert len(out) == len(set(out)) == k
+        assert all(0 <= x < n for x in out)
+        # exactly k draws: replaying k integers() advances to the same state
+        replay = np.random.Generator(np.random.PCG64())
+        replay.bit_generator.state = before
+        for j in range(n - k, n):
+            replay.integers(0, j + 1)
+        assert replay.bit_generator.state == rng.bit_generator.state
+
+
+def test_floyd_covers_all_subsets():
+    # n=4, k=2: every 2-subset should appear with roughly equal frequency.
+    rng = np.random.default_rng(1)
+    counts = {}
+    for _ in range(3000):
+        s = frozenset(sample_without_replacement(rng, 4, 2))
+        counts[s] = counts.get(s, 0) + 1
+    assert len(counts) == 6
+    freqs = np.array(list(counts.values())) / 3000
+    assert np.all(np.abs(freqs - 1 / 6) < 0.03)
+
+
+def test_floyd_rejects_bad_k():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        sample_without_replacement(rng, 5, 6)
+    with pytest.raises(ValueError):
+        sample_without_replacement(rng, 5, -1)
+
+
+def test_nth_absent_brute_force():
+    rng = np.random.default_rng(2)
+    for _ in range(200):
+        n = int(rng.integers(1, 40))
+        excluded = sorted(rng.choice(n, size=int(rng.integers(0, n)),
+                                     replace=False).tolist())
+        present = [i for i in range(n + len(excluded) + 5)
+                   if i not in set(excluded)]
+        for rank in range(min(len(present), 10)):
+            assert _nth_absent(rank, excluded) == present[rank]
+
+
+def test_sample_excluding_avoids_busy_and_matches_floyd_when_empty():
+    rng_a = np.random.default_rng(3)
+    rng_b = np.random.default_rng(3)
+    # empty exclusion: identical stream AND identical result as plain Floyd
+    assert (sample_excluding(rng_a, 100, 7, []) ==
+            sample_without_replacement(rng_b, 100, 7))
+    assert rng_a.bit_generator.state == rng_b.bit_generator.state
+    busy = [0, 1, 2, 50, 99]
+    for _ in range(50):
+        out = sample_excluding(rng_a, 100, 10, busy)
+        assert len(out) == len(set(out)) == 10
+        assert not set(out) & set(busy)
+        assert all(0 <= x < 100 for x in out)
+
+
+def test_incremental_sampler_never_repeats():
+    rng = np.random.default_rng(4)
+    s = IncrementalSampler(rng, 30, busy=[3, 7])
+    seen = set()
+    while s.remaining > 0:
+        out = s.draw(4)
+        assert not set(out) & seen
+        assert not set(out) & {3, 7}
+        seen.update(out)
+    assert seen == set(range(30)) - {3, 7}
+    assert s.draw(5) == []
+
+
+def test_resolve_cohort_size():
+    assert resolve_cohort_size(100, 0.25) == 25
+    assert resolve_cohort_size(100, 0.0) == 1          # floor of 1
+    assert resolve_cohort_size(100, 0.25, cohort_size=8) == 8
+    assert resolve_cohort_size(5, 1.0, cohort_size=999) == 5   # clamped
+    assert resolve_cohort_size(10**6, 0.5, cohort_size=16) == 16
+    with pytest.raises(ValueError):
+        resolve_cohort_size(10, 1.0, cohort_size=-1)
+
+
+# ---------------------------------------------------------------------------
+# seed derivation (satellite: collision regression)
+# ---------------------------------------------------------------------------
+
+def test_linear_seed_formula_collides_but_seedsequence_does_not():
+    # The historical formula: seed*100_003 + round*1_009 + client_id.
+    # (round r, client c+1_009) == (round r+1, client c) — adjacent rounds
+    # reuse batch-order seeds as soon as ids span more than 1_009.
+    seed = 0
+    old = lambda r, c: seed * 100_003 + r * 1_009 + c
+    assert old(0, 1_009) == old(1, 0)        # the collision this PR fixes
+    rounds, ids = range(8), [0, 1, 17, 1_009, 1_010, 2_018, 10**6]
+    old_seeds = [old(r, c) for r in rounds for c in ids]
+    assert len(set(old_seeds)) < len(old_seeds)
+    new_seeds = [client_round_seed(seed, r, c) for r in rounds for c in ids]
+    assert len(set(new_seeds)) == len(new_seeds)
+
+
+def test_client_round_seed_deterministic_and_seed_sensitive():
+    assert client_round_seed(3, 5, 7) == client_round_seed(3, 5, 7)
+    assert client_round_seed(3, 5, 7) != client_round_seed(4, 5, 7)
+    assert client_round_seed(3, 5, 7) != client_round_seed(3, 6, 7)
+    assert client_round_seed(3, 5, 7) != client_round_seed(3, 5, 8)
+    assert 0 <= client_round_seed(0, 0, 10**7) < 2**32
+
+
+# ---------------------------------------------------------------------------
+# bounded state store
+# ---------------------------------------------------------------------------
+
+def _tree(v):
+    return {"w": np.full((3, 2), v, np.float32), "b": np.arange(v, v + 4.0)}
+
+
+def test_store_unbounded_is_a_dict():
+    st = ClientStateStore()
+    for i in range(50):
+        st.put("moon", i, _tree(i))
+    assert len(st) == 50 and st.evictions == 0
+    for i in range(50):
+        np.testing.assert_array_equal(st.get("moon", i)["w"], _tree(i)["w"])
+
+
+def test_store_lru_evicts_least_recent_and_drops_without_spill():
+    st = ClientStateStore(max_entries=2)
+    st.put("ef", 0, _tree(0))
+    st.put("ef", 1, _tree(1))
+    st.get("ef", 0)                      # 0 becomes most-recent
+    st.put("ef", 2, _tree(2))            # evicts 1, not 0
+    assert st.get("ef", 1) is None
+    assert st.get("ef", 0) is not None and st.get("ef", 2) is not None
+    assert st.evictions == 1 and st.spills == 0
+
+
+def test_store_spill_round_trip_value_exact(tmp_path):
+    rng = np.random.default_rng(5)
+    st = ClientStateStore(max_entries=3, spill_dir=str(tmp_path))
+    trees = {i: {"a": rng.standard_normal((4, 5)).astype(np.float32),
+                 "b": (rng.standard_normal(7), {"c": rng.integers(0, 9, 3)})}
+             for i in range(12)}
+    for i, t in trees.items():
+        st.put("ef", i, t)
+    assert len(st) == 3 and st.spills == 9
+    for i, t in trees.items():           # every entry reloads bit-exact
+        got = st.get("ef", i)
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(a, b)
+    assert st.loads >= 9
+    st.pop("ef", 0)
+    assert st.get("ef", 0) is None
+
+
+def test_store_kinds_are_namespaced():
+    st = ClientStateStore()
+    st.put("moon", 1, _tree(1))
+    st.put("ef", 1, _tree(2))
+    np.testing.assert_array_equal(st.get("moon", 1)["w"], _tree(1)["w"])
+    np.testing.assert_array_equal(st.get("ef", 1)["w"], _tree(2)["w"])
+
+
+# ---------------------------------------------------------------------------
+# synthetic populations
+# ---------------------------------------------------------------------------
+
+SPEC = VisionDatasetSpec(num_classes=4, image_size=8)
+
+
+def test_population_deterministic_and_order_independent():
+    a = SyntheticPopulation(spec=SPEC, population=100, samples_per_client=12,
+                            seed=7, cache_entries=0)
+    b = SyntheticPopulation(spec=SPEC, population=100, samples_per_client=12,
+                            seed=7, cache_entries=0)
+    for cid in (99, 3, 42):              # different access orders
+        da, db = a.dataset(cid), b.dataset(cid)
+        np.testing.assert_array_equal(da.inputs, db.inputs)
+        np.testing.assert_array_equal(da.labels, db.labels)
+    d1, d2 = a.dataset(5), a.dataset(5)  # idempotent
+    np.testing.assert_array_equal(d1.inputs, d2.inputs)
+    c = SyntheticPopulation(spec=SPEC, population=100, samples_per_client=12,
+                            seed=8, cache_entries=0)
+    assert not np.array_equal(a.dataset(5).inputs, c.dataset(5).inputs)
+
+
+def test_population_num_samples_without_materialising():
+    pop = SyntheticPopulation(spec=SPEC, population=1000,
+                              samples_per_client=(8, 32), seed=0,
+                              cache_entries=0)
+    for cid in (0, 1, 999):
+        n = pop.num_samples(cid)
+        assert 8 <= n <= 32
+        assert len(pop.dataset(cid)) == n
+    sizes = {pop.num_samples(c) for c in range(64)}
+    assert len(sizes) > 1                # the range actually varies
+
+
+def test_population_dirichlet_label_skew():
+    pop = SyntheticPopulation(spec=SPEC, population=50, samples_per_client=200,
+                              alpha=0.1, seed=0, cache_entries=0)
+    # strong skew: most clients concentrate mass on few classes
+    fracs = []
+    for cid in range(8):
+        y = pop.dataset(cid).labels
+        fracs.append(np.bincount(y, minlength=4).max() / len(y))
+    assert np.mean(fracs) > 0.6
+    iid = SyntheticPopulation(spec=SPEC, population=50, samples_per_client=200,
+                              alpha=0.0, seed=0, cache_entries=0)
+    y = iid.dataset(0).labels
+    assert np.bincount(y, minlength=4).max() / len(y) < 0.5
+
+
+def test_population_cache_and_validation(tmp_path):
+    pop = SyntheticPopulation(spec=SPEC, population=10, samples_per_client=8,
+                              seed=0, cache_entries=2,
+                              cache_dir=str(tmp_path))
+    ref = {c: np.array(pop.dataset(c).inputs) for c in range(6)}
+    assert pop.cache_stats()["evictions"] > 0
+    for c in range(6):                   # spill round-trip: shards exact
+        np.testing.assert_array_equal(pop.dataset(c).inputs, ref[c])
+    with pytest.raises(IndexError):
+        pop.dataset(10)
+    with pytest.raises(ValueError):
+        SyntheticPopulation(spec=SPEC, population=0)
+
+
+def test_million_client_population_is_lazy():
+    pop = SyntheticPopulation(spec=SPEC, population=1_000_000,
+                              samples_per_client=16, seed=0)
+    assert pop.num_clients == 1_000_000
+    assert pop.num_samples(999_999) == 16
+    assert len(pop.dataset(999_999)) == 16
+    assert pop.capacity_tier(999_998, 3) == (999_998 % 3)
+
+
+def test_as_population_wraps_and_passes_through():
+    X, y = make_vision_dataset(SPEC, 32, seed=0)
+    clients = build_clients(X, y, iid_partition(32, 4, seed=0))
+    pop = as_population(clients)
+    assert isinstance(pop, MaterializedPopulation)
+    assert pop.num_clients == 4
+    assert as_population(pop) is pop
+    np.testing.assert_array_equal(pop.dataset(2).inputs, clients[2].inputs)
+    with pytest.raises(ValueError):
+        MaterializedPopulation([])
+    with pytest.raises(ValueError, match="refusing to materialize"):
+        SyntheticPopulation(spec=SPEC, population=200_000).materialize()
+
+
+# ---------------------------------------------------------------------------
+# lazy availability (no O(N) tables)
+# ---------------------------------------------------------------------------
+
+def test_availability_speed_is_lazy_and_deterministic():
+    cfg = AvailabilityConfig(speed_spread=3.0, seed=11)
+    big = ClientAvailability(cfg, 10**9)         # must not allocate O(N)
+    s = big.speed(999_999_999)
+    assert s == big.speed(999_999_999)           # memoised + deterministic
+    small = ClientAvailability(cfg, 8)
+    # order-independence: same (seed, id) hash regardless of fleet size
+    assert small.speed(5) == ClientAvailability(cfg, 10**6).speed(5)
+    assert small.speeds.shape == (8,)            # diagnostic table still works
+    spread = small.speeds
+    assert spread.min() < 1.0 < spread.max()
+
+
+def test_availability_degenerate_consumes_no_randomness():
+    av = ClientAvailability(AvailabilityConfig(), 10**6)
+    state = av._rng.bit_generator.state
+    assert av.speed(123_456) == 1.0
+    assert av.arrival_ok() is True
+    assert av.available([1, 2, 3]) == [1, 2, 3]
+    assert av.jitter() == 1.0 and av.drops() is False
+    assert av._rng.bit_generator.state == state
+
+
+# ---------------------------------------------------------------------------
+# end-to-end equivalence: population-backed == materialised
+# ---------------------------------------------------------------------------
+
+def _eval_set():
+    Xe, ye = make_vision_dataset(SPEC, 64, seed=9)
+    return balanced_eval_set(Xe, ye, per_class=8)
+
+
+def _cfg(**kw):
+    kw.setdefault("adam_eps", 1e-3)
+    return FLRunConfig(local_epochs=1, batch_size=16, lr=2e-3, **kw)
+
+
+def _assert_same(a, b, tol=0.0):
+    for la, lb in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        d = float(np.max(np.abs(np.asarray(la) - np.asarray(lb))))
+        assert d <= tol, d
+    for ha, hb in zip(a.history, b.history):
+        assert abs(ha["loss"] - hb["loss"]) <= max(tol, 1e-6)
+
+
+@pytest.fixture(scope="module")
+def pop_setup():
+    pop = SyntheticPopulation(spec=SPEC, population=8, samples_per_client=24,
+                              seed=3)
+    mat = [pop.dataset(i) for i in range(8)]
+    return resnet_task("resnet4", num_classes=4), pop, mat, _eval_set()
+
+
+@pytest.mark.parametrize("engine", ["sequential", "vmap"])
+def test_population_run_matches_materialised(pop_setup, engine):
+    adapter, pop, mat, eval_set = pop_setup
+    rounds = FedPartSchedule(num_groups=4, warmup_rounds=1, rounds_per_layer=1,
+                             cycles=1).rounds()[:3]
+    cfg = _cfg(engine=engine, sample_fraction=0.5, algo=AlgoConfig(name="moon"))
+    _assert_same(run_federated(adapter, pop, eval_set, rounds, cfg),
+                 run_federated(adapter, mat, eval_set, rounds, cfg))
+
+
+def test_population_run_matches_materialised_async(pop_setup):
+    adapter, pop, mat, eval_set = pop_setup
+    rounds = FNUSchedule(2).rounds()
+    cfg = _cfg(engine="sequential", runtime="async",
+               compression="int8", error_feedback=True)
+    ra = run_federated(adapter, pop, eval_set, rounds, cfg)
+    rb = run_federated(adapter, mat, eval_set, rounds, cfg)
+    _assert_same(ra, rb)
+    # and the degenerate async still equals sync, population-backed
+    rs = run_federated(adapter, pop, eval_set, rounds,
+                       _cfg(engine="sequential", compression="int8",
+                            error_feedback=True))
+    _assert_same(ra, rs, tol=1e-5)
+
+
+def test_bounded_store_with_spill_is_exact(pop_setup, tmp_path):
+    # MOON prevs + EF residuals evicted to disk must train bit-identically
+    # to the unbounded run (satellite: state survives eviction value-exact).
+    adapter, pop, _, eval_set = pop_setup
+    rounds = FNUSchedule(3).rounds()
+    base = _cfg(engine="sequential", sample_fraction=0.75,
+                algo=AlgoConfig(name="moon"),
+                compression="int8", error_feedback=True)
+    bounded = _cfg(engine="sequential", sample_fraction=0.75,
+                   algo=AlgoConfig(name="moon"),
+                   compression="int8", error_feedback=True,
+                   state_store_entries=2, state_store_spill=str(tmp_path))
+    _assert_same(run_federated(adapter, pop, eval_set, rounds, base),
+                 run_federated(adapter, pop, eval_set, rounds, bounded))
+
+
+def test_cohort_size_overrides_fraction(pop_setup):
+    adapter, pop, _, eval_set = pop_setup
+    rounds = FNUSchedule(1).rounds()
+    cfg = _cfg(engine="sequential", sample_fraction=1.0, cohort_size=3)
+    res = run_federated(adapter, pop, eval_set, rounds, cfg)
+    assert res.history[-1]["loss"] > 0
+    cfg_async = _cfg(engine="sequential", runtime="async",
+                     sample_fraction=1.0, cohort_size=3)
+    ra = run_federated(adapter, pop, eval_set, rounds, cfg_async)
+    disp = [e for e in ra.timeline.events if e["kind"] == "dispatch"]
+    assert all(len(e["clients"]) == 3 for e in disp)
+
+
+def test_million_client_round_smoke():
+    # One real round sampled from a 10^6-client fleet: the run must only ever
+    # touch the cohort (seconds, not hours — materialising would be ~GBs).
+    pop = SyntheticPopulation(spec=SPEC, population=1_000_000,
+                              samples_per_client=16, seed=0)
+    adapter = resnet_task("resnet4", num_classes=4)
+    cfg = _cfg(engine="sequential", cohort_size=2, runtime="async",
+               availability=AvailabilityConfig(speed_spread=2.0,
+                                               unavailable_prob=0.3, seed=1))
+    res = run_federated(adapter, pop, _eval_set(), FNUSchedule(1).rounds(), cfg)
+    disp = [e for e in res.timeline.events if e["kind"] == "dispatch"]
+    assert disp and all(len(e["clients"]) == 2 for e in disp)
+    assert all(c < 1_000_000 for e in disp for c in e["clients"])
