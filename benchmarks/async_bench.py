@@ -17,6 +17,13 @@ runtime's levers against a heterogeneous, jittery fleet:
   vs inflight=1 wall-clock) that the CI bench lane gates on
   (``benchmarks/compare.py``).
 
+* **server control loop** — a pinned straggler config run twice, with
+  ``controller="static"`` and ``controller="adaptive"`` (docs/CONTROL.md),
+  plus a scale-free ratio row (static clipped time-to-accuracy / adaptive
+  clipped time-to-accuracy, virtual-clock only so it is deterministic and
+  machine-independent) that the CI bench lane gates on: adaptive must not
+  reach the threshold later than static.
+
 plus the sync-barrier oracle as the reference row.  Each cell reports final
 and best accuracy, *virtual* total time, time-to-accuracy at the threshold,
 and the max staleness actually observed — the trade the async literature
@@ -118,7 +125,18 @@ def bench(clients=8, samples_per_client=32, rounds=12, threshold=0.4,
                  max_inflight_cohorts=mi),
         ))
 
-    rows, inflight_walls = [], {}
+    # Adaptive-controller A/B (docs/CONTROL.md): the same straggler-bound
+    # config (merge-driven dispatch, small cohorts, discounted staleness)
+    # with the control loop off vs on.  Gated on *virtual* time-to-accuracy,
+    # so the ratio row below is seed-deterministic and machine-independent.
+    ab_base = dict(runtime="async", async_policy="fedbuff", buffer_k=0,
+                   staleness_exponent=0.5, sample_fraction=0.25,
+                   max_inflight_cohorts=1)
+    configs.append(("ab_static", dict(ab_base)))
+    configs.append(("ab_adaptive", dict(ab_base, controller="adaptive",
+                                        controller_inflight_bounds=(1, 4))))
+
+    rows, inflight_walls, ab_tta = [], {}, {}
     for name, kw in configs:
         cfg = FLRunConfig(**base, **kw)
         # The inflight rows feed the CI regression gate, so their host
@@ -159,6 +177,7 @@ def bench(clients=8, samples_per_client=32, rounds=12, threshold=0.4,
             "buffer_k": kw.get("buffer_k", 0),
             "policy": kw["async_policy"],
             "max_inflight": mi,
+            "controller": kw.get("controller", "static"),
             "wall_seconds": wall,
             "clients_trained": trained,
             "devices_used": ndev,
@@ -166,6 +185,13 @@ def bench(clients=8, samples_per_client=32, rounds=12, threshold=0.4,
             "virtual_overlap_seconds": tl.overlap_seconds(),
         }
         rows.append(row)
+        if name.startswith("ab_"):
+            # Clipped tta: a run that never reaches the threshold counts as
+            # its full virtual span, so the ratio below stays finite and
+            # still rewards finishing the same rounds in less virtual time.
+            ab_tta[name] = min(tta, tl.total_seconds)
+            row["derived"] += (" control="
+                               f"{len(tl.of_kind('control'))} events")
         if name.startswith("inflight"):
             inflight_walls[mi] = wall
             row["derived"] += (f" wall={wall:.1f}s "
@@ -192,6 +218,23 @@ def bench(clients=8, samples_per_client=32, rounds=12, threshold=0.4,
             if verbose:
                 print(f"[inflight{mi} speedup   ] {speedup:.2f}x wall-clock "
                       f"vs inflight=1")
+
+    # Adaptive-control gate: static clipped tta / adaptive clipped tta, as a
+    # scale-free "speedup" row (>= 1 means the control loop pays its way).
+    if {"ab_static", "ab_adaptive"} <= ab_tta.keys():
+        ratio = ab_tta["ab_static"] / max(ab_tta["ab_adaptive"], 1e-9)
+        rows.append({
+            "name": f"async_adaptive_tta_ratio_c{clients}",
+            "us_per_call": 0.0,
+            "derived": (f"{ratio:.2f}x virtual tta vs static control "
+                        f"(static={ab_tta['ab_static']:.2f}s "
+                        f"adaptive={ab_tta['ab_adaptive']:.2f}s)"),
+            "speedup": ratio,
+            "controller": "adaptive",
+        })
+        if verbose:
+            print(f"[adaptive tta ratio  ] {ratio:.2f}x virtual "
+                  f"time-to-accuracy vs static control")
     return rows
 
 

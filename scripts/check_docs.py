@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Docs drift checker — fails the build when prose and code disagree.
+
+Run from the repo root (the tier-1 lint lane does: ``python
+scripts/check_docs.py``).  Three classes of rot are caught:
+
+1. **Flag-table drift** — every field of ``FLRunConfig`` (parsed from
+   ``src/repro/fl/server.py`` with ``ast``; no jax import, so this runs
+   anywhere) must appear as a row of README.md's knob table *and* be
+   mentioned in at least one ``docs/*.md`` page.
+2. **Dead links** — every relative markdown link in README.md and
+   ``docs/*.md`` must resolve to an existing file (anchors stripped).
+3. **Dead path references** — every ``src/`` / ``tests/`` / ``scripts/`` /
+   ``benchmarks/`` / ``examples/`` / ``docs/`` path mentioned anywhere in
+   those documents must exist on disk.
+
+Exit status is the number of failures (0 = clean); each failure prints one
+``[check_docs] FAIL`` line with the file and the offending reference.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+CONFIG_SOURCE = ROOT / "src" / "repro" / "fl" / "server.py"
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+# path-like tokens we hold docs accountable for (prose or backticks)
+PATH_RE = re.compile(
+    r"\b(?:src|tests|scripts|benchmarks|examples|docs)/[A-Za-z0-9_./-]*")
+# [text](target) markdown links; targets with a scheme are skipped below
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def flrunconfig_fields() -> list[str]:
+    """FLRunConfig's annotated field names, via ast (no repro/jax import)."""
+    tree = ast.parse(CONFIG_SOURCE.read_text(), filename=str(CONFIG_SOURCE))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "FLRunConfig":
+            return [stmt.target.id for stmt in node.body
+                    if isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)]
+    raise SystemExit(f"[check_docs] FLRunConfig not found in {CONFIG_SOURCE}")
+
+
+def check_flag_table(fields: list[str], failures: list[str]) -> None:
+    readme = (ROOT / "README.md").read_text()
+    # table rows look like: | `field_name` | `--flag` or — | meaning |
+    table_fields = set(re.findall(r"^\|\s*`(\w+)`\s*\|", readme, re.M))
+    docs_text = "\n".join(p.read_text() for p in DOC_FILES
+                          if p.parent.name == "docs")
+    for field in fields:
+        if field not in table_fields:
+            failures.append(
+                f"README.md: FLRunConfig.{field} missing from the knob table")
+        if not re.search(rf"\b{re.escape(field)}\b", docs_text):
+            failures.append(
+                f"docs/: FLRunConfig.{field} not documented in any docs page")
+    for name in table_fields - set(fields):
+        failures.append(
+            f"README.md: knob table row `{name}` is not an FLRunConfig field")
+
+
+def check_links(doc: Path, text: str, failures: list[str]) -> None:
+    for target in LINK_RE.findall(text):
+        if "://" in target or target.startswith(("mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (doc.parent / rel).resolve()
+        # README badge links point at ../../actions/... on the forge, not at
+        # files in the tree — only hold links accountable inside the repo.
+        if ROOT not in resolved.parents and resolved != ROOT:
+            continue
+        if not resolved.exists():
+            failures.append(f"{doc.relative_to(ROOT)}: dead link -> {target}")
+
+
+def check_path_refs(doc: Path, text: str, failures: list[str]) -> None:
+    for token in PATH_RE.findall(text):
+        path = token.rstrip(".,;:")
+        # glob-ish mentions ("docs/*.md", "BENCH_*.json") aren't single paths
+        if "*" in path or not (ROOT / path).exists():
+            if "*" in path:
+                matches = list(ROOT.glob(path))
+                if matches:
+                    continue
+            failures.append(
+                f"{doc.relative_to(ROOT)}: references missing path {path}")
+
+
+def main() -> int:
+    failures: list[str] = []
+    fields = flrunconfig_fields()
+    check_flag_table(fields, failures)
+    for doc in DOC_FILES:
+        text = doc.read_text()
+        check_links(doc, text, failures)
+        check_path_refs(doc, text, failures)
+    for line in failures:
+        print(f"[check_docs] FAIL {line}")
+    checked = len(DOC_FILES)
+    print(f"[check_docs] {len(fields)} FLRunConfig fields, {checked} "
+          f"documents, {len(failures)} failure(s)")
+    return len(failures)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

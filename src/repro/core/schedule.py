@@ -136,6 +136,12 @@ class ScheduleIndex:
     the final spec so late dispatches (drained after the last planned
     aggregation) stay well-defined.
 
+    A server controller (docs/CONTROL.md) may *override* the group a future
+    version trains (``override_group``): the override keeps the base spec's
+    ``index`` — so eval cadence and history numbering are untouched — and
+    only redirects which subtree the version's dispatches train.  With no
+    overrides registered, lookups are exactly the static schedule.
+
     >>> idx = ScheduleIndex.from_rounds(
     ...     FedPartSchedule(num_groups=2, warmup_rounds=1,
     ...                     rounds_per_layer=1).rounds())
@@ -145,9 +151,19 @@ class ScheduleIndex:
     True
     >>> idx.staleness(completed_at_version=3, dispatched_at_version=1)
     2
+    >>> spec = idx.override_group(2, 0)    # repeat group 0 at version 2
+    >>> (idx.for_version(2).group, idx.for_version(2).index)
+    (0, 2)
+    >>> spec.phase
+    'partial'
     """
 
     specs: tuple[RoundSpec, ...]
+    # Controller-installed per-version redirects (version -> spec).  Excluded
+    # from eq/hash: two indices over the same schedule stay interchangeable
+    # keys regardless of what a controller did to one of them.
+    overrides: dict[int, RoundSpec] = dataclasses.field(
+        default_factory=dict, compare=False, repr=False)
 
     @classmethod
     def from_rounds(cls, rounds: Sequence[RoundSpec]) -> "ScheduleIndex":
@@ -160,7 +176,24 @@ class ScheduleIndex:
         """The spec governing dispatches while the server is at ``version``."""
         if version < 0:
             raise ValueError(f"server version must be >= 0, got {version}")
+        if version in self.overrides:
+            return self.overrides[version]
         return self.specs[min(version, len(self.specs) - 1)]
+
+    def override_group(self, version: int, group: int) -> RoundSpec:
+        """Pin the layer group trained at ``version`` (controller actuator).
+
+        The override inherits the base spec's ``index`` and ``cycle`` —
+        history numbering, eval cadence, and the run's round budget are
+        unchanged — and takes ``phase="partial"`` for a real group (or the
+        base phase when re-pinning a full-network round).  Returns the
+        installed spec."""
+        base = self.specs[min(version, len(self.specs) - 1)]
+        spec = RoundSpec(index=base.index,
+                         phase="partial" if group >= 0 else base.phase,
+                         cycle=base.cycle, group=int(group))
+        self.overrides[version] = spec
+        return spec
 
     @staticmethod
     def staleness(completed_at_version: int, dispatched_at_version: int) -> int:

@@ -83,20 +83,84 @@ class Timeline:
     optimises — come out of a run as first-class data instead of being
     re-derived from round counts.
 
-    Events are dicts with at least ``{"t", "kind"}``; merges add
-    ``{"version", "loss", "staleness_mean", "staleness_max"}``, evals add
-    ``{"version", "acc"}``, completions add the per-update comm bytes and
-    comp flops actually spent (dropped clients burn compute but deliver no
-    bytes upstream).
+    Events are dicts with at least ``{"t", "kind"}`` where ``t`` is in
+    **virtual seconds** (``core.costs.VirtualTimeModel`` units — only ratios
+    between configs are meaningful).  Per kind:
+
+    * ``"dispatch"`` — ``{"version", "group", "clients", "t_end"}``: a cohort
+      sampled while the server sat at ``version``; ``t_end`` is its last
+      member's completion time (the cohort's *span* is ``[t, t_end]``).
+    * ``"complete"`` / ``"drop"`` — ``{"client", "comp_flops", ...}``; a
+      completion adds ``staleness`` (server versions committed since its
+      dispatch) and the delivered ``comm_bytes``; drops burn compute but
+      deliver nothing upstream.
+    * ``"merge"`` — ``{"version", "group", "loss", "merged",
+      "staleness_mean", "staleness_max"}``: server aggregation number
+      ``version`` (0-based merge index) committed the buffer; ``group`` is
+      the layer group its schedule entry trained (-1 = full network).
+    * ``"eval"`` — ``{"version", "acc"}`` on the eval cadence.
+    * ``"control"`` — a server controller's knob adjustment
+      (docs/CONTROL.md), recorded at the merge that triggered it.
+
+    >>> tl = Timeline()
+    >>> tl.record(0.5, "eval", version=0, acc=0.25)
+    >>> tl.record(1.5, "eval", version=1, acc=0.75)
+    >>> tl.total_seconds
+    1.5
+    >>> tl.time_to_accuracy(0.5)
+    1.5
+    >>> [e["acc"] for e in tl.of_kind("eval")]
+    [0.25, 0.75]
     """
 
     events: list[dict] = dataclasses.field(default_factory=list)
 
     def record(self, t: float, kind: str, **fields) -> None:
+        """Append one event at virtual time ``t`` (events are kept in the
+        order they were recorded, which is causal order for the runtime)."""
         self.events.append({"t": float(t), "kind": kind, **fields})
 
     def of_kind(self, kind: str) -> list[dict]:
+        """All events of ``kind``, in recorded (causal) order."""
         return [e for e in self.events if e["kind"] == kind]
+
+    def window(self, last_merges: int = 1) -> "TimelineWindow":
+        """The merge-aligned observation window over the last ``last_merges``
+        server aggregations — the :class:`TimelineWindow` a
+        ``ServerController`` observes between merges (docs/CONTROL.md).
+
+        The window ends at the most recent merge event and reaches back
+        ``last_merges`` merges: its events are everything recorded *after*
+        the boundary merge (exclusive) through the end of the log, so the
+        trailing eval of the final merge is included.  ``t_start`` is the
+        boundary merge's timestamp (0.0 when the window spans the whole
+        run); ``t_end`` is the final merge's.  With no merges recorded yet
+        the window is empty (``t_start == t_end == 0.0``).
+
+        >>> tl = Timeline()
+        >>> tl.record(1.0, "merge", version=0, group=0, loss=2.0)
+        >>> tl.record(3.0, "merge", version=1, group=1, loss=1.0)
+        >>> w = tl.window(1)
+        >>> (w.t_start, w.t_end, len(w.events))
+        (1.0, 3.0, 1)
+        >>> tl.window(5).t_start      # clamps to the start of the run
+        0.0
+        >>> Timeline().window().duration
+        0.0
+        """
+        if last_merges < 1:
+            raise ValueError(f"last_merges must be >= 1, got {last_merges}")
+        pos = [i for i, e in enumerate(self.events) if e["kind"] == "merge"]
+        if not pos:
+            return TimelineWindow(t_start=0.0, t_end=0.0, events=[])
+        t_end = self.events[pos[-1]]["t"]
+        if len(pos) > last_merges:
+            boundary = pos[-1 - last_merges]
+            return TimelineWindow(t_start=self.events[boundary]["t"],
+                                  t_end=t_end,
+                                  events=self.events[boundary + 1:])
+        return TimelineWindow(t_start=0.0, t_end=t_end,
+                              events=list(self.events))
 
     @property
     def total_seconds(self) -> float:
@@ -139,6 +203,149 @@ class Timeline:
             if acc >= threshold:
                 return t
         return float("inf")
+
+
+@dataclasses.dataclass
+class TimelineWindow:
+    """A merge-aligned slice of a :class:`Timeline` with the windowed
+    reducers a server controller observes (docs/CONTROL.md).
+
+    Built by :meth:`Timeline.window`.  ``t_start`` / ``t_end`` are virtual
+    seconds (the boundary merge's and final merge's timestamps); ``events``
+    are the raw event dicts recorded after the boundary merge.  All reducers
+    are pure functions of ``events`` — virtual-event-only, so anything
+    decided from them is host- and device-count independent.
+
+    >>> tl = Timeline()
+    >>> tl.record(0.0, "dispatch", version=0, group=0, clients=[0, 1],
+    ...           t_end=2.0)
+    >>> tl.record(1.0, "complete", client=0, staleness=0, comm_bytes=8,
+    ...           comp_flops=4.0)
+    >>> tl.record(2.0, "complete", client=1, staleness=2, comm_bytes=8,
+    ...           comp_flops=4.0)
+    >>> tl.record(2.0, "merge", version=0, group=0, loss=2.0)
+    >>> w = tl.window()
+    >>> w.duration
+    2.0
+    >>> w.staleness_moments()
+    (1.0, 2.0)
+    >>> w.effective_participation(4)
+    0.5
+    >>> w.span_seconds()
+    2.0
+    """
+
+    t_start: float
+    t_end: float
+    events: list[dict]
+
+    def of_kind(self, kind: str) -> list[dict]:
+        return [e for e in self.events if e["kind"] == kind]
+
+    @property
+    def duration(self) -> float:
+        """Window length in virtual seconds (0.0 for an empty window)."""
+        return max(self.t_end - self.t_start, 0.0)
+
+    @property
+    def merges(self) -> int:
+        """Server aggregations inside the window (<= the requested span)."""
+        return len(self.of_kind("merge"))
+
+    def staleness_moments(self) -> tuple[float, float]:
+        """First and second moments ``(E[s], E[s^2])`` of the staleness of
+        the window's delivered updates — the quantities the
+        partial-participation convergence bounds track.  ``(0.0, 0.0)``
+        when nothing was delivered.
+
+        >>> TimelineWindow(0.0, 0.0, []).staleness_moments()
+        (0.0, 0.0)
+        """
+        s = [float(e.get("staleness", 0)) for e in self.of_kind("complete")]
+        if not s:
+            return (0.0, 0.0)
+        return (float(np.mean(s)), float(np.mean(np.square(s))))
+
+    def discounted_mix(self, exponent: float) -> float:
+        """Mean polynomial staleness discount ``E[(1+s)^-a]`` over the
+        window's deliveries — an unweighted estimate of the merge's mixing
+        coefficient ``m`` (docs/ASYNC.md).  1.0 when nothing was delivered
+        (no evidence the discount is biting) or when ``exponent == 0``.
+
+        >>> w = TimelineWindow(0.0, 1.0, [
+        ...     {"t": 0.5, "kind": "complete", "client": 0, "staleness": 0},
+        ...     {"t": 1.0, "kind": "complete", "client": 1, "staleness": 3},
+        ... ])
+        >>> w.discounted_mix(1.0)
+        0.625
+        >>> w.discounted_mix(0.0)
+        1.0
+        """
+        if exponent == 0.0:
+            return 1.0
+        s = [float(e.get("staleness", 0)) for e in self.of_kind("complete")]
+        if not s:
+            return 1.0
+        return float(np.mean([(1.0 + x) ** (-exponent) for x in s]))
+
+    def effective_participation(self, num_clients: int) -> float:
+        """Fraction of the fleet that *delivered* an update inside the
+        window — distinct completing clients over ``num_clients`` (the
+        effective-participation rate of Sen et al.).  Drops don't count."""
+        if num_clients < 1:
+            raise ValueError(f"num_clients must be >= 1, got {num_clients}")
+        seen = {e["client"] for e in self.of_kind("complete")}
+        return len(seen) / num_clients
+
+    def _spans(self) -> list[tuple[float, float]]:
+        """Cohort spans dispatched inside the window, clipped to it."""
+        spans = []
+        for e in self.of_kind("dispatch"):
+            if "t_end" not in e:
+                continue
+            s, t = max(e["t"], self.t_start), min(e["t_end"], self.t_end)
+            if t > s:
+                spans.append((s, t))
+        return spans
+
+    def span_seconds(self) -> float:
+        """Total in-window flight seconds of the window's cohorts (each
+        dispatch's ``[t, t_end]`` span clipped to the window, summed).
+        Divided by ``max_inflight * duration`` this is the occupancy of the
+        configured in-flight slots — the adaptive-inflight controller's
+        utilisation signal."""
+        return float(sum(t - s for s, t in self._spans()))
+
+    def overlap_seconds(self) -> float:
+        """Virtual seconds with >= 2 of the window's cohorts concurrently in
+        flight (clipped to the window) — the windowed form of
+        :meth:`Timeline.overlap_seconds`."""
+        from repro.core.costs import overlap_of_spans
+
+        return overlap_of_spans(self._spans())
+
+    def group_progress(self) -> dict[int, float]:
+        """Per layer group, the windowed merge-loss improvement: first minus
+        last merge loss for that group (positive = the group's merges are
+        still paying off; 0.0 for a group merged once).  Keys are the merge
+        events' ``group`` fields (-1 = full network).
+
+        >>> w = TimelineWindow(0.0, 3.0, [
+        ...     {"t": 1.0, "kind": "merge", "version": 0, "group": 2,
+        ...      "loss": 2.0},
+        ...     {"t": 2.0, "kind": "merge", "version": 1, "group": 2,
+        ...      "loss": 1.5},
+        ...     {"t": 3.0, "kind": "merge", "version": 2, "group": -1,
+        ...      "loss": 1.4},
+        ... ])
+        >>> w.group_progress()
+        {2: 0.5, -1: 0.0}
+        """
+        losses: dict[int, list[float]] = {}
+        for e in self.of_kind("merge"):
+            losses.setdefault(int(e.get("group", -1)), []).append(
+                float(e["loss"]))
+        return {g: ls[0] - ls[-1] for g, ls in losses.items()}
 
 
 # ---------------------------------------------------------------------------

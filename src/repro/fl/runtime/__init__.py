@@ -1,4 +1,11 @@
 from repro.fl.runtime.clients import AvailabilityConfig, ClientAvailability  # noqa: F401
+from repro.fl.runtime.control import (CONTROLLERS,  # noqa: F401
+                                      AdaptiveInflightController,
+                                      CompositeController, PolicyAdjustment,
+                                      ProgressGroupController,
+                                      ServerController,
+                                      StalenessBufferController,
+                                      make_controller)
 from repro.fl.runtime.engine import run_federated_async  # noqa: F401
 from repro.fl.runtime.policy import (POLICIES, AggregationPolicy,  # noqa: F401
                                      ClientUpdate, FedBuffPolicy,

@@ -27,6 +27,14 @@ reproducible event-for-event.  Crucially, a **degenerate config (all knobs
 0) consumes no randomness at all** — the async runtime's client-selection
 stream then advances exactly like the synchronous server's, which is what
 makes the sync-equivalence guarantee testable (docs/ASYNC.md).
+
+This model is also the *only* source of fleet feedback the adaptive server
+control loop ever sees (``runtime.control``, docs/CONTROL.md): stragglers,
+drops, and staleness show up as virtual timeline events, the controller
+windows those events, and its knob adjustments change only *future*
+dispatches — the availability stream itself is never re-seeded or consumed
+out of dispatch order, so static and adaptive runs draw identical
+randomness for identical dispatch sequences.
 """
 
 from __future__ import annotations

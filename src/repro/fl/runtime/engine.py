@@ -54,6 +54,15 @@ The dispatch decisions depend only on virtual events, never on host speed or
 device count, so a given config is reproducible on any machine; submeshes
 only decide *where* a cohort's compiled program runs.
 
+**Adaptive server control** (``FLRunConfig.controller``, ``runtime.control``,
+docs/CONTROL.md): with ``controller="adaptive"`` a ``ServerController``
+observes a merge-aligned ``Timeline.window`` between merges and may adjust
+the in-flight cohort target, the FedBuff goal K, or pin the next version's
+layer group (``ScheduleIndex.override_group``); every decision is recorded
+as a ``"control"`` timeline event.  The default ``"static"`` builds no
+controller at all — the hot path has no observation hook and reproduces the
+pre-controller runtime bit-for-bit.
+
 **Transmission compression** (``FLRunConfig.compression``, ``core.compress``,
 docs/COMPRESSION.md): the local training programs are untouched
 (``run_local_async`` always returns exact locals); quantisation happens
@@ -100,6 +109,7 @@ from repro.fl.population import (ClientPopulation, IncrementalSampler,
                                  as_population, client_round_seed,
                                  resolve_cohort_size)
 from repro.fl.runtime.clients import ClientAvailability
+from repro.fl.runtime.control import make_controller
 from repro.fl.runtime.policy import ClientUpdate, make_policy
 from repro.fl.tasks import TaskAdapter
 from repro.optim.adam import AdamConfig
@@ -245,7 +255,16 @@ def run_federated_async(
 
     # -- host-parallel dispatch state ---------------------------------------
     max_inflight = run_cfg.max_inflight_cohorts
-    pool = engine.cohort_pool(max_inflight)
+    # Server control loop (docs/CONTROL.md): None under the default
+    # controller="static" — structurally absent, so the static hot path has
+    # no observation hook at all.  Adaptive runs may grow the in-flight
+    # target later, so the submesh pool is carved for the controller's upper
+    # bound up front (dispatches beyond the current target never happen; the
+    # pool only bounds where launched cohorts can land).
+    controller = make_controller(run_cfg)
+    pool_cap = (max(max_inflight, run_cfg.controller_inflight_bounds[1])
+                if controller is not None else max_inflight)
+    pool = engine.cohort_pool(pool_cap)
     occupancy = vtm.occupancy()
     launch_queue: deque[_Cohort] = deque()
     # Results land on per-submesh devices; pull them back to the default
@@ -481,16 +500,17 @@ def run_federated_async(
 
     def flush() -> None:
         """Commit one server aggregation: merge the buffer, eval on the sync
-        cadence, advance the schedule, top the in-flight cohorts back up."""
-        nonlocal params, version
-        spec = rounds[version]
+        cadence, advance the schedule, let the controller adjust its knobs,
+        top the in-flight cohorts back up."""
+        nonlocal params, version, max_inflight
+        spec = sched.for_version(version)
         params, info = policy.merge(params, buffer, version)
         buffer.clear()
         entry = {"round": spec.index, "phase": spec.phase, "group": spec.group,
                  "loss": info["loss"], "t": vclock, "merged": info["merged"],
                  "staleness_mean": info["staleness_mean"],
                  "staleness_max": info["staleness_max"]}
-        timeline.record(vclock, "merge", version=version, **{
+        timeline.record(vclock, "merge", version=version, group=spec.group, **{
             k: info[k] for k in
             ("loss", "merged", "staleness_mean", "staleness_max")})
         if spec.index % run_cfg.eval_every == 0 or spec.index == total - 1:
@@ -506,6 +526,24 @@ def run_federated_async(
                   f"stale(mean={entry['staleness_mean']:.2f},"
                   f"max={entry['staleness_max']})")
         version += 1
+        if controller is not None and version < total:
+            # Observe between merges, apply before the post-merge dispatch so
+            # the new targets govern it.  Everything the controller saw is
+            # virtual-event-only, so adaptive runs replay on any host.
+            adj = controller.observe(timeline.window(run_cfg.controller_window))
+            if adj:
+                if adj.max_inflight is not None:
+                    max_inflight = min(max(adj.max_inflight, 1), pool_cap)
+                if adj.buffer_k is not None:
+                    policy.buffer_goal = max(adj.buffer_k, 1)
+                if (adj.group_override is not None
+                        and 0 <= adj.group_override < partition.num_groups):
+                    sched.override_group(version, adj.group_override)
+                timeline.record(vclock, "control", version=version,
+                                max_inflight=max_inflight,
+                                buffer_k=policy.buffer_goal,
+                                group_override=adj.group_override,
+                                note=adj.note)
         if version < total:
             if max_inflight == 1:
                 # Merge-driven regime: every merge dispatches, full stop —
@@ -553,11 +591,14 @@ def run_federated_async(
     if occupancy.spans:
         timeline.record(vclock, "occupancy", **occupancy.summary())
 
-    # Cost books over the committed server rounds — identical to the sync
-    # ledger by construction (the schedule advanced exactly through `rounds`);
-    # the timeline holds the per-update async accounting on top.
-    comm = comm_cost(params, partition, rounds, compression=ccfg)
-    comp = comp_cost(partition, rounds, group_fwd_flops=group_counts)
+    # Cost books over the committed server rounds, as actually trained: with
+    # no controller the effective specs ARE `rounds` (identical to the sync
+    # ledger by construction); group overrides swap in the groups the
+    # controller pinned.  The timeline holds the per-update async accounting
+    # on top.
+    effective = [sched.for_version(v) for v in range(total)]
+    comm = comm_cost(params, partition, effective, compression=ccfg)
+    comp = comp_cost(partition, effective, group_fwd_flops=group_counts)
     return FLResult(
         history=history,
         params=params,

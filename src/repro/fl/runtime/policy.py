@@ -84,7 +84,11 @@ class AggregationPolicy:
 
     partition: Partition
     staleness_exponent: float = 0.0
-    buffer_goal: int = 0            # K; 0 = whatever the last cohort's size was
+    # K; 0 = whatever the last cohort's size was.  Deliberately a plain
+    # mutable field: it is the staleness-aware controller's actuator
+    # (runtime.control, docs/CONTROL.md), re-targeted between merges —
+    # should_merge always reads the *current* goal.
+    buffer_goal: int = 0
 
     name = "base"
 

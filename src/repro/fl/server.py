@@ -126,6 +126,13 @@ class FLRunConfig:
     # its own disjoint device submesh when the engine has one to give
     # (docs/ASYNC.md "Host-parallel dispatch").
     max_inflight_cohorts: int = 1
+    # -- adaptive server control loop (fl/runtime/control.py, docs/CONTROL.md)
+    controller: str = "static"      # "static" (no controller object) | "adaptive"
+    controller_window: int = 4      # merges per observation window
+    controller_inflight_bounds: tuple[int, int] = (1, 4)  # adaptive inflight lo/hi
+    controller_buffer_bounds: tuple[int, int] = (1, 8)    # adaptive buffer_k lo/hi
+    controller_mix_floor: float = 0.5  # min windowed discounted mixing coeff
+    controller_max_repeats: int = 2    # consecutive layer-group repeats cap
 
     def make_state_store(self) -> ClientStateStore:
         """The per-run store for cross-round per-client state (MOON

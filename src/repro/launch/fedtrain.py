@@ -41,6 +41,16 @@ disjoint device submesh (host-parallel dispatch, docs/ASYNC.md):
         --engine vmap --runtime async --participation 0.5 --buffer-k 2 \
         --staleness-exp 0.5 --speed-spread 3.0 --max-inflight 2
 
+``--controller adaptive`` closes the server control loop (docs/CONTROL.md):
+between merges the server observes a window of the virtual timeline and
+re-targets the in-flight cohort count, the FedBuff goal K, and the next
+layer group, within ``--controller-inflight-bounds`` /
+``--controller-buffer-bounds`` / ``--controller-max-repeats``:
+
+    python -m repro.launch.fedtrain --sim-clients 8 --rounds 12 \
+        --engine vmap --runtime async --participation 0.25 \
+        --staleness-exp 0.5 --speed-spread 3.0 --controller adaptive
+
 ``--plan nested --capacity-tiers 0.3 0.6 1.0`` gives capacity-tiered clients
 *different layer subsets in the same round* (per-client layer plans,
 docs/HETEROGENEITY.md); each group is aggregated over only the clients that
@@ -186,6 +196,14 @@ def run_simulation(args) -> int:
                       state_store_entries=args.state_store_entries,
                       state_store_spill=args.state_store_spill,
                       max_inflight_cohorts=args.max_inflight,
+                      controller=args.controller,
+                      controller_window=args.controller_window,
+                      controller_inflight_bounds=tuple(
+                          args.controller_inflight_bounds),
+                      controller_buffer_bounds=tuple(
+                          args.controller_buffer_bounds),
+                      controller_mix_floor=args.controller_mix_floor,
+                      controller_max_repeats=args.controller_max_repeats,
                       plan=args.plan,
                       capacity_tiers=tuple(args.capacity_tiers),
                       compression=args.compression,
@@ -276,6 +294,27 @@ def main(argv=None) -> int:
                          "async: 1 = merge-driven dispatch, >1 trains that "
                          "many cohorts at once on disjoint device submeshes "
                          "(docs/ASYNC.md)")
+    ap.add_argument("--controller", choices=["static", "adaptive"],
+                    default="static",
+                    help="server control loop under --runtime async "
+                         "(docs/CONTROL.md): static config (default, no "
+                         "controller object) or the adaptive bundle that "
+                         "re-targets --max-inflight, --buffer-k, and the "
+                         "layer-group schedule between merges")
+    ap.add_argument("--controller-window", type=int, default=4,
+                    help="merges per controller observation window")
+    ap.add_argument("--controller-inflight-bounds", type=int, nargs=2,
+                    default=[1, 4], metavar=("LO", "HI"),
+                    help="adaptive in-flight cohort target bounds")
+    ap.add_argument("--controller-buffer-bounds", type=int, nargs=2,
+                    default=[1, 8], metavar=("LO", "HI"),
+                    help="adaptive FedBuff goal-K bounds")
+    ap.add_argument("--controller-mix-floor", type=float, default=0.5,
+                    help="windowed discounted-mixing-coefficient floor the "
+                         "staleness controller defends")
+    ap.add_argument("--controller-max-repeats", type=int, default=2,
+                    help="max consecutive layer-group repeats the progress "
+                         "controller may schedule")
     ap.add_argument("--plan", choices=["homogeneous", "nested", "random"],
                     default="homogeneous",
                     help="per-client layer plan for --sim-clients "

@@ -24,12 +24,17 @@ import pytest
 
 from repro.core.partition import build_partition
 from repro.core.schedule import FedPartSchedule, FNUSchedule, ScheduleIndex
-from repro.core.telemetry import Timeline
+from repro.core.telemetry import Timeline, TimelineWindow
 from repro.data import (VisionDatasetSpec, balanced_eval_set, build_clients,
                         make_vision_dataset)
 from repro.fl import (AlgoConfig, AvailabilityConfig, FLRunConfig,
                       resnet_task, run_federated)
 from repro.fl.runtime.clients import ClientAvailability
+from repro.fl.runtime.control import (AdaptiveInflightController,
+                                      PolicyAdjustment,
+                                      ProgressGroupController,
+                                      StalenessBufferController,
+                                      make_controller)
 from repro.fl.runtime.policy import (ClientUpdate, FedBuffPolicy,
                                      SyncFedAvgPolicy, make_policy)
 
@@ -264,6 +269,177 @@ def test_inflight2_books_overlap_and_occupancy(setup):
     assert occ[0]["overlap_seconds"] > 0.0
     # more cohorts were dispatched than the merge-driven run needed
     assert len(spans) >= len(one.timeline.cohort_spans())
+
+
+# -- adaptive server control loop (runtime/control.py, docs/CONTROL.md) -----
+
+
+def test_controller_static_default_is_structurally_absent():
+    """controller="static" (the default) builds no controller object — the
+    None seam, like compression="none" — and nonsense names reject."""
+    assert FLRunConfig().controller == "static"
+    assert make_controller(FLRunConfig()) is None
+    with pytest.raises(ValueError, match="unknown controller"):
+        make_controller(FLRunConfig(controller="pid"))
+    with pytest.raises(ValueError, match="controller_window"):
+        make_controller(FLRunConfig(controller="adaptive",
+                                    controller_window=0))
+
+
+def test_controller_static_bit_identical_and_uninstrumented(setup):
+    """The explicit static config reproduces the default async path
+    *bitwise* (params, histories, books) and records no control events."""
+    kw = dict(rounds=MIXED, availability=HETERO, buffer_k=1,
+              staleness_exponent=0.5, sample_fraction=0.67)
+    base = _run(setup, "fedavg", "vmap", "async", **kw)
+    explicit = _run(setup, "fedavg", "vmap", "async", controller="static",
+                    **kw)
+    for a, b in zip(jax.tree.leaves(base.params),
+                    jax.tree.leaves(explicit.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert base.history == explicit.history
+    assert base.comm_total_bytes == explicit.comm_total_bytes
+    assert not base.timeline.of_kind("control")
+
+
+def test_controller_adaptive_degenerate_bounds_match_static(setup):
+    """Adaptive with every actuator pinned (inflight bounds (1,1), buffer
+    bounds at the configured K, exponent 0, zero repeats) must walk the
+    static trajectory bitwise — the controller observes but can't move."""
+    kw = dict(rounds=MIXED, availability=HETERO, buffer_k=1,
+              staleness_exponent=0.0, sample_fraction=0.67)
+    static = _run(setup, "fedavg", "vmap", "async", **kw)
+    frozen = _run(setup, "fedavg", "vmap", "async", controller="adaptive",
+                  controller_inflight_bounds=(1, 1),
+                  controller_buffer_bounds=(1, 1),
+                  controller_max_repeats=0, **kw)
+    for a, b in zip(jax.tree.leaves(static.params),
+                    jax.tree.leaves(frozen.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert [h["loss"] for h in static.history] == \
+        [h["loss"] for h in frozen.history]
+
+
+def test_controller_adaptive_engine_independent_and_deterministic(setup):
+    """Adaptive decisions are virtual-event-only, so the controlled run is
+    engine-independent (vmap vs the sequential oracle) and replays exactly
+    under the same seed; the run completes every scheduled merge."""
+    rounds = FedPartSchedule(num_groups=6, warmup_rounds=1, rounds_per_layer=1,
+                             cycles=1).rounds()[:5]
+    kw = dict(rounds=rounds, availability=HETERO, buffer_k=1,
+              staleness_exponent=0.5, sample_fraction=0.34,
+              controller="adaptive", controller_window=2)
+    vm = _run(setup, "fedavg", "vmap", "async", **kw)
+    sq = _run(setup, "fedavg", "sequential", "async", **kw)
+    _assert_equivalent(vm, sq)
+    assert ([e["note"] for e in vm.timeline.of_kind("control")]
+            == [e["note"] for e in sq.timeline.of_kind("control")])
+    again = _run(setup, "fedavg", "vmap", "async", **kw)
+    assert [h["loss"] for h in vm.history] == [h["loss"] for h in again.history]
+    assert [h["t"] for h in vm.history] == [h["t"] for h in again.history]
+    assert len(vm.history) == len(rounds)
+
+
+def test_controller_adaptive_grows_inflight_on_stragglers(setup):
+    """On a straggling fleet with idle capacity, the inflight controller
+    must actually grow the in-flight target (a control event says so) and
+    the run must finish sooner on the virtual clock than static."""
+    rounds = FedPartSchedule(num_groups=6, warmup_rounds=1, rounds_per_layer=1,
+                             cycles=1).rounds()[:5]
+    kw = dict(rounds=rounds, availability=HETERO, buffer_k=1,
+              staleness_exponent=0.5, sample_fraction=0.34)
+    static = _run(setup, "fedavg", "vmap", "async", **kw)
+    adaptive = _run(setup, "fedavg", "vmap", "async", controller="adaptive",
+                    controller_window=2, **kw)
+    controls = adaptive.timeline.of_kind("control")
+    assert any(e["max_inflight"] > 1 for e in controls)
+    assert adaptive.timeline.total_seconds < static.timeline.total_seconds
+    # overridden groups are booked in the ledgers as actually trained
+    assert adaptive.comm_total_bytes > 0
+
+
+def _win(events, t_start=0.0, t_end=None):
+    te = (t_end if t_end is not None
+          else max((e["t"] for e in events), default=0.0))
+    return TimelineWindow(t_start=t_start, t_end=te, events=list(events))
+
+
+def test_inflight_controller_hill_climbs():
+    c = AdaptiveInflightController(bounds=(1, 4), current=1)
+    busy = _win([{"t": 0.0, "kind": "dispatch", "t_end": 2.0},
+                 {"t": 2.0, "kind": "merge", "version": 0, "group": 0,
+                  "loss": 1.0}])
+    adj = c.observe(busy)                      # util 1.0 => grow
+    assert adj.max_inflight == 2 and c.current == 2
+    idle = _win([{"t": 4.0, "kind": "merge", "version": 1, "group": 0,
+                  "loss": 1.0}], t_start=2.0)
+    adj = c.observe(idle)                      # util 0.0 => shrink
+    assert adj.max_inflight == 1 and c.current == 1
+    assert not c.observe(idle)                 # clamped at lo: no-op
+    assert not c.observe(_win([]))             # empty window: no-op
+    with pytest.raises(ValueError, match="bounds"):
+        AdaptiveInflightController(bounds=(0, 4), current=1)
+
+
+def test_staleness_buffer_controller_defends_mix_floor():
+    mk = lambda stale: _win(  # noqa: E731
+        [{"t": 1.0, "kind": "complete", "client": 0, "staleness": stale},
+         {"t": 1.0, "kind": "merge", "version": 0, "group": 0, "loss": 1.0}])
+    c = StalenessBufferController(exponent=1.0, bounds=(1, 8), current=2)
+    adj = c.observe(mk(3))                     # mix 0.25 < 0.5 => K up
+    assert adj.buffer_k == 3 and c.current == 3
+    adj = c.observe(mk(0))                     # mix 1.0 >= floor+slack => down
+    assert adj.buffer_k == 2 and c.current == 2
+    c0 = StalenessBufferController(exponent=0.0, bounds=(1, 8), current=2)
+    assert not c0.observe(mk(5))               # exponent 0: discount never bites
+    assert not c.observe(_win([]))             # nothing delivered: no-op
+
+
+def test_progress_group_controller_repeats_bounded():
+    c = ProgressGroupController(max_repeats=1)
+    improving = _win(
+        [{"t": 1.0, "kind": "merge", "version": 0, "group": 2, "loss": 2.0},
+         {"t": 2.0, "kind": "merge", "version": 1, "group": 2, "loss": 1.5}])
+    adj = c.observe(improving)
+    assert adj.group_override == 2             # still paying: repeat
+    assert not c.observe(improving)            # consecutive-repeat cap hit
+    assert c.observe(improving).group_override == 2   # cap resets after a skip
+    fnu = _win(
+        [{"t": 1.0, "kind": "merge", "version": 0, "group": 2, "loss": 2.0},
+         {"t": 2.0, "kind": "merge", "version": 1, "group": -1, "loss": 1.0}])
+    assert not c.observe(fnu)                  # FNU rounds follow the schedule
+    worse = _win(
+        [{"t": 1.0, "kind": "merge", "version": 0, "group": 2, "loss": 1.0},
+         {"t": 2.0, "kind": "merge", "version": 1, "group": 2, "loss": 1.4}])
+    assert not c.observe(worse)                # regressing: advance
+    single = _win([{"t": 1.0, "kind": "merge", "version": 0, "group": 2,
+                    "loss": 1.0}])
+    assert not c.observe(single)               # one merge: no evidence yet
+
+
+def test_policy_adjustment_merge_and_truthiness():
+    noop = PolicyAdjustment()
+    assert not noop
+    a = PolicyAdjustment(max_inflight=2, note="a")
+    b = PolicyAdjustment(buffer_k=3, note="b")
+    ab = a.merged(b)
+    assert (ab.max_inflight, ab.buffer_k, ab.note) == (2, 3, "a; b")
+    assert ab and noop.merged(noop).note == ""
+
+
+def test_schedule_index_override_group():
+    rounds = FedPartSchedule(num_groups=3, warmup_rounds=1, rounds_per_layer=1,
+                             cycles=1).rounds()
+    idx = ScheduleIndex.from_rounds(rounds)
+    spec = idx.override_group(2, 0)
+    assert idx.for_version(2) is spec
+    assert (spec.group, spec.index, spec.phase) == (0, 2, "partial")
+    assert idx.for_version(1) == rounds[1]          # others untouched
+    # overrides never perturb index identity semantics (excluded from eq)
+    assert idx == ScheduleIndex.from_rounds(rounds)
+    # re-pinning a full round keeps the base phase
+    fnu = idx.override_group(0, -1)
+    assert fnu.phase == "warmup" and fnu.group == -1
 
 
 # -- policy unit semantics --------------------------------------------------

@@ -3,7 +3,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core.partition import build_partition
-from repro.core.telemetry import StepSizeTracker, estimate_k, update_step_size
+from repro.core.telemetry import (StepSizeTracker, Timeline, estimate_k,
+                                  update_step_size)
 from tests.conftest import small_params
 
 
@@ -28,6 +29,131 @@ def test_tracker_spike_detection():
         prev = new
     spike = t.post_aggregation_spike(window=3)
     assert spike == pytest.approx(5.0, rel=0.01)
+
+
+# -- Timeline windows (the controller's observation API, docs/CONTROL.md) ---
+
+
+def _synthetic_timeline() -> Timeline:
+    """Two merges with a straggling second cohort — every reducer below is
+    hand-computable from these numbers."""
+    tl = Timeline()
+    tl.record(0.0, "dispatch", version=0, group=0, clients=[0, 1], t_end=4.0)
+    tl.record(1.0, "dispatch", version=0, group=0, clients=[2], t_end=3.0)
+    tl.record(2.0, "complete", client=0, staleness=0, comm_bytes=10,
+              comp_flops=5.0)
+    tl.record(2.0, "merge", version=0, group=0, loss=2.0)
+    tl.record(3.0, "complete", client=2, staleness=1, comm_bytes=10,
+              comp_flops=5.0)
+    tl.record(4.0, "complete", client=1, staleness=1, comm_bytes=10,
+              comp_flops=5.0)
+    tl.record(4.0, "drop", client=3, comp_flops=5.0)
+    tl.record(4.0, "merge", version=1, group=1, loss=1.0)
+    tl.record(4.0, "eval", version=1, acc=0.5)
+    return tl
+
+
+def test_window_spans_last_merges_and_clamps():
+    tl = _synthetic_timeline()
+    w1 = tl.window(1)
+    # boundary = merge v0 at t=2; window = everything after it
+    assert (w1.t_start, w1.t_end) == (2.0, 4.0)
+    assert w1.duration == 2.0 and w1.merges == 1
+    assert len(w1.of_kind("complete")) == 2
+    assert len(w1.of_kind("eval")) == 1      # trailing eval included
+    # spanning more merges than exist clamps to the start of the run
+    w9 = tl.window(9)
+    assert (w9.t_start, w9.t_end) == (0.0, 4.0)
+    assert w9.merges == 2 and len(w9.events) == len(tl.events)
+    with pytest.raises(ValueError):
+        tl.window(0)
+
+
+def test_window_empty_and_single_merge_edges():
+    empty = Timeline().window()
+    assert (empty.t_start, empty.t_end, empty.duration) == (0.0, 0.0, 0.0)
+    assert empty.events == [] and empty.merges == 0
+    assert empty.staleness_moments() == (0.0, 0.0)
+    assert empty.discounted_mix(1.0) == 1.0   # nothing delivered: neutral
+    assert empty.effective_participation(4) == 0.0
+    assert empty.span_seconds() == 0.0 and empty.overlap_seconds() == 0.0
+    assert empty.group_progress() == {}
+    single = Timeline()
+    single.record(0.0, "dispatch", version=0, group=0, clients=[0], t_end=1.5)
+    single.record(1.5, "complete", client=0, staleness=0, comm_bytes=4,
+                  comp_flops=2.0)
+    single.record(1.5, "merge", version=0, group=0, loss=3.0)
+    w = single.window(4)
+    assert (w.t_start, w.t_end) == (0.0, 1.5)
+    assert w.staleness_moments() == (0.0, 0.0)
+    assert w.effective_participation(2) == 0.5
+    assert w.group_progress() == {0: 0.0}     # one merge: no delta yet
+
+
+def test_window_staleness_moments_hand_computed():
+    w = _synthetic_timeline().window(1)
+    # completes in window: staleness 1 and 1 -> E[s]=1, E[s^2]=1
+    assert w.staleness_moments() == (1.0, 1.0)
+    full = _synthetic_timeline().window(2)
+    # staleness 0, 1, 1 -> E[s]=2/3, E[s^2]=2/3
+    m1, m2 = full.staleness_moments()
+    assert m1 == pytest.approx(2 / 3) and m2 == pytest.approx(2 / 3)
+    # discounted mix at a=1: mean(1, 1/2, 1/2) = 2/3
+    assert full.discounted_mix(1.0) == pytest.approx(2 / 3)
+    assert full.discounted_mix(0.0) == 1.0
+
+
+def test_window_effective_participation_hand_computed():
+    tl = _synthetic_timeline()
+    # whole run: clients {0, 1, 2} delivered, client 3 only dropped
+    assert tl.window(2).effective_participation(8) == pytest.approx(3 / 8)
+    # last-merge window: clients {1, 2}
+    assert tl.window(1).effective_participation(8) == pytest.approx(2 / 8)
+    with pytest.raises(ValueError):
+        tl.window(1).effective_participation(0)
+
+
+def test_window_span_and_overlap_hand_computed():
+    tl = _synthetic_timeline()
+    full = tl.window(2)
+    # spans [0,4] and [1,3]: 4 + 2 flight seconds, overlap [1,3] = 2
+    assert full.span_seconds() == pytest.approx(6.0)
+    assert full.overlap_seconds() == pytest.approx(2.0)
+    # last-merge window [2,4]: both cohorts dispatched before it -> excluded
+    assert tl.window(1).span_seconds() == 0.0
+    # dispatches inside the window are clipped to its end
+    tl2 = Timeline()
+    tl2.record(0.0, "merge", version=0, group=0, loss=2.0)
+    tl2.record(1.0, "dispatch", version=1, group=0, clients=[0], t_end=9.0)
+    tl2.record(3.0, "merge", version=1, group=0, loss=1.0)
+    assert tl2.window(1).span_seconds() == pytest.approx(2.0)  # [1,3] only
+
+
+def test_window_group_progress_hand_computed():
+    tl = Timeline()
+    tl.record(1.0, "merge", version=0, group=0, loss=2.0)
+    tl.record(2.0, "merge", version=1, group=0, loss=1.4)
+    tl.record(3.0, "merge", version=2, group=-1, loss=1.3)
+    tl.record(4.0, "merge", version=3, group=0, loss=1.0)
+    w = tl.window(4)
+    prog = w.group_progress()
+    assert prog[0] == pytest.approx(1.0)      # 2.0 -> 1.0 across the window
+    assert prog[-1] == 0.0                    # single FNU merge: no delta
+    # a narrower window only sees the recent merges
+    assert tl.window(2).group_progress() == {-1: 0.0, 0: 0.0}
+
+
+def test_telemetry_doctests_run():
+    """The Timeline/TimelineWindow docstrings double as unit specs; make
+    sure every example actually runs (pytest.ini doesn't collect doctests
+    globally, so exercise them here — same pattern as test_schedule.py)."""
+    import doctest
+
+    import repro.core.telemetry as m
+
+    res = doctest.testmod(m)
+    assert res.attempted > 0
+    assert res.failed == 0
 
 
 def test_estimate_k_lower_bound():
