@@ -24,6 +24,13 @@ runtime's levers against a heterogeneous, jittery fleet:
   machine-independent) that the CI bench lane gates on: adaptive must not
   reach the threshold later than static.
 
+* **trace-driven participation** — the same A/B on a *skewed diurnal
+  availability trace* (wide per-client duty-cycle spread,
+  ``participation_sampling="biased"`` + inverse-probability debiased
+  merges, docs/ASYNC.md), with the participation controller off vs on
+  (``controller_participation_target``).  Same clipped-tta ratio row,
+  same CI gate.
+
 plus the sync-barrier oracle as the reference row.  Each cell reports final
 and best accuracy, *virtual* total time, time-to-accuracy at the threshold,
 and the max staleness actually observed — the trade the async literature
@@ -136,9 +143,26 @@ def bench(clients=8, samples_per_client=32, rounds=12, threshold=0.4,
     configs.append(("ab_adaptive", dict(ab_base, controller="adaptive",
                                         controller_inflight_bounds=(1, 4))))
 
+    # Trace-driven participation A/B (docs/ASYNC.md): the same fleet behind
+    # a skewed diurnal availability trace, cohorts selected biased-by-
+    # availability with inverse-probability debiased merges, with the
+    # participation controller off vs on.  trace_period=2.0 puts several
+    # on/off cycles inside the run's virtual span at this scale.
+    trace_fleet = AvailabilityConfig(
+        speed_spread=speed_spread, latency_jitter=0.2, seed=7,
+        trace="diurnal", trace_period=2.0, duty_cycle=(0.25, 0.9))
+    tr_base = dict(runtime="async", async_policy="fedbuff", buffer_k=0,
+                   staleness_exponent=0.5, sample_fraction=0.25,
+                   participation_sampling="biased", availability=trace_fleet)
+    configs.append(("trace_static", dict(tr_base)))
+    configs.append(("trace_adaptive", dict(
+        tr_base, controller="adaptive",
+        controller_participation_target=0.5,
+        controller_cohort_bounds=(1, max(2, clients // 2)))))
+
     rows, inflight_walls, ab_tta = [], {}, {}
     for name, kw in configs:
-        cfg = FLRunConfig(**base, **kw)
+        cfg = FLRunConfig(**{**base, **kw})
         # The inflight rows feed the CI regression gate, so their host
         # wall-clock is measured as the min over ``inflight_reps`` runs (the
         # virtual-time results are seed-deterministic and identical across
@@ -178,6 +202,8 @@ def bench(clients=8, samples_per_client=32, rounds=12, threshold=0.4,
             "policy": kw["async_policy"],
             "max_inflight": mi,
             "controller": kw.get("controller", "static"),
+            "participation_sampling": kw.get("participation_sampling",
+                                             "blind"),
             "wall_seconds": wall,
             "clients_trained": trained,
             "devices_used": ndev,
@@ -185,7 +211,7 @@ def bench(clients=8, samples_per_client=32, rounds=12, threshold=0.4,
             "virtual_overlap_seconds": tl.overlap_seconds(),
         }
         rows.append(row)
-        if name.startswith("ab_"):
+        if name.startswith(("ab_", "trace_")):
             # Clipped tta: a run that never reaches the threshold counts as
             # its full virtual span, so the ratio below stays finite and
             # still rewards finishing the same rounds in less virtual time.
@@ -235,6 +261,25 @@ def bench(clients=8, samples_per_client=32, rounds=12, threshold=0.4,
         if verbose:
             print(f"[adaptive tta ratio  ] {ratio:.2f}x virtual "
                   f"time-to-accuracy vs static control")
+
+    # Trace-participation gate: same clipped-tta ratio on the skewed diurnal
+    # trace — the participation controller must not slow the run down.
+    if {"trace_static", "trace_adaptive"} <= ab_tta.keys():
+        ratio = ab_tta["trace_static"] / max(ab_tta["trace_adaptive"], 1e-9)
+        rows.append({
+            "name": f"async_trace_adaptive_tta_ratio_c{clients}",
+            "us_per_call": 0.0,
+            "derived": (f"{ratio:.2f}x virtual tta vs static participation "
+                        f"(static={ab_tta['trace_static']:.2f}s "
+                        f"adaptive={ab_tta['trace_adaptive']:.2f}s)"),
+            "speedup": ratio,
+            "controller": "adaptive",
+            "participation_sampling": "biased",
+            "trace": "diurnal",
+        })
+        if verbose:
+            print(f"[trace tta ratio     ] {ratio:.2f}x virtual "
+                  f"time-to-accuracy vs static participation control")
     return rows
 
 

@@ -63,6 +63,35 @@ def _normalized_weights(num: int, weights: Sequence[float] | None) -> list[float
     return [float(x) / total for x in weights]
 
 
+def debias_weights(weights: np.ndarray,
+                   inclusion_probs: np.ndarray) -> np.ndarray:
+    """Horvitz–Thompson debiasing: divide each client's aggregation weight
+    by its inclusion probability, so availability-biased cohort selection
+    (docs/ASYNC.md) leaves the *expected* global objective unbiased — a
+    rarely-on client counts more when it does land.
+
+    With every probability exactly 1.0 (uniform availability, or the blind
+    sampler's default) the input array is returned unchanged — today's
+    uniform weights bit-for-bit, the degenerate contract the async
+    equivalence tests pin.
+
+    >>> debias_weights(np.array([2.0, 4.0]), np.array([1.0, 1.0]))
+    array([2., 4.])
+    >>> debias_weights(np.array([2.0, 4.0]), np.array([0.5, 1.0]))
+    array([4., 4.])
+    """
+    probs = np.asarray(inclusion_probs, dtype=np.float64)
+    if probs.shape != np.shape(weights):
+        raise ValueError(f"{probs.shape} inclusion probs for "
+                         f"{np.shape(weights)} weights")
+    if ((probs <= 0.0) | (probs > 1.0)).any():
+        raise ValueError("inclusion probabilities must lie in (0, 1]")
+    if (probs == 1.0).all():
+        return weights
+    return (np.asarray(weights, dtype=np.float64) / probs).astype(
+        np.asarray(weights).dtype)
+
+
 def tree_mean(trees: Sequence[PyTree], weights: Sequence[float] | None = None) -> PyTree:
     """Weighted elementwise mean of same-structure pytrees."""
     w = _normalized_weights(len(trees), weights)

@@ -299,10 +299,19 @@ class PlanAssigner:
     def capacity_of(self, client_id: int) -> float:
         return self.capacity_tiers[self.tier_of(client_id)]
 
-    def prefix_len(self, client_id: int) -> int:
-        """Groups a client can hold: ``ceil(capacity * M)``, at least 1."""
+    def prefix_len(self, client_id: int, boost: int = 0) -> int:
+        """Groups a client can hold: ``ceil(capacity * M)``, at least 1.
+
+        ``boost`` extends the prefix by that many extra groups (clamped to
+        ``M``) — the PlanAssignmentController's actuator (docs/CONTROL.md):
+        a positive boost recruits every tier for deeper groups than its
+        capacity alone would assign.  0 (the default, and every static run)
+        is the capacity-honest assignment, bit-for-bit."""
         c = self.capacity_of(client_id)
-        return max(1, min(self.num_groups, int(np.ceil(c * self.num_groups))))
+        base = max(1, min(self.num_groups, int(np.ceil(c * self.num_groups))))
+        if boost:
+            base = max(1, min(self.num_groups, base + int(boost)))
+        return base
 
     # -- plan construction --------------------------------------------------
 
@@ -310,17 +319,19 @@ class PlanAssigner:
         """The homogeneous round mask: all groups on FNU, one-hot otherwise."""
         return round_base_mask(spec, self.num_groups)
 
-    def assign(self, spec: RoundSpec,
-               client_ids: Sequence[int]) -> np.ndarray | None:
+    def assign(self, spec: RoundSpec, client_ids: Sequence[int],
+               boost: int = 0) -> np.ndarray | None:
         """Per-client plan for ``spec``: ``(len(client_ids), num_groups)``
         bool bitmask, or ``None`` for the homogeneous kind (consumers keep
-        their legacy single-group path, bit-for-bit)."""
+        their legacy single-group path, bit-for-bit).  ``boost`` extends
+        every client's prefix/subset size by that many groups (see
+        ``prefix_len``; 0 = capacity-honest, the static default)."""
         if self.kind == "homogeneous":
             return None
         plan = np.zeros((len(client_ids), self.num_groups), dtype=bool)
         if self.kind == "nested":
             for i, ci in enumerate(client_ids):
-                pre = self.prefix_len(ci)
+                pre = self.prefix_len(ci, boost)
                 if spec.is_full:
                     plan[i, :pre] = True
                 else:
@@ -329,7 +340,7 @@ class PlanAssigner:
         # "random": one deterministic stream per (seed, round, client) so a
         # client's draw is independent of cohort composition and engine.
         for i, ci in enumerate(client_ids):
-            k = self.prefix_len(ci)
+            k = self.prefix_len(ci, boost)
             rng = np.random.default_rng(
                 (self.seed, int(spec.index), int(ci)))
             plan[i, rng.choice(self.num_groups, size=k, replace=False)] = True

@@ -101,6 +101,9 @@ class Timeline:
     * ``"eval"`` — ``{"version", "acc"}`` on the eval cadence.
     * ``"control"`` — a server controller's knob adjustment
       (docs/CONTROL.md), recorded at the merge that triggered it.
+    * ``"wait"`` — ``{"until", "rejected"}``: every sampled candidate was
+      unavailable, so the server booked a deterministic retry at ``until``
+      instead of training anyone (docs/ASYNC.md).
 
     >>> tl = Timeline()
     >>> tl.record(0.5, "eval", version=0, acc=0.25)
@@ -288,14 +291,82 @@ class TimelineWindow:
             return 1.0
         return float(np.mean([(1.0 + x) ** (-exponent) for x in s]))
 
-    def effective_participation(self, num_clients: int) -> float:
+    def effective_participation(self, num_clients: int, *,
+                                inverse_probability: bool = False) -> float:
         """Fraction of the fleet that *delivered* an update inside the
         window — distinct completing clients over ``num_clients`` (the
-        effective-participation rate of Sen et al.).  Drops don't count."""
+        effective-participation rate of Sen et al.).  Drops don't count.
+
+        With ``inverse_probability=True`` each distinct client counts
+        ``1 / inclusion_prob`` (its complete events' recorded inclusion
+        probability, 1.0 when absent) — the Horvitz–Thompson estimate of
+        the fleet coverage an availability-*biased* cohort sampler is
+        achieving (docs/ASYNC.md): a delivered low-duty client stands in
+        for the rarely-on slice of the fleet it was sampled from.  Clipped
+        to 1.0; identical to the plain rate when every prob is 1.0.
+
+        >>> w = TimelineWindow(0.0, 1.0, [
+        ...     {"t": 0.5, "kind": "complete", "client": 0,
+        ...      "inclusion_prob": 0.25},
+        ...     {"t": 1.0, "kind": "complete", "client": 1,
+        ...      "inclusion_prob": 1.0},
+        ... ])
+        >>> w.effective_participation(8)
+        0.25
+        >>> w.effective_participation(8, inverse_probability=True)
+        0.625
+        """
         if num_clients < 1:
             raise ValueError(f"num_clients must be >= 1, got {num_clients}")
-        seen = {e["client"] for e in self.of_kind("complete")}
-        return len(seen) / num_clients
+        seen: dict[int, float] = {}
+        for e in self.of_kind("complete"):
+            seen[e["client"]] = float(e.get("inclusion_prob", 1.0))
+        if not inverse_probability:
+            return len(seen) / num_clients
+        est = sum(1.0 / max(p, 1.0 / num_clients) for p in seen.values())
+        return min(est / num_clients, 1.0)
+
+    def inclusion_moments(self) -> tuple[float, float]:
+        """``(mean, min)`` of the inclusion probabilities recorded on the
+        window's deliveries (``(1.0, 1.0)`` when nothing was delivered or
+        nothing recorded one) — how skewed the arrivals the merge had to
+        debias actually were.
+
+        >>> TimelineWindow(0.0, 0.0, []).inclusion_moments()
+        (1.0, 1.0)
+        """
+        probs = [float(e.get("inclusion_prob", 1.0))
+                 for e in self.of_kind("complete")]
+        if not probs:
+            return (1.0, 1.0)
+        return (float(np.mean(probs)), float(min(probs)))
+
+    def tier_participation(self, num_tiers: int) -> list[float]:
+        """Per capacity tier, the share of the window's deliveries that
+        came from that tier (``tier`` on complete events; falls back to
+        ``client % num_tiers``, the ``PlanAssigner.tier_of`` convention).
+        All zeros when nothing was delivered — the plan-assignment
+        controller's per-tier coverage signal.
+
+        >>> w = TimelineWindow(0.0, 1.0, [
+        ...     {"t": 0.5, "kind": "complete", "client": 0, "tier": 0},
+        ...     {"t": 0.7, "kind": "complete", "client": 1, "tier": 1},
+        ...     {"t": 1.0, "kind": "complete", "client": 2, "tier": 0},
+        ... ])
+        >>> w.tier_participation(2)
+        [0.6666666666666666, 0.3333333333333333]
+        """
+        if num_tiers < 1:
+            raise ValueError(f"num_tiers must be >= 1, got {num_tiers}")
+        counts = [0] * num_tiers
+        total = 0
+        for e in self.of_kind("complete"):
+            tier = int(e.get("tier", int(e.get("client", 0)) % num_tiers))
+            counts[tier % num_tiers] += 1
+            total += 1
+        if total == 0:
+            return [0.0] * num_tiers
+        return [c / total for c in counts]
 
     def _spans(self) -> list[tuple[float, float]]:
         """Cohort spans dispatched inside the window, clipped to it."""

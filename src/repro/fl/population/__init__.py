@@ -17,6 +17,7 @@ from repro.fl.population.sampling import (  # noqa: F401
     resolve_cohort_size,
     sample_excluding,
     sample_without_replacement,
+    weighted_sample_without_replacement,
 )
 from repro.fl.population.store import ClientStateStore  # noqa: F401
 from repro.fl.population.synthetic import SyntheticPopulation  # noqa: F401

@@ -119,6 +119,48 @@ def sample_excluding(rng: np.random.Generator, n: int, k: int,
     return [_nth_absent(r, excluded) for r in ranks]
 
 
+def weighted_sample_without_replacement(
+        rng: np.random.Generator, ids: Sequence[int],
+        weights: Sequence[float], k: int) -> list[int]:
+    """Weighted k-subset of ``ids`` without replacement, O(|ids|).
+
+    Efraimidis–Spirakis exponential keys: draw one uniform vector, key each
+    candidate by ``u ** (1/w)``, keep the ``k`` largest — equivalent to
+    sequential weighted sampling without replacement.  Zero-weight
+    candidates are never selected; with all weights equal this is a uniform
+    k-subset (a *different* uniform draw than Floyd's — the biased cohort
+    sampler's stream, docs/ASYNC.md).  Consumes exactly one ``rng.random``
+    vector of ``len(ids)``, so runs replay deterministically per stream.
+
+    >>> r = np.random.default_rng(0)
+    >>> picks = weighted_sample_without_replacement(
+    ...     r, [3, 7, 9], [1.0, 0.0, 1.0], 2)
+    >>> sorted(picks)
+    [3, 9]
+    """
+    ids = [int(i) for i in ids]
+    w = np.asarray(list(weights), dtype=np.float64)
+    if w.shape != (len(ids),):
+        raise ValueError(f"need one weight per id, got {w.shape} weights "
+                         f"for {len(ids)} ids")
+    if (w < 0.0).any():
+        raise ValueError("weights must be >= 0")
+    eligible = int((w > 0.0).sum())
+    if not 0 <= k <= eligible:
+        raise ValueError(f"need 0 <= k <= {eligible} positive-weight ids, "
+                         f"got k={k}")
+    if k == 0:
+        return []
+    u = rng.random(len(ids))
+    keys = np.full(len(ids), -np.inf)
+    pos = w > 0.0
+    # log-space keys (log(u)/w) are monotone in u**(1/w) and never underflow
+    with np.errstate(divide="ignore"):
+        keys[pos] = np.log(u[pos]) / w[pos]
+    order = np.argsort(-keys, kind="stable")
+    return [ids[i] for i in order[:k]]
+
+
 class IncrementalSampler:
     """Stateful without-replacement sampler over ``range(n)`` minus a busy
     set: repeated ``draw(k)`` calls never repeat an id (previously drawn ids

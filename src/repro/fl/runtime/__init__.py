@@ -1,7 +1,10 @@
 from repro.fl.runtime.clients import AvailabilityConfig, ClientAvailability  # noqa: F401
 from repro.fl.runtime.control import (CONTROLLERS,  # noqa: F401
                                       AdaptiveInflightController,
-                                      CompositeController, PolicyAdjustment,
+                                      CompositeController,
+                                      ParticipationController,
+                                      PlanAssignmentController,
+                                      PolicyAdjustment,
                                       ProgressGroupController,
                                       ServerController,
                                       StalenessBufferController,

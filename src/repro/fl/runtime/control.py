@@ -11,9 +11,11 @@ The seam is deliberately small:
 
 * a :class:`ServerController` observes a merge-aligned
   ``core.telemetry.TimelineWindow`` **between merges** and returns a
-  :class:`PolicyAdjustment` — the only three actuators are the in-flight
-  cohort target, the FedBuff merge goal K, and a layer-group override for
-  the *next* server version (``core.schedule.ScheduleIndex.override_group``);
+  :class:`PolicyAdjustment` — the actuators are the in-flight cohort
+  target, the FedBuff merge goal K, a layer-group override for the *next*
+  server version (``core.schedule.ScheduleIndex.override_group``), the
+  dispatch cohort size, and the plan-prefix boost
+  (``PlanAssigner.assign(boost=...)``);
 * ``runtime/engine.py`` applies the adjustment right after the version bump
   and before the post-merge dispatch, and books a ``"control"`` timeline
   event so every decision is auditable;
@@ -42,6 +44,19 @@ Three concrete controllers compose into the ``"adaptive"`` bundle:
   repeats), instead of marching the fixed FedPart cycle; FNU rounds always
   follow the schedule.  Composes with per-client plans: the override
   changes the ``RoundSpec`` that ``PlanAssigner.assign`` sees, nothing else.
+
+Two more join the bundle when their knobs are set (the participation axis,
+ROADMAP item 4 — docs/CONTROL.md):
+
+* :class:`ParticipationController`
+  (``controller_participation_target > 0``) — holds a windowed
+  effective-participation target by moving the dispatch cohort size within
+  ``controller_cohort_bounds``; under biased cohort selection it tracks the
+  inverse-inclusion-probability estimate, i.e. *debiased* coverage.
+* :class:`PlanAssignmentController` (``controller_plan_boost_max > 0``,
+  non-homogeneous plans) — grows every capacity tier's plan prefix by a
+  bounded boost while deep layer groups show stalled windowed
+  ``group_progress``, and decays it once they recover.
 """
 
 from __future__ import annotations
@@ -49,6 +64,7 @@ from __future__ import annotations
 import dataclasses
 from typing import TYPE_CHECKING, Protocol, Sequence
 
+from repro.core.schedule import PlanAssigner
 from repro.core.telemetry import TimelineWindow
 
 if TYPE_CHECKING:  # engine.py owns the FLRunConfig import cycle
@@ -63,16 +79,24 @@ class PolicyAdjustment:
 
     ``group_override`` targets the *next* server version (the one the
     triggering merge just advanced to); the engine clamps/validates and
-    applies it through ``ScheduleIndex.override_group``."""
+    applies it through ``ScheduleIndex.override_group``.  ``cohort_size``
+    re-targets the dispatch cohort (clamped to
+    ``controller_cohort_bounds``); ``plan_boost`` extends every capacity
+    tier's plan prefix by that many extra groups (clamped to
+    ``[0, controller_plan_boost_max]``, ``PlanAssigner.assign``)."""
 
     max_inflight: int | None = None
     buffer_k: int | None = None
     group_override: int | None = None
+    cohort_size: int | None = None
+    plan_boost: int | None = None
     note: str = ""
 
     def __bool__(self) -> bool:
         return (self.max_inflight is not None or self.buffer_k is not None
-                or self.group_override is not None)
+                or self.group_override is not None
+                or self.cohort_size is not None
+                or self.plan_boost is not None)
 
     def merged(self, other: "PolicyAdjustment") -> "PolicyAdjustment":
         """Right-biased field-wise merge (later controllers win)."""
@@ -84,6 +108,10 @@ class PolicyAdjustment:
             group_override=(other.group_override
                             if other.group_override is not None
                             else self.group_override),
+            cohort_size=(other.cohort_size if other.cohort_size is not None
+                         else self.cohort_size),
+            plan_boost=(other.plan_boost if other.plan_boost is not None
+                        else self.plan_boost),
             note="; ".join(n for n in (self.note, other.note) if n),
         )
 
@@ -224,6 +252,121 @@ class ProgressGroupController:
 
 
 @dataclasses.dataclass
+class ParticipationController:
+    """Hold a windowed ``effective_participation`` target by moving the
+    dispatch cohort size within bounds — the adaptive *participation rate*
+    knob (ROADMAP item 4).
+
+    ``TimelineWindow.effective_participation`` is the fraction of the fleet
+    that delivered inside the window (Sen et al.'s effective-participation
+    rate); under biased cohort selection (``debiased=True``) the
+    inverse-inclusion-probability estimate is used instead, so the target
+    tracks the *debiased* coverage of the objective rather than raw
+    arrivals.  Below ``target`` (with ``slack`` deadband) the cohort grows
+    by a quarter step; above it shrinks — larger cohorts raise coverage at
+    the price of per-merge staleness, which the buffer/inflight controllers
+    then rebalance.  One step per observation, clamped to ``bounds``;
+    silent while nothing has been delivered."""
+
+    target: float
+    bounds: tuple[int, int]
+    current: int
+    num_clients: int
+    debiased: bool = False
+    slack: float = 0.1
+
+    def __post_init__(self):
+        lo, hi = self.bounds
+        if not (1 <= lo <= hi):
+            raise ValueError(f"cohort bounds must satisfy 1 <= lo <= hi, "
+                             f"got {self.bounds}")
+        if not 0.0 < self.target <= 1.0:
+            raise ValueError(f"participation target must be in (0, 1], "
+                             f"got {self.target}")
+        if self.num_clients < 1:
+            raise ValueError(f"num_clients must be >= 1, "
+                             f"got {self.num_clients}")
+        self.current = min(max(self.current, lo), hi)
+
+    def observe(self, window: TimelineWindow) -> PolicyAdjustment:
+        if not window.of_kind("complete"):
+            return PolicyAdjustment()
+        lo, hi = self.bounds
+        ep = window.effective_participation(
+            self.num_clients, inverse_probability=self.debiased)
+        step = max(1, self.current // 4)
+        if ep < self.target * (1.0 - self.slack) and self.current < hi:
+            self.current = min(self.current + step, hi)
+            return PolicyAdjustment(
+                cohort_size=self.current,
+                note=f"cohort->{self.current} (ep={ep:.2f})")
+        if ep > self.target * (1.0 + self.slack) and self.current > lo:
+            self.current = max(self.current - step, lo)
+            return PolicyAdjustment(
+                cohort_size=self.current,
+                note=f"cohort->{self.current} (ep={ep:.2f})")
+        return PolicyAdjustment()
+
+
+@dataclasses.dataclass
+class PlanAssignmentController:
+    """Shift capacity-tier plan assignment toward stalled layer groups —
+    the adaptive *plan assignment* knob (ROADMAP item 4).
+
+    Under a nested/random plan, a tier of capacity ``c`` trains only its
+    ``ceil(c*M)``-group prefix, so deep groups see updates from capable
+    tiers only.  When the window shows a deep group stalled — merged >= 2
+    times with ``group_progress <= min_delta`` while sitting beyond the
+    weakest tier's base prefix (``>= min_prefix``, i.e. coverage-limited) —
+    the boost grows by one: every tier's prefix extends by one extra group
+    (``PlanAssigner.assign(boost=...)``), recruiting more trainers for the
+    deep end.  The boost decays back toward 0 once no group is stalled, so
+    the fleet returns to its capacity-honest assignment.  Bounded by
+    ``max_boost``; observes per-tier delivery shares
+    (``TimelineWindow.tier_participation``) purely for its audit note."""
+
+    num_tiers: int
+    min_prefix: int
+    max_boost: int
+    min_delta: float = 0.0
+    current: int = 0
+
+    def __post_init__(self):
+        if self.num_tiers < 1:
+            raise ValueError(f"num_tiers must be >= 1, got {self.num_tiers}")
+        if self.max_boost < 0:
+            raise ValueError(f"max_boost must be >= 0, got {self.max_boost}")
+        self.current = min(max(self.current, 0), self.max_boost)
+
+    def observe(self, window: TimelineWindow) -> PolicyAdjustment:
+        if self.max_boost <= 0:
+            return PolicyAdjustment()
+        counts: dict[int, int] = {}
+        for e in window.of_kind("merge"):
+            g = int(e.get("group", -1))
+            counts[g] = counts.get(g, 0) + 1
+        progress = window.group_progress()
+        stalled = [g for g, delta in progress.items()
+                   if g >= 0 and counts.get(g, 0) >= 2
+                   and delta <= self.min_delta]
+        deep = [g for g in stalled if g >= self.min_prefix]
+        if deep and self.current < self.max_boost:
+            self.current += 1
+            shares = window.tier_participation(self.num_tiers)
+            return PolicyAdjustment(
+                plan_boost=self.current,
+                note=f"plan_boost->{self.current} (stalled "
+                     f"{sorted(deep)}, tiers "
+                     f"{[round(s, 2) for s in shares]})")
+        if not stalled and self.current > 0:
+            self.current -= 1
+            return PolicyAdjustment(
+                plan_boost=self.current,
+                note=f"plan_boost->{self.current} (recovered)")
+        return PolicyAdjustment()
+
+
+@dataclasses.dataclass
 class CompositeController:
     """Run sub-controllers in order; their (disjoint) adjustments merge."""
 
@@ -236,12 +379,23 @@ class CompositeController:
         return adj
 
 
-def make_controller(run_cfg: "FLRunConfig") -> ServerController | None:
+def make_controller(run_cfg: "FLRunConfig", *, num_clients: int = 0,
+                    num_groups: int = 0,
+                    cohort_size: int = 0) -> ServerController | None:
     """Build the configured controller, or ``None`` for ``"static"``.
 
     ``None`` is the structural-absence contract: the engine installs no
     observation hook at all, so the default config cannot perturb the
-    static trajectories (pinned in tests/test_async_runtime.py)."""
+    static trajectories (pinned in tests/test_async_runtime.py).
+
+    The adaptive bundle always carries the three PR-9 controllers; the two
+    participation knobs join only when their configs turn them on:
+    :class:`ParticipationController` with
+    ``controller_participation_target > 0`` (needs ``num_clients``, which
+    the engine passes), :class:`PlanAssignmentController` with
+    ``controller_plan_boost_max > 0`` under a non-homogeneous plan (needs
+    ``num_groups``).  ``cohort_size`` seeds the participation controller's
+    starting point (the engine passes its resolved dispatch target)."""
     if run_cfg.controller == "static":
         return None
     if run_cfg.controller != "adaptive":
@@ -253,7 +407,7 @@ def make_controller(run_cfg: "FLRunConfig") -> ServerController | None:
     inflight_lo, inflight_hi = run_cfg.controller_inflight_bounds
     start = min(max(run_cfg.max_inflight_cohorts, inflight_lo), inflight_hi)
     buf_lo, buf_hi = run_cfg.controller_buffer_bounds
-    return CompositeController(parts=(
+    parts: list[ServerController] = [
         AdaptiveInflightController(
             bounds=(inflight_lo, inflight_hi), current=start),
         StalenessBufferController(
@@ -262,4 +416,27 @@ def make_controller(run_cfg: "FLRunConfig") -> ServerController | None:
             current=run_cfg.buffer_k if run_cfg.buffer_k > 0 else buf_lo,
             mix_floor=run_cfg.controller_mix_floor),
         ProgressGroupController(max_repeats=run_cfg.controller_max_repeats),
-    ))
+    ]
+    if run_cfg.controller_participation_target > 0.0:
+        if num_clients < 1:
+            raise ValueError(
+                "controller_participation_target > 0 needs num_clients — "
+                "the engine passes the fleet size")
+        c_lo, c_hi = run_cfg.controller_cohort_bounds
+        parts.append(ParticipationController(
+            target=run_cfg.controller_participation_target,
+            bounds=(c_lo, c_hi),
+            current=cohort_size if cohort_size > 0 else c_lo,
+            num_clients=num_clients,
+            debiased=run_cfg.participation_sampling == "biased"))
+    if (run_cfg.controller_plan_boost_max > 0
+            and run_cfg.plan != "homogeneous" and num_groups >= 1):
+        assigner = PlanAssigner(
+            num_groups=num_groups, kind=run_cfg.plan,
+            capacity_tiers=tuple(run_cfg.capacity_tiers), seed=run_cfg.seed)
+        min_prefix = min(assigner.prefix_len(ci)
+                         for ci in range(len(assigner.capacity_tiers)))
+        parts.append(PlanAssignmentController(
+            num_tiers=len(assigner.capacity_tiers), min_prefix=min_prefix,
+            max_boost=run_cfg.controller_plan_boost_max))
+    return CompositeController(parts=tuple(parts))

@@ -107,7 +107,8 @@ from repro.fl.batched import make_engine, resolve_plan
 from repro.fl.client import LocalTrainer
 from repro.fl.population import (ClientPopulation, IncrementalSampler,
                                  as_population, client_round_seed,
-                                 resolve_cohort_size)
+                                 resolve_cohort_size,
+                                 weighted_sample_without_replacement)
 from repro.fl.runtime.clients import ClientAvailability
 from repro.fl.runtime.control import make_controller
 from repro.fl.runtime.policy import ClientUpdate, make_policy
@@ -255,13 +256,24 @@ def run_federated_async(
 
     # -- host-parallel dispatch state ---------------------------------------
     max_inflight = run_cfg.max_inflight_cohorts
+    # Controller-adjustable dispatch knobs (docs/CONTROL.md): the cohort
+    # target the participation controller moves within
+    # ``controller_cohort_bounds``, and the plan-prefix boost the plan
+    # controller hands to ``PlanAssigner.assign``.  Static runs never touch
+    # either, so the resolved values are the legacy constants bit-for-bit.
+    cohort_target = resolve_cohort_size(n_clients, run_cfg.sample_fraction,
+                                        run_cfg.cohort_size)
+    plan_boost = 0
+    num_tiers = len(assigner.capacity_tiers)
     # Server control loop (docs/CONTROL.md): None under the default
     # controller="static" — structurally absent, so the static hot path has
     # no observation hook at all.  Adaptive runs may grow the in-flight
     # target later, so the submesh pool is carved for the controller's upper
     # bound up front (dispatches beyond the current target never happen; the
     # pool only bounds where launched cohorts can land).
-    controller = make_controller(run_cfg)
+    controller = make_controller(run_cfg, num_clients=n_clients,
+                                 num_groups=partition.num_groups,
+                                 cohort_size=cohort_target)
     pool_cap = (max(max_inflight, run_cfg.controller_inflight_bounds[1])
                 if controller is not None else max_inflight)
     pool = engine.cohort_pool(pool_cap)
@@ -277,6 +289,8 @@ def run_federated_async(
     events: list[tuple] = []         # min-heap of (t, seq, kind, upd, cohort)
     seq = itertools.count()          # FIFO tiebreak for simultaneous events
     busy: set[int] = set()
+    retry_pending = False            # a "retry" wait event is already booked
+    retry_streak = 0                 # consecutive dispatches with no arrival
     buffer: list[ClientUpdate] = []
     history: list[dict] = []
     version = 0                      # server aggregations committed so far
@@ -382,6 +396,41 @@ def run_federated_async(
                 if not nxt.launched:
                     launch(nxt, pool.acquire())
 
+    def book_retry(t: float, rejected: list[int]) -> None:
+        """Every sampled candidate is unavailable at ``t``: book one
+        deterministic virtual-clock wait/retry event instead of training
+        anyone.  The wait is the earliest trace on-window among the rejected
+        candidates when the trace rejected them, else the configured
+        ``retry_wait`` backoff (an on-window candidate that merely failed
+        its i.i.d. coin can pass on the very next attempt).  At most one
+        retry event is in flight at a time."""
+        nonlocal retry_pending, retry_streak
+        if retry_pending:
+            return
+        retry_streak += 1
+        if retry_streak > 1000:
+            raise RuntimeError(
+                "async runtime: 1000 consecutive dispatch attempts found no "
+                "available client — the availability trace/knobs leave the "
+                "fleet effectively unreachable")
+        waits: list[float] = []
+        if avail.cfg.trace:
+            coin_failed = False
+            for ci in rejected:
+                w = avail.next_on_time(ci, t) - t
+                if w > 0.0:
+                    waits.append(w)
+                else:
+                    coin_failed = True
+            if coin_failed or not waits:
+                waits.append(avail.cfg.retry_wait)
+        else:
+            waits.append(avail.cfg.retry_wait)
+        wait = min(waits)
+        retry_pending = True
+        timeline.record(t, "wait", until=t + wait, rejected=len(rejected))
+        heapq.heappush(events, (t + wait, next(seq), "retry", None, None))
+
     def dispatch(t: float, fragment_ok: bool) -> int:
         """Sample a cohort at the current version, book each member's
         completion on the virtual timeline, and launch its stacked training
@@ -392,30 +441,59 @@ def run_federated_async(
         exist, while capacity top-ups demand a full cohort's worth — filling
         spare capacity with fragment cohorts would inflate total client work
         (and retrace per cohort width) instead of overlapping it."""
-        nonlocal pending, last_cohort, inflight
+        nonlocal pending, last_cohort, inflight, retry_streak
         spec = sched.for_version(version)
         pool_size = n_clients - len(busy)
         if pool_size <= 0:
             return 0
-        n_pick = resolve_cohort_size(n_clients, run_cfg.sample_fraction,
-                                     run_cfg.cohort_size)
+        n_pick = cohort_target
         if pool_size < n_pick and not fragment_ok:
             return 0
         # O(cohort) selection at population scale: Floyd-sample candidates
-        # from range(n) minus the busy set, filter each through its *own*
-        # arrival draw, and top up until the cohort fills or the idle pool
-        # runs dry — the fleet is never enumerated.
+        # from range(n) minus the busy set — the fleet is never enumerated.
+        # Blind mode filters each candidate through its *own* arrival draw
+        # and tops up until the cohort fills or the idle pool runs dry;
+        # biased mode weights candidates by their *current* availability and
+        # draws the cohort in one weighted pass (docs/ASYNC.md).
         k_target = min(n_pick, pool_size)
         sampler = IncrementalSampler(rng, n_clients, busy)
         picked: list[int] = []
         rejected: list[int] = []
-        while len(picked) < k_target and sampler.remaining > 0:
-            for ci in sampler.draw(k_target - len(picked)):
-                (picked if avail.arrival_ok() else rejected).append(ci)
-        if not picked:
-            # Every candidate failed the arrival draw; rather than spinning
-            # the virtual clock, model "the server waits for the next one".
-            picked = rejected[:k_target]
+        if run_cfg.participation_sampling == "biased":
+            # Availability-biased selection: oversample a candidate pool,
+            # weight by current availability (trace window x stationary
+            # arrival rate), and take an Efraimidis–Spirakis weighted
+            # k-subset — off-window candidates are never picked, and each
+            # pick records its inclusion probability so the merge can
+            # inverse-probability debias.
+            pool_ids: list[int] = []
+            pool_w: list[float] = []
+            navail = 0
+            while navail < k_target and sampler.remaining > 0:
+                need = k_target - navail
+                ask = (need if not avail.cfg.trace else
+                       max(need, min(4 * k_target, sampler.remaining)))
+                for ci in sampler.draw(ask):
+                    w = avail.availability_weight(ci, t)
+                    pool_ids.append(ci)
+                    pool_w.append(w)
+                    if w > 0.0:
+                        navail += 1
+            if navail == 0:
+                book_retry(t, pool_ids)
+                return 0
+            picked = weighted_sample_without_replacement(
+                rng, pool_ids, pool_w, min(k_target, navail))
+        else:
+            while len(picked) < k_target and sampler.remaining > 0:
+                for ci in sampler.draw(k_target - len(picked)):
+                    (picked if avail.arrival_ok(ci, t) else rejected).append(ci)
+            if not picked:
+                # Every candidate failed its arrival draw: wait, never train
+                # provably-unavailable clients.
+                book_retry(t, rejected)
+                return 0
+        retry_streak = 0
         k = len(picked)
 
         datasets = [population.dataset(ci) for ci in picked]
@@ -431,13 +509,14 @@ def run_federated_async(
         # programs for *execution* only.  Otherwise a collapsed cohort's
         # whole-tree update sharing a buffer with plan updates would dodge
         # the per-group denominators (docs/HETEROGENEITY.md).
-        plan_raw = assigner.assign(spec, picked)
+        plan_raw = assigner.assign(spec, picked, boost=plan_boost)
         plan = resolve_plan(plan_raw, spec, partition.num_groups)
         up_bytes = full_bytes if spec.is_full else int(group_bytes[spec.group])
         step_flops = _step_flops(spec)
 
         # Per-member draw order (jitter, then drop) matches the pre-host-
         # parallel runtime exactly, so seeded availability streams replay.
+        biased = run_cfg.participation_sampling == "biased"
         members, end_t = [], t
         for i, ci in enumerate(picked):
             if plan_raw is None:
@@ -460,6 +539,7 @@ def run_federated_async(
                 loss=float("nan"), dispatched_t=t, completed_t=t + dur,
                 comp_flops=flops, comm_bytes=ub, groups=groups_i,
                 encoding=None if ccfg is None else ccfg.kind,
+                inclusion_prob=avail.inclusion_prob(ci) if biased else 1.0,
             )
             members.append((upd, "drop" if avail.drops() else "complete"))
             end_t = max(end_t, t + dur)
@@ -502,7 +582,7 @@ def run_federated_async(
         """Commit one server aggregation: merge the buffer, eval on the sync
         cadence, advance the schedule, let the controller adjust its knobs,
         top the in-flight cohorts back up."""
-        nonlocal params, version, max_inflight
+        nonlocal params, version, max_inflight, cohort_target, plan_boost
         spec = sched.for_version(version)
         params, info = policy.merge(params, buffer, version)
         buffer.clear()
@@ -539,10 +619,19 @@ def run_federated_async(
                 if (adj.group_override is not None
                         and 0 <= adj.group_override < partition.num_groups):
                     sched.override_group(version, adj.group_override)
+                if adj.cohort_size is not None:
+                    c_lo, c_hi = run_cfg.controller_cohort_bounds
+                    cohort_target = min(max(int(adj.cohort_size), c_lo),
+                                        c_hi, n_clients)
+                if adj.plan_boost is not None:
+                    plan_boost = min(max(int(adj.plan_boost), 0),
+                                     run_cfg.controller_plan_boost_max)
                 timeline.record(vclock, "control", version=version,
                                 max_inflight=max_inflight,
                                 buffer_k=policy.buffer_goal,
                                 group_override=adj.group_override,
+                                cohort_size=cohort_target,
+                                plan_boost=plan_boost,
                                 note=adj.note)
         if version < total:
             if max_inflight == 1:
@@ -564,13 +653,23 @@ def run_federated_async(
             if buffer and policy.should_merge(len(buffer), 0, last_cohort):
                 flush()
                 continue
-            if dispatch(vclock, True) == 0:
+            if dispatch(vclock, True) == 0 and not events:
+                # (a failed dispatch may have booked a "retry" wait event —
+                # that IS progress: the virtual clock advances to the next
+                # arrival window instead of training unavailable clients)
                 raise RuntimeError(
                     "async runtime stalled: no events in flight, nothing "
                     "dispatchable, and the buffer cannot merge")
             continue
         t, _, kind, upd, cohort = heapq.heappop(events)
         vclock = t
+        if kind == "retry":
+            # The booked wait elapsed: the server tries to fill its
+            # capacity again, now that an arrival window may have opened.
+            retry_pending = False
+            if version < total:
+                top_up(vclock, fragment_ok=True)
+            continue
         busy.discard(upd.client_id)
         resolve(cohort)
         if kind == "complete":
@@ -579,7 +678,9 @@ def run_federated_async(
             timeline.record(t, "complete", client=upd.client_id,
                             staleness=upd.staleness(version),
                             comm_bytes=upd.comm_bytes,
-                            comp_flops=upd.comp_flops)
+                            comp_flops=upd.comp_flops,
+                            inclusion_prob=upd.inclusion_prob,
+                            tier=upd.client_id % num_tiers)
         else:
             timeline.record(t, "drop", client=upd.client_id,
                             comp_flops=upd.comp_flops)

@@ -73,6 +73,13 @@ class ClientUpdate:
     # discounting below are value-level and never see codes — while
     # ``comm_bytes`` books the *encoded* size (docs/COMPRESSION.md).
     encoding: str | None = None
+    # Availability-biased cohort selection (docs/ASYNC.md): the client's
+    # stationary inclusion probability at dispatch.  The merge divides the
+    # sample-size weight by it (Horvitz–Thompson,
+    # ``core.aggregation.debias_weights``) so skewed arrivals leave the
+    # global objective unbiased; 1.0 — the blind sampler's value — is the
+    # exact identity, keeping uniform runs bit-for-bit.
+    inclusion_prob: float = 1.0
 
     def staleness(self, current_version: int) -> int:
         return max(current_version - self.version, 0)
@@ -120,8 +127,11 @@ class AggregationPolicy:
         Per group, staleness enters twice, following FedAsync's polynomial
         strategy generalised to buffers:
 
-        * **within** the buffer, each update's sample-size weight is scaled
-          by ``(1+s)^-a`` before averaging (staler contributions count less
+        * **within** the buffer, each update's sample-size weight — first
+          divided by its ``inclusion_prob`` (Horvitz–Thompson debiasing of
+          availability-biased cohorts, ``core.aggregation.debias_weights``;
+          exactly the identity at the default 1.0) — is scaled by
+          ``(1+s)^-a`` before averaging (staler contributions count less
           against fresher ones);
         * **against** the current model, the averaged subtree is mixed in
           with coefficient ``m = sum(w*scale)/sum(w)`` — the sample-weighted
@@ -166,6 +176,12 @@ class AggregationPolicy:
         for group in sorted(by_group, key=lambda g: (g >= 0, g)):
             contribs = by_group[group]
             w = np.array([u.weight for u, _ in contribs], dtype=np.float32)
+            # Inverse-inclusion-probability debiasing (docs/ASYNC.md): a
+            # no-op returning `w` itself when every prob is 1.0 (blind
+            # sampling / uniform availability — the bit-exact contract).
+            w = aggregation.debias_weights(
+                w, np.array([u.inclusion_prob for u, _ in contribs],
+                            dtype=np.float64))
             scale = np.array(
                 [self.staleness_scale(u.staleness(version))
                  for u, _ in contribs],

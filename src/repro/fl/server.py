@@ -94,6 +94,11 @@ class FLRunConfig:
     algo: AlgoConfig = AlgoConfig()
     sample_fraction: float = 1.0    # participation fraction per dispatch/round
     cohort_size: int = 0            # explicit clients per dispatch (0 = use fraction)
+    # Async cohort selection (docs/ASYNC.md): "blind" rejection-samples each
+    # candidate through its own arrival draw (the legacy path, bit-exact);
+    # "biased" weights candidates by current availability and records each
+    # pick's inclusion probability for inverse-probability debiased merges.
+    participation_sampling: str = "blind"   # "blind" | "biased" (async only)
     seed: int = 0
     eval_every: int = 1
     eval_batch: int = 256
@@ -133,6 +138,43 @@ class FLRunConfig:
     controller_buffer_bounds: tuple[int, int] = (1, 8)    # adaptive buffer_k lo/hi
     controller_mix_floor: float = 0.5  # min windowed discounted mixing coeff
     controller_max_repeats: int = 2    # consecutive layer-group repeats cap
+    # The two participation knobs (docs/CONTROL.md): a windowed
+    # effective-participation target the ParticipationController holds by
+    # moving the cohort size inside controller_cohort_bounds (0.0 = off),
+    # and the PlanAssignmentController's cap on extra layer groups added to
+    # every capacity tier's plan prefix (0 = off).
+    controller_participation_target: float = 0.0
+    controller_cohort_bounds: tuple[int, int] = (1, 64)
+    controller_plan_boost_max: int = 0
+
+    def __post_init__(self):
+        """Loud validation of the participation axis — a fraction of 0 used
+        to silently train 1 client per round via ``resolve_cohort_size``'s
+        ``max(1, ...)`` clamp."""
+        if not 0.0 < self.sample_fraction <= 1.0:
+            raise ValueError(
+                f"sample_fraction must be in (0, 1], got {self.sample_fraction}")
+        if self.cohort_size < 0:
+            raise ValueError(
+                f"cohort_size must be >= 0, got {self.cohort_size}")
+        if self.participation_sampling not in ("blind", "biased"):
+            raise ValueError(
+                f"unknown participation_sampling "
+                f"{self.participation_sampling!r}; expected 'blind' or "
+                f"'biased'")
+        if not 0.0 <= self.controller_participation_target <= 1.0:
+            raise ValueError(
+                f"controller_participation_target must be in [0, 1], got "
+                f"{self.controller_participation_target}")
+        lo, hi = self.controller_cohort_bounds
+        if not 1 <= lo <= hi:
+            raise ValueError(
+                f"controller_cohort_bounds must satisfy 1 <= lo <= hi, got "
+                f"{self.controller_cohort_bounds}")
+        if self.controller_plan_boost_max < 0:
+            raise ValueError(
+                f"controller_plan_boost_max must be >= 0, got "
+                f"{self.controller_plan_boost_max}")
 
     def make_state_store(self) -> ClientStateStore:
         """The per-run store for cross-round per-client state (MOON
@@ -182,6 +224,10 @@ def run_federated(
     if run_cfg.runtime != "sync":
         raise ValueError(
             f"unknown runtime {run_cfg.runtime!r}; expected one of {RUNTIMES}")
+    if run_cfg.participation_sampling != "blind":
+        raise ValueError(
+            "participation_sampling='biased' needs the arrival process — "
+            "use runtime='async'")
     if run_cfg.track_stepsizes and run_cfg.engine != "sequential":
         raise ValueError("track_stepsizes requires engine='sequential'")
     key = init_key if init_key is not None else jax.random.key(run_cfg.seed)

@@ -51,6 +51,20 @@ layer group, within ``--controller-inflight-bounds`` /
         --engine vmap --runtime async --participation 0.25 \
         --staleness-exp 0.5 --speed-spread 3.0 --controller adaptive
 
+``--trace diurnal --duty-cycle 0.25 0.9`` drives participation from
+deterministic per-client on/off windows instead of the i.i.d.
+``--unavailable`` coin; ``--participation-sampling biased`` then weights
+cohort selection by current availability and inverse-probability debiases
+the merge, and ``--controller-participation-target`` /
+``--controller-plan-boost-max`` close the loop on cohort size and
+capacity-tier plan depth (docs/ASYNC.md, docs/CONTROL.md):
+
+    python -m repro.launch.fedtrain --sim-clients 8 --rounds 12 \
+        --engine vmap --runtime async --participation 0.5 \
+        --trace diurnal --duty-cycle 0.25 0.9 --trace-period 2.0 \
+        --participation-sampling biased --controller adaptive \
+        --controller-participation-target 0.5
+
 ``--plan nested --capacity-tiers 0.3 0.6 1.0`` gives capacity-tiered clients
 *different layer subsets in the same round* (per-client layer plans,
 docs/HETEROGENEITY.md); each group is aggregated over only the clients that
@@ -193,6 +207,7 @@ def run_simulation(args) -> int:
                       staleness_exponent=args.staleness_exp,
                       sample_fraction=args.participation,
                       cohort_size=args.cohort_size,
+                      participation_sampling=args.participation_sampling,
                       state_store_entries=args.state_store_entries,
                       state_store_spill=args.state_store_spill,
                       max_inflight_cohorts=args.max_inflight,
@@ -204,6 +219,11 @@ def run_simulation(args) -> int:
                           args.controller_buffer_bounds),
                       controller_mix_floor=args.controller_mix_floor,
                       controller_max_repeats=args.controller_max_repeats,
+                      controller_participation_target=(
+                          args.controller_participation_target),
+                      controller_cohort_bounds=tuple(
+                          args.controller_cohort_bounds),
+                      controller_plan_boost_max=args.controller_plan_boost_max,
                       plan=args.plan,
                       capacity_tiers=tuple(args.capacity_tiers),
                       compression=args.compression,
@@ -213,7 +233,12 @@ def run_simulation(args) -> int:
                       availability=AvailabilityConfig(
                           speed_spread=args.speed_spread,
                           latency_jitter=args.latency_jitter,
-                          dropout_prob=args.dropout))
+                          dropout_prob=args.dropout,
+                          unavailable_prob=args.unavailable,
+                          trace=args.trace,
+                          trace_period=args.trace_period,
+                          duty_cycle=tuple(args.duty_cycle),
+                          trace_path=args.trace_path))
     t0 = time.time()
     res = run_federated(adapter, clients, eval_set,
                         sched.rounds()[: args.rounds], cfg, verbose=True)
@@ -284,6 +309,13 @@ def main(argv=None) -> int:
                          "the per-cohort barrier oracle")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="fraction of clients sampled per dispatch/round")
+    ap.add_argument("--participation-sampling", choices=["blind", "biased"],
+                    default="blind",
+                    help="async cohort selection: rejection-sample the "
+                         "arrival process blind (default), or weight "
+                         "candidates by current availability and debias the "
+                         "merge by inverse inclusion probability "
+                         "(docs/ASYNC.md)")
     ap.add_argument("--buffer-k", type=int, default=0,
                     help="FedBuff merge goal K (0 = cohort size)")
     ap.add_argument("--staleness-exp", type=float, default=0.0,
@@ -315,6 +347,19 @@ def main(argv=None) -> int:
     ap.add_argument("--controller-max-repeats", type=int, default=2,
                     help="max consecutive layer-group repeats the progress "
                          "controller may schedule")
+    ap.add_argument("--controller-participation-target", type=float,
+                    default=0.0,
+                    help="windowed effective-participation target the "
+                         "participation controller holds by re-sizing the "
+                         "cohort (0 = controller off; docs/CONTROL.md)")
+    ap.add_argument("--controller-cohort-bounds", type=int, nargs=2,
+                    default=[1, 64], metavar=("LO", "HI"),
+                    help="adaptive cohort-size bounds for the participation "
+                         "controller")
+    ap.add_argument("--controller-plan-boost-max", type=int, default=0,
+                    help="max extra layer groups the plan-assignment "
+                         "controller may grant stalled-tier clients "
+                         "(0 = controller off; needs --plan nested|random)")
     ap.add_argument("--plan", choices=["homogeneous", "nested", "random"],
                     default="homogeneous",
                     help="per-client layer plan for --sim-clients "
@@ -348,6 +393,21 @@ def main(argv=None) -> int:
                     help="per-dispatch multiplicative latency noise")
     ap.add_argument("--dropout", type=float, default=0.0,
                     help="per-dispatch probability a client update is lost")
+    ap.add_argument("--unavailable", type=float, default=0.0,
+                    help="per-dispatch probability a sampled client is "
+                         "offline (the i.i.d. arrival knob)")
+    ap.add_argument("--trace", choices=["", "diurnal", "file"], default="",
+                    help="trace-driven availability: deterministic per-client "
+                         "periodic on/off windows (diurnal) or an on-disk "
+                         "trace (file; see --trace-path)")
+    ap.add_argument("--trace-period", type=float, default=16.0,
+                    help="virtual seconds per on/off trace cycle")
+    ap.add_argument("--duty-cycle", type=float, nargs=2, default=[1.0, 1.0],
+                    metavar=("LO", "HI"),
+                    help="per-client on-fraction range for --trace diurnal")
+    ap.add_argument("--trace-path", default="",
+                    help="availability trace file (.npz or JSON with "
+                         "duty/phase arrays) for --trace file")
     args = ap.parse_args(argv)
 
     if args.sim_clients > 0 or args.population > 0:

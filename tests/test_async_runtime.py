@@ -589,7 +589,7 @@ def test_schedule_index_clamps_and_stales():
 def test_availability_degenerate_consumes_no_randomness():
     av = ClientAvailability(AvailabilityConfig(), 8)
     state = av._rng.bit_generator.state
-    assert av.available(list(range(8))) == list(range(8))
+    assert all(av.arrival_ok(ci, 0.0) for ci in range(8))
     assert av.jitter() == 1.0 and not av.drops()
     assert av._rng.bit_generator.state == state  # untouched stream
     np.testing.assert_array_equal(av.speeds, np.ones(8))
@@ -603,7 +603,8 @@ def test_availability_seeded_and_bounded():
     assert ((a.speeds >= 1 / 4.0) & (a.speeds <= 4.0)).all()
     assert [a.jitter() for _ in range(5)] == [b.jitter() for _ in range(5)]
     assert [a.drops() for _ in range(20)] == [b.drops() for _ in range(20)]
-    assert a.available(list(range(16))) == b.available(list(range(16)))
+    assert ([a.arrival_ok(ci, 0.0) for ci in range(16)]
+            == [b.arrival_ok(ci, 0.0) for ci in range(16)])
     for j in (a.jitter() for _ in range(10)):
         assert 1.0 <= j <= 1.5
 

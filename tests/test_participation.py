@@ -1,0 +1,536 @@
+"""The availability-trace participation axis (docs/ASYNC.md).
+
+Trace-driven on/off windows must be pure (no stream randomness),
+deterministic at population scale, and collapse bit-exactly onto the
+legacy i.i.d. arrival process in the degenerate config; biased cohort
+selection must never pick off-window clients and its merges must
+inverse-probability debias back to the uniform objective; the runtime
+must *wait* — never train — when every sampled candidate is unavailable
+(the ``picked = rejected[:k]`` regression); and the two participation
+controllers must move only their own knobs, within bounds.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.schedule import FedPartSchedule
+from repro.core.telemetry import TimelineWindow
+from repro.data import (VisionDatasetSpec, balanced_eval_set, build_clients,
+                        iid_partition, make_vision_dataset)
+from repro.fl import (AlgoConfig, AvailabilityConfig, FLRunConfig,
+                      resnet_task, run_federated)
+from repro.fl.population import (resolve_cohort_size,
+                                 weighted_sample_without_replacement)
+from repro.fl.runtime.clients import ClientAvailability
+from repro.fl.runtime.control import (ParticipationController,
+                                      PlanAssignmentController,
+                                      make_controller)
+from repro.core import aggregation
+
+
+# -- trace model units ------------------------------------------------------
+
+
+def test_trace_params_pure_and_population_scale():
+    """Diurnal duty/phase are pure functions of (seed, id): identical across
+    instances and fleet sizes, bounded by the configured range, and derived
+    without touching the per-dispatch stream."""
+    cfg = AvailabilityConfig(trace="diurnal", duty_cycle=(0.2, 0.8),
+                             trace_period=4.0, seed=11)
+    a = ClientAvailability(cfg, 8)
+    b = ClientAvailability(cfg, 10**9)
+    state = a._rng.bit_generator.state
+    for ci in (0, 5, 999_999_999):
+        duty, phase, period = a._trace_params(ci)
+        assert (duty, phase, period) == b._trace_params(ci)
+        assert 0.2 <= duty <= 0.8 and 0.0 <= phase < 1.0 and period == 4.0
+    assert a._rng.bit_generator.state == state  # pure: stream untouched
+
+
+def test_trace_on_and_next_on_time_math(tmp_path):
+    """Known duty/phase via a file trace: the on-window is
+    ``frac(t/period + phase) < duty`` and next_on_time lands exactly at the
+    next cycle start."""
+    p = tmp_path / "trace.json"
+    p.write_text(json.dumps({"period": 2.0, "duty": [0.25], "phase": [0.5]}))
+    av = ClientAvailability(
+        AvailabilityConfig(trace="file", trace_path=str(p)), 4)
+    # frac(t/2 + 0.5) < 0.25  <=>  t in [1.0, 1.5) mod 2
+    assert not av.trace_on(0, 0.0)
+    assert av.trace_on(0, 1.0) and av.trace_on(0, 1.49)
+    assert not av.trace_on(0, 1.5)
+    assert av.trace_on(0, 3.2)
+    assert av.next_on_time(0, 0.0) == pytest.approx(1.0)
+    assert av.next_on_time(0, 1.2) == 1.2          # already on
+    assert av.next_on_time(0, 1.6) == pytest.approx(3.0)
+    # tiling: every client maps to entry i % len(duty)
+    assert av._trace_params(3) == av._trace_params(0)
+
+
+def test_trace_file_loader_npz_and_validation(tmp_path):
+    good = tmp_path / "t.npz"
+    np.savez(good, duty=[0.5, 1.0], phase=[0.0, 0.25], period=8.0)
+    av = ClientAvailability(
+        AvailabilityConfig(trace="file", trace_path=str(good)), 4)
+    assert av._trace_params(0) == (0.5, 0.0, 8.0)
+    assert av._trace_params(3) == (1.0, 0.25, 8.0)   # 3 % 2 == 1
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"duty": [0.5, 1.5], "phase": [0.0, 0.0]}))
+    with pytest.raises(ValueError, match="duty"):
+        ClientAvailability(
+            AvailabilityConfig(trace="file", trace_path=str(bad)), 4
+        )._trace_params(0)
+    ragged = tmp_path / "ragged.json"
+    ragged.write_text(json.dumps({"duty": [0.5], "phase": [0.0, 0.1]}))
+    with pytest.raises(ValueError, match="equal"):
+        ClientAvailability(
+            AvailabilityConfig(trace="file", trace_path=str(ragged)), 4
+        )._trace_params(0)
+
+
+def test_trace_config_validation():
+    with pytest.raises(ValueError, match="unknown trace"):
+        AvailabilityConfig(trace="weekly")
+    with pytest.raises(ValueError, match="duty_cycle"):
+        AvailabilityConfig(duty_cycle=(0.0, 0.5))
+    with pytest.raises(ValueError, match="duty_cycle"):
+        AvailabilityConfig(duty_cycle=(0.8, 0.2))
+    with pytest.raises(ValueError, match="trace_period"):
+        AvailabilityConfig(trace="diurnal", trace_period=0.0)
+    with pytest.raises(ValueError, match="trace_path"):
+        AvailabilityConfig(trace="file")
+    with pytest.raises(ValueError, match="retry_wait"):
+        AvailabilityConfig(retry_wait=0.0)
+    assert not AvailabilityConfig(trace="diurnal").is_degenerate
+    with pytest.raises(ValueError, match="client_id"):
+        ClientAvailability(
+            AvailabilityConfig(trace="diurnal"), 4).arrival_ok()
+
+
+def test_trace_degenerate_duty_matches_iid_stream_bitwise():
+    """duty_cycle=(1, 1) is the degenerate trace: always on, and the
+    per-dispatch arrival stream replays bit-for-bit against no trace."""
+    plain = ClientAvailability(
+        AvailabilityConfig(unavailable_prob=0.4, seed=9), 16)
+    traced = ClientAvailability(
+        AvailabilityConfig(unavailable_prob=0.4, seed=9, trace="diurnal",
+                           duty_cycle=(1.0, 1.0), trace_period=2.0), 16)
+    assert all(traced.trace_on(ci, t)
+               for ci in range(16) for t in (0.0, 0.7, 123.4))
+    draws_p = [plain.arrival_ok(ci, 0.3) for ci in range(16)] * 4
+    draws_t = [traced.arrival_ok(ci, 0.3) for ci in range(16)] * 4
+    assert draws_p == draws_t
+    assert plain._rng.bit_generator.state == traced._rng.bit_generator.state
+
+
+def test_trace_inclusion_prob_and_availability_weight():
+    av = ClientAvailability(
+        AvailabilityConfig(trace="diurnal", duty_cycle=(0.2, 0.8),
+                           unavailable_prob=0.25, seed=3), 8)
+    for ci in range(8):
+        duty, _, _ = av._trace_params(ci)
+        assert av.inclusion_prob(ci) == duty
+        on = av.trace_on(ci, 1.3)
+        assert av.availability_weight(ci, 1.3) == (
+            0.75 if on else 0.0)
+    plain = ClientAvailability(AvailabilityConfig(unavailable_prob=0.25), 8)
+    assert plain.inclusion_prob(5) == 1.0
+    assert plain.availability_weight(5, 0.0) == 0.75
+
+
+# -- weighted sampling + debiased aggregation -------------------------------
+
+
+def test_participation_weighted_sampler_units():
+    rng = np.random.default_rng(0)
+    ids = [10, 20, 30, 40]
+    w = np.array([1.0, 0.0, 2.0, 0.0])
+    picks = weighted_sample_without_replacement(rng, ids, w, 2)
+    assert sorted(picks) == [10, 30]         # zero-weight never picked
+    assert weighted_sample_without_replacement(rng, ids, w, 0) == []
+    with pytest.raises(ValueError, match="positive-weight"):
+        weighted_sample_without_replacement(rng, ids, w, 3)
+    with pytest.raises(ValueError, match=">= 0"):
+        weighted_sample_without_replacement(
+            rng, ids, np.array([1.0, -0.1, 1.0, 1.0]), 1)
+    with pytest.raises(ValueError, match="one weight per id"):
+        weighted_sample_without_replacement(rng, ids, np.ones(3), 1)
+    a = weighted_sample_without_replacement(
+        np.random.default_rng(7), list(range(100)), np.ones(100), 10)
+    b = weighted_sample_without_replacement(
+        np.random.default_rng(7), list(range(100)), np.ones(100), 10)
+    assert a == b and len(set(a)) == 10      # seeded + without replacement
+
+
+def test_participation_debias_weights_unit():
+    w = np.array([2.0, 4.0])
+    assert aggregation.debias_weights(w, np.array([1.0, 1.0])) is w
+    np.testing.assert_allclose(
+        aggregation.debias_weights(w, np.array([0.5, 1.0])), [4.0, 4.0])
+    with pytest.raises(ValueError, match="inclusion probs"):
+        aggregation.debias_weights(w, np.ones(3))
+    with pytest.raises(ValueError, match="inclusion"):
+        aggregation.debias_weights(w, np.array([0.0, 1.0]))
+    with pytest.raises(ValueError, match="inclusion"):
+        aggregation.debias_weights(w, np.array([0.5, 1.5]))
+
+
+# -- config validation ------------------------------------------------------
+
+
+def test_participation_run_config_validation():
+    with pytest.raises(ValueError, match="sample_fraction"):
+        FLRunConfig(sample_fraction=0.0)
+    with pytest.raises(ValueError, match="sample_fraction"):
+        FLRunConfig(sample_fraction=-0.5)
+    with pytest.raises(ValueError, match="sample_fraction"):
+        FLRunConfig(sample_fraction=1.5)
+    with pytest.raises(ValueError, match="cohort_size"):
+        FLRunConfig(cohort_size=-1)
+    with pytest.raises(ValueError, match="participation_sampling"):
+        FLRunConfig(participation_sampling="greedy")
+    with pytest.raises(ValueError, match="controller_participation_target"):
+        FLRunConfig(controller_participation_target=1.5)
+    with pytest.raises(ValueError, match="controller_cohort_bounds"):
+        FLRunConfig(controller_cohort_bounds=(0, 4))
+    with pytest.raises(ValueError, match="controller_cohort_bounds"):
+        FLRunConfig(controller_cohort_bounds=(5, 4))
+    with pytest.raises(ValueError, match="controller_plan_boost_max"):
+        FLRunConfig(controller_plan_boost_max=-1)
+
+
+def test_participation_resolve_cohort_size_edges():
+    assert resolve_cohort_size(10, 0.5) == 5
+    assert resolve_cohort_size(10, 0.01) == 1          # floor of 1
+    assert resolve_cohort_size(10, 1.0, cohort_size=64) == 10   # pop clamp
+    assert resolve_cohort_size(10**9, 1.0, cohort_size=8) == 8
+    with pytest.raises(ValueError, match="cohort_size"):
+        resolve_cohort_size(10, 1.0, cohort_size=-1)
+
+
+# -- controller units -------------------------------------------------------
+
+
+def _window(events, t_end=1.0):
+    return TimelineWindow(t_start=0.0, t_end=t_end, events=events)
+
+
+def test_participation_controller_moves_cohort_within_bounds():
+    ctl = ParticipationController(target=0.5, bounds=(1, 8), current=4,
+                                  num_clients=8)
+    # nothing delivered: silent
+    assert not ctl.observe(_window([]))
+    low = _window([{"t": 0.5, "kind": "complete", "client": 0}])
+    adj = ctl.observe(low)                   # ep = 1/8 << target: grow
+    assert adj.cohort_size == 5 and ctl.current == 5
+    assert adj.max_inflight is None and adj.plan_boost is None
+    high = _window([{"t": 0.5, "kind": "complete", "client": c}
+                    for c in range(8)])
+    adj = ctl.observe(high)                  # ep = 1.0 >> target: shrink
+    assert adj.cohort_size == 4 and ctl.current == 4
+    ok = _window([{"t": 0.5, "kind": "complete", "client": c}
+                  for c in range(4)])
+    assert not ctl.observe(ok)               # ep = 0.5 == target: deadband
+    for _ in range(20):
+        ctl.observe(low)
+    assert ctl.current == 8                  # clamped at hi
+
+
+def test_participation_controller_debiased_tracks_ht_estimate():
+    ctl = ParticipationController(target=0.5, bounds=(1, 8), current=4,
+                                  num_clients=8, debiased=True)
+    # one delivered client at inclusion_prob 0.25 counts as 4 clients:
+    # ep_HT = 4/8 = target, so the debiased controller holds still where
+    # the plain one would grow.
+    w = _window([{"t": 0.5, "kind": "complete", "client": 0,
+                  "inclusion_prob": 0.25}])
+    assert not ctl.observe(w)
+    plain = ParticipationController(target=0.5, bounds=(1, 8), current=4,
+                                    num_clients=8, debiased=False)
+    assert plain.observe(w).cohort_size == 5
+
+
+def test_participation_controller_validation():
+    with pytest.raises(ValueError, match="bounds"):
+        ParticipationController(target=0.5, bounds=(0, 4), current=1,
+                                num_clients=8)
+    with pytest.raises(ValueError, match="target"):
+        ParticipationController(target=0.0, bounds=(1, 4), current=1,
+                                num_clients=8)
+    with pytest.raises(ValueError, match="num_clients"):
+        ParticipationController(target=0.5, bounds=(1, 4), current=1,
+                                num_clients=0)
+    ctl = ParticipationController(target=0.5, bounds=(1, 4), current=99,
+                                  num_clients=8)
+    assert ctl.current == 4                  # start clamped into bounds
+
+
+def _stalled_window(group, n=2, loss=1.0):
+    evs = []
+    for i in range(n):
+        evs.append({"t": 0.2 + i * 0.2, "kind": "merge", "version": i,
+                    "group": group, "loss": loss})
+    return _window(evs)
+
+
+def test_plan_assignment_controller_boosts_stalled_deep_groups():
+    ctl = PlanAssignmentController(num_tiers=2, min_prefix=2, max_boost=2)
+    # deep group 3 merged twice with zero progress: boost grows
+    adj = ctl.observe(_stalled_window(3))
+    assert adj.plan_boost == 1 and ctl.current == 1
+    assert adj.cohort_size is None and adj.group_override is None
+    adj = ctl.observe(_stalled_window(3))
+    assert adj.plan_boost == 2
+    assert not ctl.observe(_stalled_window(3))       # clamped at max_boost
+    # shallow stall (group < min_prefix) is not coverage-limited: no grow,
+    # but it is still *stalled*, so no decay either
+    assert not ctl.observe(_stalled_window(1))
+    # recovered window (improving losses): boost decays
+    improving = _window([
+        {"t": 0.2, "kind": "merge", "version": 0, "group": 3, "loss": 2.0},
+        {"t": 0.4, "kind": "merge", "version": 1, "group": 3, "loss": 1.0},
+    ])
+    adj = ctl.observe(improving)
+    assert adj.plan_boost == 1 and ctl.current == 1
+
+
+def test_plan_assignment_controller_validation():
+    with pytest.raises(ValueError, match="num_tiers"):
+        PlanAssignmentController(num_tiers=0, min_prefix=1, max_boost=1)
+    with pytest.raises(ValueError, match="max_boost"):
+        PlanAssignmentController(num_tiers=1, min_prefix=1, max_boost=-1)
+
+
+def test_make_controller_participation_knobs():
+    base = dict(local_epochs=1, controller="adaptive")
+    ctl = make_controller(FLRunConfig(**base), num_clients=8, num_groups=6,
+                          cohort_size=4)
+    names = [type(p).__name__ for p in ctl.parts]
+    assert "ParticipationController" not in names
+    assert "PlanAssignmentController" not in names
+    ctl = make_controller(
+        FLRunConfig(**base, controller_participation_target=0.5,
+                    controller_plan_boost_max=2, plan="nested",
+                    capacity_tiers=(0.3, 1.0)),
+        num_clients=8, num_groups=6, cohort_size=4)
+    names = [type(p).__name__ for p in ctl.parts]
+    assert "ParticipationController" in names
+    assert "PlanAssignmentController" in names
+    # homogeneous plan never gets the assignment controller
+    ctl = make_controller(
+        FLRunConfig(**base, controller_plan_boost_max=2),
+        num_clients=8, num_groups=6, cohort_size=4)
+    assert "PlanAssignmentController" not in [
+        type(p).__name__ for p in ctl.parts]
+    with pytest.raises(ValueError, match="num_clients"):
+        make_controller(
+            FLRunConfig(**base, controller_participation_target=0.5),
+            num_groups=6)
+
+
+# -- telemetry reducers -----------------------------------------------------
+
+
+def test_participation_telemetry_reducers():
+    w = _window([
+        {"t": 0.2, "kind": "complete", "client": 0, "inclusion_prob": 0.25,
+         "tier": 0},
+        {"t": 0.4, "kind": "complete", "client": 1, "tier": 1},
+        {"t": 0.6, "kind": "complete", "client": 0, "inclusion_prob": 0.25,
+         "tier": 0},
+        {"t": 0.8, "kind": "drop", "client": 2},       # drops never count
+    ])
+    assert w.effective_participation(8) == 2 / 8
+    assert w.effective_participation(8, inverse_probability=True) == (
+        (4.0 + 1.0) / 8)
+    # HT estimate clips at full coverage and floors tiny probs at 1/n
+    tiny = _window([{"t": 0.1, "kind": "complete", "client": 0,
+                     "inclusion_prob": 1e-9}])
+    assert tiny.effective_participation(4, inverse_probability=True) == 1.0
+    assert w.inclusion_moments() == (pytest.approx(0.5), 0.25)
+    assert _window([]).inclusion_moments() == (1.0, 1.0)
+    assert w.tier_participation(2) == [2 / 3, 1 / 3]
+    assert _window([]).tier_participation(2) == [0.0, 0.0]
+    # tier falls back to client % num_tiers when not recorded
+    fallback = _window([{"t": 0.1, "kind": "complete", "client": 3}])
+    assert fallback.tier_participation(2) == [0.0, 1.0]
+
+
+# -- end-to-end: the participation axis through the async runtime -----------
+
+SPEC = VisionDatasetSpec(num_classes=4, image_size=8)
+ROUNDS = FedPartSchedule(num_groups=6, warmup_rounds=1, rounds_per_layer=1,
+                         cycles=1).rounds()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    X, y = make_vision_dataset(SPEC, 6 * 24, seed=0)
+    Xe, ye = make_vision_dataset(SPEC, 64, seed=9)
+    eval_set = balanced_eval_set(Xe, ye, per_class=8)
+    clients = build_clients(X, y, iid_partition(len(y), 6, seed=0))
+    return resnet_task("resnet4", num_classes=4), clients, eval_set
+
+
+def _run(setup, rounds, availability, **kw):
+    adapter, clients, eval_set = setup
+    cfg = FLRunConfig(local_epochs=1, batch_size=16, lr=2e-3, adam_eps=1e-3,
+                      algo=AlgoConfig(name="fedavg"), engine="sequential",
+                      runtime="async", async_policy="fedbuff",
+                      availability=availability, **kw)
+    return run_federated(adapter, clients, eval_set, rounds, cfg)
+
+
+def _assert_bitwise(a, b):
+    for la, lb in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    assert [h["loss"] for h in a.history] == [h["loss"] for h in b.history]
+
+
+def test_trace_degenerate_run_bitwise_matches_no_trace(setup):
+    """The pinned degeneracy contract: duty (1, 1) end-to-end equals the
+    i.i.d.-only runtime bit-for-bit (params, losses, timeline)."""
+    kw = dict(sample_fraction=0.67, buffer_k=1, staleness_exponent=0.5)
+    base = _run(setup, ROUNDS[:3],
+                AvailabilityConfig(unavailable_prob=0.3, seed=3), **kw)
+    deg = _run(setup, ROUNDS[:3],
+               AvailabilityConfig(unavailable_prob=0.3, seed=3,
+                                  trace="diurnal", duty_cycle=(1.0, 1.0),
+                                  trace_period=2.0), **kw)
+    _assert_bitwise(base, deg)
+    assert base.timeline.events == deg.timeline.events
+
+
+def test_biased_uniform_availability_keeps_uniform_weights(setup):
+    """Biased selection over a uniformly-available fleet records
+    inclusion_prob == 1.0 on every delivery, so the merge's debias step is
+    the exact identity (``debias_weights`` returns its input unchanged) and
+    the objective stays today's uniform average."""
+    kw = dict(sample_fraction=0.67, buffer_k=1, staleness_exponent=0.5,
+              participation_sampling="biased")
+    for av in (AvailabilityConfig(seed=3),
+               AvailabilityConfig(seed=3, trace="diurnal",
+                                  duty_cycle=(1.0, 1.0), trace_period=2.0)):
+        res = _run(setup, ROUNDS[:3], av, **kw)
+        completes = res.timeline.of_kind("complete")
+        assert completes
+        assert all(e["inclusion_prob"] == 1.0 for e in completes)
+
+
+SKEWED = AvailabilityConfig(trace="diurnal", trace_period=0.05,
+                            duty_cycle=(0.15, 0.9), unavailable_prob=0.4,
+                            speed_spread=2.0, seed=5)
+
+
+def test_trace_unavailable_clients_never_train(setup, tmp_path):
+    """The ``picked = rejected[:k]`` regression: with every client off at
+    t=0 the runtime books a wait and trains nobody until a window opens."""
+    p = tmp_path / "trace.json"
+    p.write_text(json.dumps({"period": 2.0, "duty": [0.25], "phase": [0.5]}))
+    av = AvailabilityConfig(trace="file", trace_path=str(p))
+    res = _run(setup, ROUNDS[:3], av, sample_fraction=0.5, buffer_k=1,
+               staleness_exponent=0.5)
+    tl = res.timeline
+    waits = tl.of_kind("wait")
+    assert waits and waits[0]["t"] == 0.0
+    assert waits[0]["until"] == pytest.approx(1.0)   # next on-window
+    model = ClientAvailability(av, 6)
+    dispatches = tl.of_kind("dispatch")
+    assert dispatches and dispatches[0]["t"] >= 1.0
+    for e in dispatches:
+        for ci in e["clients"]:
+            assert model.trace_on(ci, e["t"])        # only on-window clients
+    assert len(tl.of_kind("merge")) == 3             # still completes
+
+
+@pytest.mark.parametrize("mode", ["blind", "biased"])
+def test_trace_skewed_run_only_trains_on_window_clients(setup, mode):
+    res = _run(setup, ROUNDS[:4], SKEWED, sample_fraction=0.5, buffer_k=2,
+               staleness_exponent=0.5, participation_sampling=mode)
+    model = ClientAvailability(SKEWED, 6)
+    for e in res.timeline.of_kind("dispatch"):
+        for ci in e["clients"]:
+            assert model.trace_on(ci, e["t"])
+    if mode == "biased":
+        probs = {e["inclusion_prob"]
+                 for e in res.timeline.of_kind("complete")}
+        assert probs and all(0.15 <= p <= 0.9 for p in probs)
+
+
+def test_iid_heavy_unavailability_retries_and_completes(setup):
+    """No trace, brutal i.i.d. arrival odds: empty draws book retry_wait
+    backoffs (never training rejected clients) and the run still finishes."""
+    av = AvailabilityConfig(unavailable_prob=0.85, seed=2, retry_wait=0.25)
+    res = _run(setup, ROUNDS[:3], av, sample_fraction=0.5, buffer_k=1,
+               staleness_exponent=0.5)
+    tl = res.timeline
+    assert len(tl.of_kind("merge")) == 3
+    for w in tl.of_kind("wait"):
+        assert w["until"] == pytest.approx(w["t"] + 0.25)
+
+
+@pytest.mark.slow
+def test_trace_biased_run_is_engine_independent(setup):
+    """The virtual event sequence of a skewed-trace biased run is an
+    engine-invariant: vmap and the sequential oracle dispatch the same
+    clients at the same virtual times."""
+    kw = dict(sample_fraction=0.5, buffer_k=2, staleness_exponent=0.5,
+              participation_sampling="biased")
+    adapter, clients, eval_set = setup
+    runs = {}
+    for engine in ("sequential", "vmap"):
+        cfg = FLRunConfig(local_epochs=1, batch_size=16, lr=2e-3,
+                          adam_eps=1e-3, algo=AlgoConfig(name="fedavg"),
+                          engine=engine, runtime="async",
+                          async_policy="fedbuff", availability=SKEWED, **kw)
+        runs[engine] = run_federated(adapter, clients, eval_set,
+                                     ROUNDS[:4], cfg)
+    ev_a = [(e["t"], e["clients"])
+            for e in runs["sequential"].timeline.of_kind("dispatch")]
+    ev_b = [(e["t"], e["clients"])
+            for e in runs["vmap"].timeline.of_kind("dispatch")]
+    assert ev_a == ev_b
+    np.testing.assert_allclose(
+        [h["loss"] for h in runs["sequential"].history],
+        [h["loss"] for h in runs["vmap"].history], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_trace_biased_debiased_beats_blind_time_to_accuracy(setup):
+    """The payoff claim: on a skewed trace, availability-biased cohorts with
+    debiased merges reach the end of the same schedule in less virtual time
+    than blind rejection sampling (clipped time-to-accuracy, deterministic
+    under the pinned seed)."""
+    kw = dict(sample_fraction=0.5, buffer_k=2, staleness_exponent=0.5)
+    tta = {}
+    for mode in ("blind", "biased"):
+        res = _run(setup, ROUNDS[:6], SKEWED,
+                   participation_sampling=mode, **kw)
+        tl = res.timeline
+        tta[mode] = min(tl.time_to_accuracy(0.3), tl.total_seconds)
+    assert tta["biased"] < tta["blind"]
+
+
+def test_participation_controller_in_the_loop(setup):
+    """End-to-end adaptive run: control events record the cohort/plan knobs
+    and the cohort target stays inside the configured bounds."""
+    res = _run(setup, ROUNDS[:4], SKEWED, sample_fraction=0.34, buffer_k=1,
+               staleness_exponent=0.5, participation_sampling="biased",
+               controller="adaptive", controller_participation_target=0.6,
+               controller_cohort_bounds=(1, 4), controller_window=2)
+    controls = res.timeline.of_kind("control")
+    assert controls
+    for e in controls:
+        assert 1 <= e["cohort_size"] <= 4
+        assert e["plan_boost"] == 0          # no plan controller configured
+    assert len(res.timeline.of_kind("merge")) == 4
+
+
+def test_sync_runtime_rejects_biased_sampling(setup):
+    adapter, clients, eval_set = setup
+    cfg = FLRunConfig(participation_sampling="biased")
+    with pytest.raises(ValueError, match="async"):
+        run_federated(adapter, clients, eval_set, ROUNDS[:1], cfg)

@@ -316,7 +316,7 @@ def test_availability_degenerate_consumes_no_randomness():
     state = av._rng.bit_generator.state
     assert av.speed(123_456) == 1.0
     assert av.arrival_ok() is True
-    assert av.available([1, 2, 3]) == [1, 2, 3]
+    assert av.arrival_ok(123_456, t=7.5) is True
     assert av.jitter() == 1.0 and av.drops() is False
     assert av._rng.bit_generator.state == state
 
